@@ -1,0 +1,32 @@
+//! Ablation benches: bucket-count frontier (the design space behind the
+//! paper's k = 4), multi-hop scaling (§IV-C3), and a Fig. 2 snapshot.
+
+use repro::benchutil::bench;
+use repro::experiments::{ablate, fig2, fig4, layers, multihop};
+use repro::hw::Tech;
+use repro::workload::TrafficModel;
+
+fn main() {
+    let tech = Tech::default();
+    let model = TrafficModel::default();
+
+    // bucket-count frontier
+    let pts = ablate::run(&[2, 3, 4, 5, 6, 8, 9], &model, 4096, 0xC0FFEE, &tech);
+    println!("{}", ablate::render(&pts));
+
+    // multi-hop scaling
+    let hops = multihop::run(&[1, 2, 4, 8, 16], &model, 1024, 0xC0FFEE, &tech);
+    println!("{}", multihop::render(&hops));
+
+    // layer-shape sweep (paper future work §IV-C4)
+    let rows = layers::run(&layers::default_shapes(), 2048, 0xC0FFEE, &tech);
+    println!("{}", layers::render(&rows));
+
+    // Fig. 2 snapshot + Fig. 4 waveforms (cheap, regenerate for the record)
+    println!("{}", fig2::run(&model, 0xC0FFEE).render());
+    println!("{}", fig4::render(&fig4::run(25, 0xC0FFEE)));
+
+    bench("ablate-k sweep (7 k-values, 1024 packets)", 1, 5, || {
+        ablate::run(&[2, 3, 4, 5, 6, 8, 9], &model, 1024, 7, &tech)
+    });
+}

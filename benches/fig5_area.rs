@@ -1,0 +1,42 @@
+//! Bench + regeneration of **Fig. 5**: area breakdown of the four sorting
+//! unit designs at kernel sizes 25 and 49 (plus a size sweep), and the
+//! elaboration throughput.
+
+use repro::area::fig5_rows;
+use repro::benchutil::bench;
+use repro::experiments::fig5;
+use repro::hw::Tech;
+
+fn main() {
+    let tech = Tech::default();
+    let f = fig5::run(&[25, 49], &tech);
+    println!("{}", f.render());
+    println!("paper: APP-PSU 2193 um^2 (K=25), 6928 um^2 (K=49); -35.4% vs ACC @25");
+    println!(
+        "ours:  APP-PSU {:.0} um^2 (K=25), {:.0} um^2 (K=49); -{:.1}% vs ACC @25\n",
+        f.row(25, "APP-PSU").total_um2,
+        f.row(49, "APP-PSU").total_um2,
+        f.app_vs_acc_reduction_pct(25)
+    );
+
+    // extension: kernel-size sweep (the scaling law behind Fig. 5)
+    println!("kernel-size sweep (total um^2):");
+    println!("{:>5} {:>10} {:>10} {:>10} {:>10}", "K", "APP", "ACC", "Bitonic", "CSN");
+    for k in [9usize, 16, 25, 36, 49, 64, 81] {
+        let rows = fig5_rows(k, &tech);
+        let get = |d: &str| rows.iter().find(|r| r.design == d).unwrap().total_um2;
+        println!(
+            "{:>5} {:>10.0} {:>10.0} {:>10.0} {:>10.0}",
+            k,
+            get("APP-PSU"),
+            get("ACC-PSU"),
+            get("Bitonic"),
+            get("CSN")
+        );
+    }
+    println!();
+
+    bench("fig5 full elaboration (4 designs x 2 sizes)", 2, 20, || {
+        fig5::run(&[25, 49], &tech)
+    });
+}

@@ -1,0 +1,24 @@
+//! Bench + regeneration of **Fig. 6**, **Fig. 7** and **§IV-B4**: the
+//! DNN-workload power experiment on the 16-PE LeNet platform with 100
+//! convolution test vectors (the paper's count), and its runtime cost.
+
+use repro::benchutil::bench;
+use repro::experiments::fig67;
+use repro::hw::Tech;
+
+fn main() {
+    let tech = Tech::default();
+
+    let f = fig67::run(100, 4, 0xC0FFEE, &tech);
+    println!("{}", f.render(&tech));
+    println!("paper Fig. 7: ACC BT -20.42% power -18.27% | APP BT -19.50% power -16.48%");
+    println!("paper §IV-B4: PE-level ACC -4.98% APP -4.58%; overhead 2.28 vs 1.43 mW (-37.3%)\n");
+
+    let m = bench("platform run (1 vector, 3 configs)", 1, 10, || {
+        fig67::run(1, 4, 7, &tech)
+    });
+    println!(
+        "  -> {:.1} images/s through the full simulated platform (x3 configs)\n",
+        m.per_second(3)
+    );
+}

@@ -1,0 +1,73 @@
+//! Hot-path microbenchmarks (§Perf in EXPERIMENTS.md): the per-packet
+//! sort→frame→count pipeline that every experiment leans on, plus the
+//! PJRT-dispatched XLA twin for comparison when artifacts are present.
+
+use repro::benchutil::{bench, black_box};
+use repro::noc::{Link, Packet};
+use repro::psu::{AccPsu, AppPsu, BitonicSorter, BucketMap, CsnSorter, SorterUnit};
+use repro::workload::Rng;
+use repro::PACKET_BYTES;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let packets: Vec<Vec<u8>> = (0..1024)
+        .map(|_| (0..PACKET_BYTES).map(|_| rng.next_u8()).collect())
+        .collect();
+
+    // sorting units on the 64-byte packet path
+    for (name, sorter) in [
+        ("ACC-PSU sort_indices (64B x 1024)", Box::new(AccPsu::new(PACKET_BYTES)) as Box<dyn SorterUnit>),
+        ("APP-PSU sort_indices (64B x 1024)", Box::new(AppPsu::new(PACKET_BYTES, BucketMap::paper_k4()))),
+        ("Bitonic sort_indices (64B x 1024)", Box::new(BitonicSorter::new(PACKET_BYTES))),
+        ("CSN sort_indices     (64B x 1024)", Box::new(CsnSorter::new(PACKET_BYTES))),
+    ] {
+        let m = bench(name, 2, 20, || {
+            let mut acc = 0u32;
+            for p in &packets {
+                acc = acc.wrapping_add(sorter.sort_indices(p)[0] as u32);
+            }
+            acc
+        });
+        println!("  -> {:.2} Mpackets/s", m.per_second(1024) / 1e6);
+    }
+
+    // full per-packet pipeline: sort -> reorder -> frame -> count
+    let psu = AppPsu::new(PACKET_BYTES, BucketMap::paper_k4());
+    let m = bench("APP pipeline sort+reorder+frame+BT (x1024)", 2, 20, || {
+        let mut link = Link::new("b");
+        for p in &packets {
+            let sorted = psu.reorder(p);
+            link.send_transfer(&Packet::standard(&sorted));
+        }
+        link.total_bt()
+    });
+    println!("  -> {:.2} Mpackets/s full pipeline", m.per_second(1024) / 1e6);
+
+    // BT counting alone
+    let framed: Vec<Packet> = packets.iter().map(|p| Packet::standard(p)).collect();
+    let m = bench("internal_bt only (x1024)", 2, 50, || {
+        framed.iter().map(|p| black_box(p).internal_bt()).sum::<u64>()
+    });
+    println!("  -> {:.2} Mpackets/s BT counting", m.per_second(1024) / 1e6);
+
+    // XLA twin through PJRT, when artifacts are present
+    if std::path::Path::new("artifacts/psu_sort.hlo.txt").exists() {
+        use repro::runtime::{Runtime, BT_BATCH, PACKET_ELEMS};
+        let rt = Runtime::load("artifacts").expect("artifacts");
+        let xs: Vec<[u8; PACKET_ELEMS]> = packets
+            .iter()
+            .take(BT_BATCH)
+            .map(|p| {
+                let mut a = [0u8; PACKET_ELEMS];
+                a.copy_from_slice(p);
+                a
+            })
+            .collect();
+        let m = bench("XLA psu_sort via PJRT (256-packet batch)", 2, 10, || {
+            rt.psu_sort(&xs).unwrap()
+        });
+        println!("  -> {:.2} Mpackets/s via XLA", m.per_second(BT_BATCH as u64) / 1e6);
+    } else {
+        println!("(artifacts/ missing: skipping PJRT hot-path bench)");
+    }
+}

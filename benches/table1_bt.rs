@@ -1,0 +1,36 @@
+//! Bench + regeneration of **Table I**: BT per 128-bit flit under the four
+//! ordering strategies, at the paper's full scale (100 000 packets), plus
+//! throughput of the underlying hot loop.
+
+use repro::benchutil::bench;
+use repro::experiments::table1;
+use repro::workload::{OrderStrategy, TrafficModel};
+
+fn main() {
+    let model = TrafficModel::default();
+
+    // regenerate the table at paper scale
+    let t = table1::run(&model, 100_000, 0xC0FFEE);
+    println!("{}", t.render());
+    println!(
+        "paper: 63.072 -> 54.011 (14.366%) -> 50.346 (20.177%) -> 50.896 (19.305%)\n"
+    );
+    for s in [OrderStrategy::ColumnMajor, OrderStrategy::Acc, OrderStrategy::App] {
+        println!(
+            "  {:<14} reduction {:.3}%",
+            s.label(),
+            t.reduction_pct(s)
+        );
+    }
+    println!();
+
+    // hot-loop timing at a smaller scale
+    let small = TrafficModel { height: 128, width: 128, ..model };
+    let m = bench("table1 end-to-end (1024 packets, 4 strategies)", 1, 10, || {
+        table1::run(&small, 1024, 7)
+    });
+    println!(
+        "  -> {:.0} packets/s across all four strategies\n",
+        m.per_second(4 * 1024)
+    );
+}

@@ -1,0 +1,43 @@
+//! Ablation example: the bucket-count (k) area-vs-BT frontier behind the
+//! paper's choice of k = 4, plus alternative threshold mappings.
+//!
+//! ```bash
+//! cargo run --release --example bucket_sweep
+//! ```
+
+use repro::experiments::ablate;
+use repro::hw::Tech;
+use repro::psu::{AppPsu, BucketMap, SorterUnit};
+use repro::workload::{Rng, TrafficModel};
+
+fn main() {
+    let tech = Tech::default();
+    let model = TrafficModel::default();
+
+    let pts = ablate::run(&[2, 3, 4, 5, 6, 8, 9], &model, 2048, 7, &tech);
+    println!("{}", ablate::render(&pts));
+
+    // mapping-shape ablation at k=4: paper's {0-2}{3,4}{5,6}{7,8} vs
+    // uniform vs center-heavy
+    println!("mapping-shape ablation at k=4 (input BT/flit on 2048 packets):");
+    let mut rng = Rng::new(9);
+    let trace = model.gen_trace(&mut rng);
+    let pkts = trace.packets(repro::workload::OrderStrategy::ColumnMajor);
+    for (name, map) in [
+        ("paper {3,5,7}", BucketMap::paper_k4()),
+        ("uniform", BucketMap::uniform(4)),
+        ("center-heavy {4,5,6}", BucketMap::from_thresholds(&[4, 5, 6])),
+        ("low-heavy {1,2,3}", BucketMap::from_thresholds(&[1, 2, 3])),
+    ] {
+        let psu = AppPsu::new(repro::PACKET_BYTES, map);
+        let mut bt = 0u64;
+        let mut flits = 0u64;
+        for p in pkts.iter().take(2048) {
+            let sorted = psu.reorder(&p.input);
+            let pk = repro::noc::Packet::standard(&sorted);
+            bt += pk.internal_bt();
+            flits += pk.num_flits() as u64;
+        }
+        println!("  {:<22} {:.3} BT/flit", name, bt as f64 / flits as f64);
+    }
+}

@@ -1,0 +1,46 @@
+//! Calibration probe (development utility): sweeps TrafficModel parameters
+//! and prints the Table-I operating point for each, to pick defaults that
+//! land near the paper's baseline. Not part of the paper's experiments.
+
+use repro::experiments::table1;
+use repro::workload::traffic::{FieldMode, FieldModel};
+use repro::workload::{OrderStrategy, TrafficModel};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() > 1 && args[1] == "sweep" {
+        sweep();
+    } else {
+        let t = table1::run(&TrafficModel::default(), 8192, 42);
+        println!("{}", t.render());
+    }
+}
+
+fn sweep() {
+    println!("rr_i rc_i  thr | rr_w  rc_w  sig_w |  in: base col acc app | w: base col acc | red: col acc app");
+    for &(rr, rc, thr) in &[
+        (0.60, 0.97, 0.25),
+        (0.55, 0.965, 0.25),
+        (0.60, 0.95, 0.25),
+    ] {
+        for &(wrr, wrc, wsig) in &[(0.88, 0.997, 14.0), (0.85, 0.998, 14.0), (0.90, 0.996, 12.0)] {
+            let model = TrafficModel {
+                input: FieldModel { rho_row: rr, rho_col: rc, sigma: 1.0, mode: FieldMode::SparseUniform { threshold: thr } },
+                weight: FieldModel { rho_row: wrr, rho_col: wrc, sigma: wsig, mode: FieldMode::SignMagnitude },
+                height: 256,
+                width: 256,
+            };
+            let t = table1::run(&model, 4096, 42);
+            let g = |s| t.get(s);
+            use OrderStrategy::*;
+            println!(
+                "{rr:.2} {rc:.3} {thr:.2} | {wrr:.3} {wrc:.4} {wsig:4.0} | {:6.2} {:6.2} {:6.2} {:6.2} | {:6.2} {:6.2} {:6.2} | {:5.2}% {:5.2}% {:5.2}%",
+                g(NonOptimized).input_bt_per_flit, g(ColumnMajor).input_bt_per_flit,
+                g(Acc).input_bt_per_flit, g(App).input_bt_per_flit,
+                g(NonOptimized).weight_bt_per_flit, g(ColumnMajor).weight_bt_per_flit,
+                g(Acc).weight_bt_per_flit,
+                t.reduction_pct(ColumnMajor), t.reduction_pct(Acc), t.reduction_pct(App),
+            );
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! End-to-end driver (deliverable (b) + the E2E validation requirement):
+//! the full three-layer stack on a real small workload.
+//!
+//! * generates 16 digit images + activation-statistics test vectors,
+//! * runs the simulated 16-PE platform under baseline/ACC/APP orderings,
+//! * loads the AOT JAX/Pallas artifacts through PJRT and cross-checks the
+//!   PE integers against XLA floats and the PSU hardware model against the
+//!   Pallas counting-sort kernel,
+//! * prints the paper's headline metrics.
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```bash
+//! cargo run --release --example lenet_e2e
+//! ```
+
+use repro::experiments::e2e;
+use repro::hw::Tech;
+use repro::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let tech = Tech::default();
+    println!("loading artifacts from {dir}/ ...");
+    let rt = Runtime::load(&dir)?;
+    let result = e2e::run(&rt, 0xC0FFEE, &tech)?;
+    println!("{}", result.render());
+    anyhow::ensure!(result.sort_mismatches == 0, "PSU vs Pallas mismatch");
+    anyhow::ensure!(result.max_numeric_gap <= 0.7500001, "numeric gap too large");
+    anyhow::ensure!(result.acc_bt_reduction_pct > 10.0, "ACC BT reduction too small");
+    println!("e2e OK");
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! §IV-C3 extension: multi-hop NoC scaling — absolute link-energy savings
+//! accumulate at every router-to-router traversal while the relative
+//! reduction stays constant.
+//!
+//! ```bash
+//! cargo run --release --example multihop_noc
+//! ```
+
+use repro::experiments::multihop;
+use repro::hw::Tech;
+use repro::workload::TrafficModel;
+
+fn main() {
+    let tech = Tech::default();
+    let model = TrafficModel::default();
+    let pts = multihop::run(&[1, 2, 3, 4, 6, 8, 12, 16], &model, 1024, 11, &tech);
+    println!("{}", multihop::render(&pts));
+    let per_hop = pts[0].saved_j;
+    println!(
+        "savings per hop are constant ({:.3} uJ): a {}-hop path saves {:.1}x the \
+         single-hop platform's energy",
+        per_hop * 1e6,
+        pts.last().unwrap().hops,
+        pts.last().unwrap().saved_j / per_hop
+    );
+}

@@ -1,0 +1,21 @@
+//! Dev probe: raw platform energies for power-model calibration.
+use repro::experiments::fig67;
+use repro::hw::Tech;
+
+fn main() {
+    let tech = Tech::default();
+    let f = fig67::run(20, 4, 0xC0FFEE, &tech);
+    for (name, r) in [("base", &f.baseline), ("acc", &f.acc), ("app", &f.app)] {
+        println!(
+            "{name:>5}: cycles {} | in_link {:.4} mW w_link {:.4} mW pe {:.4} mW psu {:.4} mW | in_bt {} w_bt {}",
+            r.cycles,
+            r.input_link_power_w(&tech) * 1e3,
+            (r.link_power_w(&tech) - r.input_link_power_w(&tech)) * 1e3,
+            r.pe_power_w(&tech) * 1e3,
+            r.psu_power_w(&tech) * 1e3,
+            r.input_bt,
+            r.weight_bt,
+        );
+    }
+    println!("{}", f.render(&tech));
+}

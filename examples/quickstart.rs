@@ -1,0 +1,41 @@
+//! Quickstart: sort a packet with every unit, inspect areas, count link BT.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use repro::hw::Tech;
+use repro::noc::{Link, Packet};
+use repro::psu::{all_designs, AppPsu, SorterUnit};
+use repro::workload::Rng;
+
+fn main() {
+    let tech = Tech::default();
+    let mut rng = Rng::new(1);
+
+    // one 25-element "window" of random bytes (the paper's 5x5 kernel size)
+    let window: Vec<u8> = (0..25).map(|_| rng.next_u8()).collect();
+    println!("window: {window:02X?}\n");
+
+    // every design sorts it by '1'-bit count
+    for d in all_designs(25) {
+        let idx = d.sort_indices(&window);
+        let keys: Vec<u8> = idx.iter().map(|&i| d.key(window[i as usize])).collect();
+        println!(
+            "{:<8} area {:>8.1} um^2  latency {} cyc  sorted keys {:?}",
+            d.name(),
+            d.area_um2(&tech),
+            d.latency_cycles(),
+            keys
+        );
+    }
+
+    // link BT: unsorted vs APP-sorted transfer
+    let psu = AppPsu::paper_default(25);
+    let sorted = psu.reorder(&window);
+    let mut raw = Link::new("raw");
+    let mut srt = Link::new("sorted");
+    let bt_raw = raw.send_transfer(&Packet::from_bytes_lane_major(&window, 16));
+    let bt_srt = srt.send_transfer(&Packet::from_bytes_lane_major(&sorted, 16));
+    println!("\nlink BT for one window transfer: unsorted {bt_raw}, APP-sorted {bt_srt}");
+}

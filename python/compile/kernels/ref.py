@@ -1,0 +1,153 @@
+"""Pure-jnp correctness oracles for every Pallas kernel in this package.
+
+These implementations are deliberately written with the most "obviously
+correct" jnp primitives (no tiling, no tricks) and serve as the ground truth
+that python/tests/ compares the Pallas kernels against, and that the Rust
+bit-accurate hardware models are cross-checked against through the AOT
+artifacts.
+
+All byte-valued tensors use int32 carriers (values in [0, 255]); the Rust
+side feeds i32 literals through PJRT.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# popcount / bucket mapping
+# ---------------------------------------------------------------------------
+
+WIDTH = 8  # the paper's W: 8-bit fixed point elements
+
+# Paper's k=4 mapping for W=8: {0,1,2}->0, {3,4}->1, {5,6}->2, {7,8}->3.
+# Encoded as the thresholds at which the bucket index increments.
+K4_THRESHOLDS = (3, 5, 7)
+
+
+def popcount(x):
+    """'1'-bit count of each element (elements assumed in [0, 2^W))."""
+    x = jnp.asarray(x, jnp.int32)
+    acc = jnp.zeros_like(x)
+    for i in range(WIDTH):
+        acc = acc + ((x >> i) & 1)
+    return acc
+
+
+def bucket_map(pc, thresholds=K4_THRESHOLDS):
+    """Map exact popcounts into coarse buckets via increment thresholds.
+
+    bucket(p) = #{t in thresholds : p >= t}; the paper's k=4 mapping is
+    thresholds (3, 5, 7).
+    """
+    pc = jnp.asarray(pc, jnp.int32)
+    b = jnp.zeros_like(pc)
+    for t in thresholds:
+        b = b + (pc >= t).astype(jnp.int32)
+    return b
+
+
+def uniform_thresholds(k, width=WIDTH):
+    """Evenly-spaced bucket thresholds for k buckets over [0, width]."""
+    edges = np.linspace(0, width + 1, k + 1)[1:-1]
+    return tuple(int(np.ceil(e)) for e in edges)
+
+
+# ---------------------------------------------------------------------------
+# comparison-free counting sort (the PSU algorithm)
+# ---------------------------------------------------------------------------
+
+
+def sort_indices(keys, nbuckets):
+    """Stable counting-sort permutation: out[p] = original index of the
+    element transmitted in slot p, ordered by non-decreasing key.
+
+    Mirrors the hardware dataflow: one-hot encode -> histogram -> exclusive
+    prefix sum (start addresses) -> stable scatter.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    n = keys.shape[0]
+    onehot = (keys[:, None] == jnp.arange(nbuckets)[None, :]).astype(jnp.int32)
+    hist = onehot.sum(axis=0)  # frequency histogram
+    starts = jnp.cumsum(hist) - hist  # exclusive prefix sum
+    # stable rank of element i among equal keys seen so far
+    rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=0), keys[:, None], axis=1)[:, 0] - 1
+    pos = starts[keys] + rank
+    return jnp.zeros((n,), jnp.int32).at[pos].set(jnp.arange(n, dtype=jnp.int32))
+
+
+def acc_sort_indices(values):
+    """ACC-PSU reference: sort by exact popcount (W+1 = 9 buckets)."""
+    return sort_indices(popcount(values), WIDTH + 1)
+
+
+def app_sort_indices(values, thresholds=K4_THRESHOLDS):
+    """APP-PSU reference: sort by coarse bucket index (k buckets)."""
+    return sort_indices(bucket_map(popcount(values), thresholds), len(thresholds) + 1)
+
+
+# ---------------------------------------------------------------------------
+# bit transitions on a 128-bit link
+# ---------------------------------------------------------------------------
+
+
+def packet_bt(packets):
+    """Bit transitions of each packet.
+
+    packets: int32[P, F, L] with byte lanes (values in [0,255]); a flit is the
+    L-byte row. BT of a packet = sum over consecutive flit pairs of
+    popcount(flit_i XOR flit_{i+1}).
+    """
+    packets = jnp.asarray(packets, jnp.int32)
+    x = packets[:, 1:, :] ^ packets[:, :-1, :]
+    return popcount(x).sum(axis=(1, 2))
+
+
+def stream_bt(flits):
+    """BT of a continuous flit stream: int32[F, L] -> scalar."""
+    flits = jnp.asarray(flits, jnp.int32)
+    return popcount(flits[1:] ^ flits[:-1]).sum()
+
+
+# ---------------------------------------------------------------------------
+# LeNet head: conv1 (5x5, 6 filters) + bias + ReLU + 2x2 average pool
+# ---------------------------------------------------------------------------
+
+
+def im2col(img, kh, kw):
+    """img: f32[H, W] -> patches f32[(H-kh+1)*(W-kw+1), kh*kw]."""
+    img = jnp.asarray(img)
+    h, w = img.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    rows = []
+    for di in range(kh):
+        for dj in range(kw):
+            rows.append(img[di : di + oh, dj : dj + ow].reshape(-1))
+    return jnp.stack(rows, axis=1)  # [(oh*ow), kh*kw]
+
+
+def conv2d_valid(img, weights):
+    """img f32[H,W], weights f32[C,kh,kw] -> f32[C, H-kh+1, W-kw+1]."""
+    c, kh, kw = weights.shape
+    h, w = img.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    patches = im2col(img, kh, kw)  # [oh*ow, kh*kw]
+    out = patches @ weights.reshape(c, kh * kw).T  # [oh*ow, C]
+    return out.T.reshape(c, oh, ow)
+
+
+def avgpool2(x):
+    """x f32[C, H, W] -> f32[C, H//2, W//2] (2x2 average, stride 2)."""
+    c, h, w = x.shape
+    return x.reshape(c, h // 2, 2, w // 2, 2).mean(axis=(2, 4))
+
+
+def lenet_head(img, weights, bias):
+    """LeNet-5 first two layers: conv 5x5x6 + bias + ReLU + avgpool 2x2.
+
+    img f32[28,28], weights f32[6,5,5], bias f32[6] -> f32[6,12,12].
+    """
+    y = conv2d_valid(img, weights) + bias[:, None, None]
+    y = jnp.maximum(y, 0.0)
+    return avgpool2(y)

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: the PSU's comparison-free counting sort.
+
+One grid step sorts one packet (N elements) exactly like the hardware's
+three pipeline stages:
+
+  stage 1  popcount (optionally bucket-mapped)            -> keys
+  stage 2  one-hot encode -> histogram -> exclusive scan  -> start addresses
+  stage 3  stable rank + scatter                          -> sorted indices
+
+The whole packet (N <= a few hundred elements) fits in VMEM trivially; the
+kernel is bandwidth-bound, which matches the hardware unit's role as a
+stream preprocessor in front of the link.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _sort_kernel_factory(n, nbuckets, thresholds):
+    """Build a kernel sorting rows of shape (n,) by (bucketed) popcount."""
+
+    def kernel(x_ref, o_ref):
+        x = x_ref[...].reshape(n)
+        pc = jnp.zeros_like(x)
+        for i in range(ref.WIDTH):
+            pc = pc + ((x >> i) & 1)
+        if thresholds is not None:
+            keys = jnp.zeros_like(pc)
+            for t in thresholds:
+                keys = keys + (pc >= t).astype(jnp.int32)
+        else:
+            keys = pc
+        onehot = (keys[:, None] == jnp.arange(nbuckets)[None, :]).astype(jnp.int32)
+        hist = onehot.sum(axis=0)
+        starts = jnp.cumsum(hist) - hist  # exclusive prefix sum
+        rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=0), keys[:, None], axis=1)[:, 0] - 1
+        pos = starts[keys] + rank
+        out = jnp.zeros((n,), jnp.int32).at[pos].set(jnp.arange(n, dtype=jnp.int32))
+        o_ref[...] = out.reshape(o_ref.shape)
+
+    return kernel
+
+
+def _run(values, nbuckets, thresholds):
+    values = jnp.asarray(values, jnp.int32)
+    batched = values.ndim == 2
+    v = values if batched else values[None, :]
+    p, n = v.shape
+    out = pl.pallas_call(
+        _sort_kernel_factory(n, nbuckets, thresholds),
+        grid=(p,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, n), jnp.int32),
+        interpret=True,
+    )(v)
+    return out if batched else out[0]
+
+
+def acc_sort_indices(values):
+    """ACC-PSU: stable sort permutation by exact popcount.
+
+    values: int32[N] or int32[P, N] (batched packets); returns indices of the
+    same shape — out[..., p] is the original position of the element sent in
+    transmission slot p.
+    """
+    return _run(values, ref.WIDTH + 1, None)
+
+
+def app_sort_indices(values, thresholds=ref.K4_THRESHOLDS):
+    """APP-PSU: stable sort permutation by coarse bucket index."""
+    thresholds = tuple(thresholds)
+    return _run(values, len(thresholds) + 1, thresholds)

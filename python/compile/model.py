@@ -1,0 +1,55 @@
+"""L2: the JAX compute graphs that get AOT-lowered into artifacts/.
+
+Three entry points, matching the three executables the Rust runtime loads:
+
+  * ``lenet_head``        — LeNet-5 conv1 + bias + ReLU + avgpool over a
+                            16-image batch (one image per PE in Fig. 3).
+  * ``psu_sort``          — ACC and APP (k=4) sorted-index generation for a
+                            batch of packets; the software twin of the PSU.
+  * ``packet_bt``         — per-packet bit-transition counts, the Table-I
+                            hot loop.
+
+Everything calls the Pallas kernels in ``kernels/`` so the artifact HLO
+embeds the kernel lowering (interpret=True -> plain HLO ops the CPU PJRT
+client can run).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import bt as bt_k
+from .kernels import conv as conv_k
+from .kernels import ref
+from .kernels import sortidx as sort_k
+
+# Fixed artifact shapes (the Rust side chunks its workloads to these).
+PE_BATCH = 16  # images per lenet_head call == PEs in the platform
+PACKET_ELEMS = 64  # bytes per packet (4 flits x 16 lanes)
+PACKET_FLITS = 4
+FLIT_LANES = 16
+BT_BATCH = 256  # packets per packet_bt call
+
+
+def lenet_head(imgs, weights, bias):
+    """f32[16,28,28], f32[6,5,5], f32[6] -> f32[16,6,12,12]."""
+    outs = []
+    for i in range(PE_BATCH):
+        patches = ref.im2col(imgs[i], 5, 5)  # [576, 25]
+        y = conv_k.matmul(patches, weights.reshape(6, 25).T)  # [576, 6]
+        y = y.T.reshape(6, 24, 24) + bias[:, None, None]
+        y = jnp.maximum(y, 0.0)
+        outs.append(conv_k.avgpool2(y))
+    return jnp.stack(outs)
+
+
+def psu_sort(packets):
+    """int32[P,64] -> (int32[P,64] acc_idx, int32[P,64] app_idx)."""
+    acc = sort_k.acc_sort_indices(packets)
+    app = sort_k.app_sort_indices(packets)
+    return acc, app
+
+
+def packet_bt(packets):
+    """int32[P,4,16] -> int32[P]."""
+    return bt_k.packet_bt(packets)

@@ -1,0 +1,229 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose, assert_array_equal
+
+from compile.kernels import bt as bt_k
+from compile.kernels import conv as conv_k
+from compile.kernels import popcount as pc_k
+from compile.kernels import ref
+from compile.kernels import sortidx as sort_k
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# popcount + bucket
+# ---------------------------------------------------------------------------
+
+
+def test_popcount_all_byte_values():
+    x = np.arange(256, dtype=np.int32)
+    expected = np.array([bin(v).count("1") for v in range(256)], dtype=np.int32)
+    assert_array_equal(np.asarray(pc_k.popcount(x)), expected)
+    assert_array_equal(np.asarray(ref.popcount(x)), expected)
+
+
+@given(st.integers(min_value=1, max_value=5000), st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=20, deadline=None)
+def test_popcount_random_lengths(n, seed):
+    x = np.random.default_rng(seed).integers(0, 256, size=n).astype(np.int32)
+    assert_array_equal(np.asarray(pc_k.popcount(x)), np.asarray(ref.popcount(x)))
+
+
+def test_bucket_map_paper_example():
+    # Paper §III-B2: counts {4,1,7,5,3,5} -> buckets {1,0,3,2,1,2}
+    pc = np.array([4, 1, 7, 5, 3, 5], dtype=np.int32)
+    assert_array_equal(np.asarray(ref.bucket_map(pc)), [1, 0, 3, 2, 1, 2])
+
+
+def test_bucket_map_full_range():
+    pc = np.arange(9, dtype=np.int32)
+    # {0,1,2}->0, {3,4}->1, {5,6}->2, {7,8}->3
+    assert_array_equal(np.asarray(ref.bucket_map(pc)), [0, 0, 0, 1, 1, 2, 2, 3, 3])
+
+
+@given(st.integers(min_value=2, max_value=9))
+@settings(max_examples=8, deadline=None)
+def test_uniform_thresholds_bucket_count(k):
+    th = ref.uniform_thresholds(k)
+    assert len(th) == k - 1
+    buckets = np.asarray(ref.bucket_map(np.arange(9, dtype=np.int32), th))
+    assert buckets.min() == 0 and buckets.max() == k - 1
+    assert np.all(np.diff(buckets) >= 0)
+
+
+@given(st.integers(min_value=1, max_value=3000), st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=15, deadline=None)
+def test_popcount_bucket_kernel_vs_ref(n, seed):
+    x = np.random.default_rng(seed).integers(0, 256, size=n).astype(np.int32)
+    got = np.asarray(pc_k.popcount_bucket(x))
+    want = np.asarray(ref.bucket_map(ref.popcount(x)))
+    assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# counting sort (PSU algorithm)
+# ---------------------------------------------------------------------------
+
+
+def _check_sorted(values, idx, keyfn):
+    values = np.asarray(values)
+    idx = np.asarray(idx)
+    n = len(values)
+    # permutation
+    assert sorted(idx.tolist()) == list(range(n))
+    keys = keyfn(values)
+    out_keys = keys[idx]
+    # non-decreasing keys
+    assert np.all(np.diff(out_keys) >= 0)
+    # stability: equal keys keep original order
+    for k in np.unique(out_keys):
+        grp = idx[out_keys == k]
+        assert np.all(np.diff(grp) > 0)
+
+
+@given(st.integers(min_value=2, max_value=256), st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=20, deadline=None)
+def test_acc_sort_kernel_properties(n, seed):
+    v = np.random.default_rng(seed).integers(0, 256, size=n).astype(np.int32)
+    idx = np.asarray(sort_k.acc_sort_indices(v))
+    _check_sorted(v, idx, lambda x: np.asarray(ref.popcount(x)))
+    assert_array_equal(idx, np.asarray(ref.acc_sort_indices(v)))
+
+
+@given(st.integers(min_value=2, max_value=256), st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=20, deadline=None)
+def test_app_sort_kernel_properties(n, seed):
+    v = np.random.default_rng(seed).integers(0, 256, size=n).astype(np.int32)
+    idx = np.asarray(sort_k.app_sort_indices(v))
+    _check_sorted(v, idx, lambda x: np.asarray(ref.bucket_map(ref.popcount(x))))
+    assert_array_equal(idx, np.asarray(ref.app_sort_indices(v)))
+
+
+def test_app_with_identity_mapping_equals_acc():
+    # k = W+1 with thresholds 1..8 makes bucket(p) == p, so APP == ACC.
+    v = RNG.integers(0, 256, size=200).astype(np.int32)
+    th = tuple(range(1, 9))
+    assert_array_equal(
+        np.asarray(sort_k.app_sort_indices(v, th)),
+        np.asarray(sort_k.acc_sort_indices(v)),
+    )
+
+
+def test_sort_batched_matches_loop():
+    v = RNG.integers(0, 256, size=(8, 64)).astype(np.int32)
+    batched = np.asarray(sort_k.acc_sort_indices(v))
+    for i in range(8):
+        assert_array_equal(batched[i], np.asarray(sort_k.acc_sort_indices(v[i])))
+
+
+def test_sort_matches_numpy_stable_argsort():
+    v = RNG.integers(0, 256, size=128).astype(np.int32)
+    pc = np.asarray(ref.popcount(v))
+    assert_array_equal(np.asarray(sort_k.acc_sort_indices(v)), np.argsort(pc, kind="stable"))
+
+
+# ---------------------------------------------------------------------------
+# bit transitions
+# ---------------------------------------------------------------------------
+
+
+def _np_packet_bt(pkts):
+    d = pkts[:, 1:, :] ^ pkts[:, :-1, :]
+    return np.vectorize(lambda x: bin(x).count("1"))(d).sum(axis=(1, 2))
+
+
+@given(
+    st.integers(min_value=1, max_value=300),
+    st.integers(min_value=2, max_value=8),
+    st.integers(min_value=1, max_value=16),
+    st.integers(min_value=0, max_value=2**31),
+)
+@settings(max_examples=15, deadline=None)
+def test_packet_bt_kernel_vs_numpy(p, f, l, seed):
+    pkts = np.random.default_rng(seed).integers(0, 256, size=(p, f, l)).astype(np.int32)
+    got = np.asarray(bt_k.packet_bt(pkts))
+    assert_array_equal(got, _np_packet_bt(pkts))
+    assert_array_equal(np.asarray(ref.packet_bt(pkts)), _np_packet_bt(pkts))
+
+
+def test_bt_identical_flits_is_zero():
+    pkts = np.tile(RNG.integers(0, 256, size=(1, 1, 16)), (4, 4, 1)).astype(np.int32)
+    assert_array_equal(np.asarray(bt_k.packet_bt(pkts)), [0, 0, 0, 0])
+
+
+def test_bt_alternating_all_bits():
+    pkts = np.zeros((1, 4, 16), dtype=np.int32)
+    pkts[0, 1::2, :] = 255
+    # 3 boundaries x 128 bits all flip
+    assert int(np.asarray(bt_k.packet_bt(pkts))[0]) == 3 * 128
+
+
+def test_bt_lower_bound_popcount_difference():
+    pkts = RNG.integers(0, 256, size=(64, 4, 16)).astype(np.int32)
+    bt = np.asarray(bt_k.packet_bt(pkts))
+    pc = np.asarray(ref.popcount(pkts)).sum(axis=2)  # per-flit popcounts
+    lower = np.abs(np.diff(pc, axis=1)).sum(axis=1)
+    assert np.all(bt >= lower)
+    assert np.all(bt <= 3 * 128)
+
+
+# ---------------------------------------------------------------------------
+# conv + pool
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_vs_numpy():
+    a = RNG.standard_normal((576, 25)).astype(np.float32)
+    b = RNG.standard_normal((25, 6)).astype(np.float32)
+    assert_allclose(np.asarray(conv_k.matmul(a, b)), a @ b, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    st.integers(min_value=1, max_value=64),
+    st.integers(min_value=1, max_value=32),
+    st.integers(min_value=1, max_value=16),
+    st.integers(min_value=0, max_value=2**31),
+)
+@settings(max_examples=15, deadline=None)
+def test_matmul_shape_sweep(m, k, n, seed):
+    r = np.random.default_rng(seed)
+    a = r.standard_normal((m, k)).astype(np.float32)
+    b = r.standard_normal((k, n)).astype(np.float32)
+    assert_allclose(np.asarray(conv_k.matmul(a, b)), a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_avgpool_vs_ref():
+    x = RNG.standard_normal((6, 24, 24)).astype(np.float32)
+    assert_allclose(
+        np.asarray(conv_k.avgpool2(x)), np.asarray(ref.avgpool2(x)), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_conv_ref_vs_direct_convolution():
+    img = RNG.standard_normal((12, 12)).astype(np.float32)
+    w = RNG.standard_normal((3, 5, 5)).astype(np.float32)
+    got = np.asarray(ref.conv2d_valid(img, w))
+    want = np.zeros((3, 8, 8), dtype=np.float32)
+    for c in range(3):
+        for i in range(8):
+            for j in range(8):
+                want[c, i, j] = (img[i : i + 5, j : j + 5] * w[c]).sum()
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_accumulation_order_insensitive():
+    # The property the whole paper rests on: permuting the (input, weight)
+    # MAC stream does not change the accumulated output.
+    img = RNG.integers(0, 256, size=(12, 12)).astype(np.float32)
+    w = RNG.integers(-8, 8, size=(1, 5, 5)).astype(np.float32)
+    patches = np.asarray(ref.im2col(img, 5, 5))
+    flat_w = w.reshape(25)
+    perm = RNG.permutation(25)
+    direct = patches @ flat_w
+    permuted = patches[:, perm] @ flat_w[perm]
+    assert_allclose(direct, permuted, rtol=1e-6)

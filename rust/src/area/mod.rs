@@ -1,0 +1,81 @@
+//! Area reporting: the Fig. 5 breakdown (popcount unit vs sorting unit vs
+//! pipeline registers) for every design and kernel size.
+
+use crate::hw::{Stage, Tech};
+use crate::psu::SorterUnit;
+
+/// One row of the Fig. 5 chart.
+#[derive(Debug, Clone)]
+pub struct AreaRow {
+    pub design: &'static str,
+    pub n: usize,
+    pub popcount_um2: f64,
+    pub sorting_um2: f64,
+    pub pipeline_um2: f64,
+    pub total_um2: f64,
+}
+
+/// Elaborate one design to its Fig. 5 row (post-layout: cell area × scale
+/// × routing factor).
+pub fn area_row(design: &dyn SorterUnit, tech: &Tech) -> AreaRow {
+    let inv = design.inventory();
+    let n = design.n();
+    AreaRow {
+        design: design.name(),
+        n,
+        popcount_um2: tech.sorter_area_um2(inv.raw_area_of(Stage::Popcount), n),
+        sorting_um2: tech.sorter_area_um2(inv.raw_area_of(Stage::Sorting), n),
+        pipeline_um2: tech.sorter_area_um2(inv.raw_area_of(Stage::Pipeline), n),
+        total_um2: tech.sorter_area_um2(inv.raw_area_um2(), n),
+    }
+}
+
+/// Rows for every design the paper synthesizes, at kernel size `n`.
+pub fn fig5_rows(n: usize, tech: &Tech) -> Vec<AreaRow> {
+    crate::psu::all_designs(n)
+        .iter()
+        .map(|d| area_row(d.as_ref(), tech))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_sum_to_total() {
+        let tech = Tech::default();
+        for row in fig5_rows(25, &tech) {
+            let sum = row.popcount_um2 + row.sorting_um2 + row.pipeline_um2;
+            assert!(
+                (sum - row.total_um2).abs() < 1e-6,
+                "{}: {} != {}",
+                row.design,
+                sum,
+                row.total_um2
+            );
+        }
+    }
+
+    #[test]
+    fn app_psu_is_smallest_design() {
+        let tech = Tech::default();
+        let rows = fig5_rows(25, &tech);
+        let app = rows.iter().find(|r| r.design == "APP-PSU").unwrap();
+        for r in &rows {
+            if r.design != "APP-PSU" {
+                assert!(app.total_um2 < r.total_um2, "APP should beat {}", r.design);
+            }
+        }
+    }
+
+    #[test]
+    fn larger_kernel_larger_area() {
+        let tech = Tech::default();
+        let a25 = fig5_rows(25, &tech);
+        let a49 = fig5_rows(49, &tech);
+        for (r25, r49) in a25.iter().zip(&a49) {
+            assert!(r49.total_um2 > r25.total_um2, "{}", r25.design);
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Minimal benchmarking harness (criterion isn't vendored in this offline
+//! build): warmup + timed iterations, median/mean/min reporting, and a
+//! `black_box` to defeat constant folding.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-export for benches.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// One measured result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3?} median {:>10.3?} mean {:>10.3?} min ({} iters)",
+            self.name, self.median, self.mean, self.min, self.iters
+        )
+    }
+
+    /// Throughput helper: items per second at the median.
+    pub fn per_second(&self, items: u64) -> f64 {
+        items as f64 / self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` over `iters` iterations after `warmup` untimed runs.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..warmup {
+        bb(f());
+    }
+    let mut samples: Vec<Duration> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            bb(f());
+            t0.elapsed()
+        })
+        .collect();
+    samples.sort_unstable();
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / iters.max(1);
+    let min = samples[0];
+    let m = Measurement { name: name.to_string(), iters, median, mean, min };
+    println!("{}", m.report());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_reports() {
+        let m = bench("noop", 1, 5, || 42u64);
+        assert_eq!(m.iters, 5);
+        assert!(m.min <= m.median);
+        assert!(m.report().contains("noop"));
+        assert!(m.per_second(100) > 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Experiment configuration: defaults mirror the paper's setup; fields can
+//! be overridden from a minimal `key = value` TOML-subset file
+//! (`--config path`) and from CLI flags.
+//!
+//! (The build is offline/std-only, so the parser is in-tree: it accepts
+//! comments, `key = <int|string|[int, ...]>` lines, and ignores section
+//! headers — exactly what the experiment configs need.)
+
+/// Top-level config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// PRNG seed for all workload generation.
+    pub seed: u64,
+    /// Table-I packet count (paper: 100 000).
+    pub table1_packets: usize,
+    /// Number of convolution test vectors for Fig. 6/7 (paper: 100).
+    pub test_vectors: usize,
+    /// APP bucket count k (paper default: 4).
+    pub buckets: usize,
+    /// Kernel sizes for the Fig. 5 sweep (paper: 25 and 49).
+    pub kernel_sizes: Vec<usize>,
+    /// Hop counts for the multihop experiment.
+    pub hops: Vec<usize>,
+    /// Artifact directory for the PJRT runtime.
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            seed: 0xC0FFEE,
+            table1_packets: 100_000,
+            test_vectors: 100,
+            buckets: 4,
+            kernel_sizes: vec![25, 49],
+            hops: vec![1, 2, 4, 8],
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+fn parse_usize_list(v: &str) -> Option<Vec<usize>> {
+    let v = v.trim().strip_prefix('[')?.strip_suffix(']')?;
+    v.split(',')
+        .map(|s| s.trim().parse::<usize>().ok())
+        .collect::<Option<Vec<_>>>()
+}
+
+fn parse_string(v: &str) -> String {
+    v.trim().trim_matches('"').to_string()
+}
+
+impl Config {
+    /// Parse a TOML-subset string; unknown keys are errors (typo guard).
+    pub fn from_toml_str(text: &str) -> anyhow::Result<Self> {
+        let mut c = Config::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || line.starts_with('[') {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let (key, val) = (key.trim(), val.trim());
+            let bad = || anyhow::anyhow!("line {}: bad value for {key}", lineno + 1);
+            match key {
+                "seed" => c.seed = val.parse().map_err(|_| bad())?,
+                "table1_packets" => c.table1_packets = val.parse().map_err(|_| bad())?,
+                "test_vectors" => c.test_vectors = val.parse().map_err(|_| bad())?,
+                "buckets" => c.buckets = val.parse().map_err(|_| bad())?,
+                "kernel_sizes" => c.kernel_sizes = parse_usize_list(val).ok_or_else(bad)?,
+                "hops" => c.hops = parse_usize_list(val).ok_or_else(bad)?,
+                "artifacts_dir" => c.artifacts_dir = parse_string(val),
+                _ => anyhow::bail!("line {}: unknown key {key}", lineno + 1),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Load from a file.
+    pub fn from_toml_file(path: &str) -> anyhow::Result<Self> {
+        Self::from_toml_str(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.table1_packets, 100_000);
+        assert_eq!(c.test_vectors, 100);
+        assert_eq!(c.buckets, 4);
+        assert_eq!(c.kernel_sizes, vec![25, 49]);
+    }
+
+    #[test]
+    fn partial_override_keeps_defaults() {
+        let c = Config::from_toml_str("buckets = 8\nseed = 1").unwrap();
+        assert_eq!(c.buckets, 8);
+        assert_eq!(c.seed, 1);
+        assert_eq!(c.test_vectors, 100);
+    }
+
+    #[test]
+    fn lists_strings_comments_sections() {
+        let text = r#"
+# comment
+[experiment]
+kernel_sizes = [9, 25, 49]  # trailing comment
+artifacts_dir = "my/artifacts"
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert_eq!(c.kernel_sizes, vec![9, 25, 49]);
+        assert_eq!(c.artifacts_dir, "my/artifacts");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(Config::from_toml_str("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        assert!(Config::from_toml_str("seed = banana").is_err());
+        assert!(Config::from_toml_str("hops = [1, x]").is_err());
+    }
+}

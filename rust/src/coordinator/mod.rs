@@ -1,0 +1,183 @@
+//! L3 coordinator: the serving loop of the allocation unit.
+//!
+//! The paper's contribution is the sorting unit itself, so the coordinator
+//! is the thin-but-real driver the reproduction needs: a threaded service
+//! that accepts sort requests, batches them to the AOT artifact's fixed
+//! batch shape, dispatches one XLA `psu_sort` execution per batch, and
+//! returns per-request sorted indices. It is the serving-path twin of the
+//! hardware allocation unit: same algorithm, same batch geometry, Python
+//! nowhere in sight.
+//!
+//! Batching policy: collect up to [`crate::runtime::BT_BATCH`] requests or
+//! until `max_wait` elapses since the first queued request, whichever
+//! comes first (the classic dynamic-batching rule). Implemented on std
+//! channels + threads (the build is offline; no async runtime is vendored
+//! — DESIGN.md §2).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::runtime::{Runtime, BT_BATCH, PACKET_ELEMS};
+
+// NOTE: the xla crate's PJRT handles are !Send (Rc + raw pointers), so the
+// worker thread *constructs* the Runtime itself from the artifact directory
+// and owns it for its whole life; clients talk to it over channels only.
+
+/// One sort request: a 64-byte packet plus its reply channel.
+struct SortRequest {
+    packet: [u8; PACKET_ELEMS],
+    reply: SyncSender<anyhow::Result<SortResponse>>,
+}
+
+/// The response: both orderings' indices.
+#[derive(Debug, Clone)]
+pub struct SortResponse {
+    pub acc_indices: Vec<u16>,
+    pub app_indices: Vec<u16>,
+}
+
+/// Service metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub max_batch: AtomicU64,
+}
+
+impl Metrics {
+    /// Mean requests per XLA dispatch (batching efficiency).
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+/// Handle for submitting requests; clone freely across threads.
+#[derive(Clone)]
+pub struct SortService {
+    tx: SyncSender<SortRequest>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl SortService {
+    /// Spawn the batching worker; it loads + compiles the artifacts from
+    /// `artifacts_dir` on its own thread. Dropping every handle stops it.
+    pub fn spawn(artifacts_dir: String, max_wait: Duration) -> anyhow::Result<Self> {
+        let (tx, rx) = mpsc::sync_channel::<SortRequest>(4 * BT_BATCH);
+        let metrics = Arc::new(Metrics::default());
+        let m = metrics.clone();
+        // report load errors back synchronously
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<anyhow::Result<()>>(1);
+        std::thread::spawn(move || {
+            let runtime = match Runtime::load(&artifacts_dir) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            batch_loop(&runtime, rx, max_wait, m);
+        });
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("worker died"))??;
+        Ok(Self { tx, metrics })
+    }
+
+    /// Submit one packet and block until its sorted indices arrive.
+    pub fn sort(&self, packet: [u8; PACKET_ELEMS]) -> anyhow::Result<SortResponse> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(SortRequest { packet, reply })
+            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("service dropped request"))?
+    }
+
+    /// Submit a whole slice and collect responses (amortizes batching).
+    pub fn sort_many(
+        &self,
+        packets: &[[u8; PACKET_ELEMS]],
+    ) -> anyhow::Result<Vec<SortResponse>> {
+        let mut rxs = Vec::with_capacity(packets.len());
+        for &p in packets {
+            let (reply, rx) = mpsc::sync_channel(1);
+            self.tx
+                .send(SortRequest { packet: p, reply })
+                .map_err(|_| anyhow::anyhow!("service stopped"))?;
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("dropped"))?)
+            .collect()
+    }
+}
+
+fn batch_loop(
+    runtime: &Runtime,
+    rx: Receiver<SortRequest>,
+    max_wait: Duration,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        // wait for the first request of the batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders gone
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + max_wait;
+        while batch.len() < BT_BATCH {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        metrics.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.max_batch.fetch_max(batch.len() as u64, Ordering::Relaxed);
+
+        let packets: Vec<[u8; PACKET_ELEMS]> = batch.iter().map(|r| r.packet).collect();
+        // one XLA execution per batch — the artifact's fixed shape pads
+        match runtime.psu_sort(&packets) {
+            Ok((acc, app)) => {
+                for (i, req) in batch.into_iter().enumerate() {
+                    let _ = req.reply.send(Ok(SortResponse {
+                        acc_indices: acc[i].clone(),
+                        app_indices: app[i].clone(),
+                    }));
+                }
+            }
+            Err(e) => {
+                for req in batch {
+                    let _ = req.reply.send(Err(anyhow::anyhow!("{e}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_default_zero_and_mean() {
+        let m = Metrics::default();
+        assert_eq!(m.mean_batch(), 0.0);
+        m.requests.store(10, Ordering::Relaxed);
+        m.batches.store(4, Ordering::Relaxed);
+        assert!((m.mean_batch() - 2.5).abs() < 1e-12);
+    }
+}

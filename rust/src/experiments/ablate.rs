@@ -1,0 +1,89 @@
+//! Ablation: bucket count k ∈ {2,3,4,6,9} — the area-vs-BT-reduction
+//! frontier behind the paper's choice of k=4 (DESIGN.md experiment index).
+
+use crate::hw::Tech;
+use crate::noc::{Link, Packet};
+use crate::psu::{AppPsu, BucketMap, SorterUnit};
+use crate::report::{self, Table};
+use crate::workload::{OrderStrategy, Rng, TrafficModel};
+use crate::PACKET_BYTES;
+
+/// One point on the frontier.
+#[derive(Debug, Clone)]
+pub struct KPoint {
+    pub k: usize,
+    pub area_um2: f64,
+    pub bt_reduction_pct: f64,
+}
+
+/// Sweep bucket counts; BT reduction measured on Table-I traffic.
+pub fn run(ks: &[usize], model: &TrafficModel, n_packets: usize, seed: u64, tech: &Tech) -> Vec<KPoint> {
+    // baseline: column-major ordering without sorting
+    let mut rng = Rng::new(seed);
+    let per_trace = model.packets_per_trace();
+    let traces = n_packets.div_ceil(per_trace);
+    let mut all_packets = Vec::with_capacity(n_packets);
+    for _ in 0..traces {
+        let t = model.gen_trace(&mut rng);
+        all_packets.extend(t.packets(OrderStrategy::ColumnMajor));
+        if all_packets.len() >= n_packets {
+            all_packets.truncate(n_packets);
+            break;
+        }
+    }
+    let mut base_link = Link::new("base");
+    for p in &all_packets {
+        base_link.send_transfer(&Packet::standard(&p.input));
+    }
+    let base = base_link.bt_per_flit();
+
+    ks.iter()
+        .map(|&k| {
+            let map = if k == 4 { BucketMap::paper_k4() } else { BucketMap::uniform(k) };
+            let psu = AppPsu::new(PACKET_BYTES, map);
+            let mut link = Link::new(format!("k{k}"));
+            for p in &all_packets {
+                let sorted = psu.reorder(&p.input);
+                link.send_transfer(&Packet::standard(&sorted));
+            }
+            KPoint {
+                k,
+                area_um2: AppPsu::new(25, if k == 4 { BucketMap::paper_k4() } else { BucketMap::uniform(k) })
+                    .area_um2(tech),
+                bt_reduction_pct: (1.0 - link.bt_per_flit() / base) * 100.0,
+            }
+        })
+        .collect()
+}
+
+pub fn render(points: &[KPoint]) -> String {
+    let mut t = Table::new(
+        "Ablation: bucket count k vs area (K=25 unit) and input-BT reduction",
+        &["k", "area um^2", "BT reduction vs col-major"],
+    );
+    for p in points {
+        t.row(&[
+            p.k.to_string(),
+            report::f(p.area_um2, 1),
+            report::pct(p.bt_reduction_pct),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn area_monotone_bt_saturating() {
+        let model = TrafficModel { height: 64, width: 64, ..TrafficModel::default() };
+        let pts = run(&[2, 4, 9], &model, 128, 5, &Tech::default());
+        assert!(pts[0].area_um2 < pts[1].area_um2);
+        assert!(pts[1].area_um2 < pts[2].area_um2);
+        // more buckets never hurts BT much; k=9 ≈ exact is the ceiling
+        assert!(pts[2].bt_reduction_pct >= pts[0].bt_reduction_pct - 1.0);
+        // all sorting configs help vs column-major on this traffic
+        assert!(pts.iter().all(|p| p.bt_reduction_pct > 0.0));
+    }
+}

@@ -1,0 +1,142 @@
+//! End-to-end driver: the full three-layer stack on a real small workload.
+//!
+//! 1. Generate a batch of synthetic digit images (one per PE).
+//! 2. Run them through the simulated Fig. 3 platform under baseline / ACC /
+//!    APP orderings, collecting the paper's headline metrics (BT and link
+//!    power reduction).
+//! 3. Execute the AOT-compiled JAX/Pallas `lenet_head` artifact through the
+//!    PJRT runtime on the *same* tensors and cross-check the platform's
+//!    integer PE outputs against the XLA float outputs (exact up to the
+//!    pool divider: the PE floors, XLA averages — max gap 0.75).
+//! 4. Cross-check the PSU hardware model against the `psu_sort` artifact
+//!    (the Pallas counting-sort kernel) index-for-index.
+
+use anyhow::Result;
+
+use crate::hw::Tech;
+use crate::platform::{Platform, PlatformOrdering};
+use crate::power::compare;
+use crate::psu::{AccPsu, AppPsu, BucketMap, SorterUnit};
+use crate::runtime::{Runtime, PACKET_ELEMS, PE_BATCH};
+use crate::workload::digits::{self, IMG};
+use crate::workload::lenet::{K, QuantWeights};
+use crate::workload::Rng;
+
+/// E2E results.
+#[derive(Debug, Clone)]
+pub struct E2e {
+    /// Headline: overall link BT reduction, ACC and APP (paper: 20.4/19.5 %).
+    pub acc_bt_reduction_pct: f64,
+    pub app_bt_reduction_pct: f64,
+    pub acc_link_power_reduction_pct: f64,
+    pub app_link_power_reduction_pct: f64,
+    /// max |PE integer output − XLA float output| across all pooled pixels.
+    pub max_numeric_gap: f64,
+    /// PSU-vs-Pallas sorted-index mismatches (must be 0).
+    pub sort_mismatches: usize,
+    /// images processed.
+    pub images: usize,
+}
+
+/// Run the end-to-end experiment. `runtime` is loaded from artifacts/.
+pub fn run(runtime: &Runtime, seed: u64, tech: &Tech) -> Result<E2e> {
+    // --- workload: one image per PE, shared quantized weights -------------
+    let imgs = digits::batch(PE_BATCH, seed);
+    let weights = QuantWeights::random(seed);
+    let vectors: Vec<([[u8; IMG]; IMG], QuantWeights)> =
+        imgs.iter().map(|i| (*i, weights.clone())).collect();
+
+    // --- platform runs -----------------------------------------------------
+    let mut base = Platform::new(PlatformOrdering::Bypass);
+    let rb = base.run_batch(&vectors);
+    let mut accp = Platform::new(PlatformOrdering::Sorted(
+        Box::new(AccPsu::new(K)) as Box<dyn SorterUnit>
+    ));
+    let ra = accp.run_batch(&vectors);
+    let mut appp = Platform::new(PlatformOrdering::Sorted(Box::new(AppPsu::new(
+        K,
+        BucketMap::paper_k4(),
+    ))));
+    let rp = appp.run_batch(&vectors);
+    let acc_cmp = compare(tech, &rb, &ra);
+    let app_cmp = compare(tech, &rb, &rp);
+
+    // --- XLA cross-check: lenet_head ---------------------------------------
+    let f_imgs: Vec<Vec<f32>> = imgs
+        .iter()
+        .map(|img| img.iter().flatten().map(|&v| v as f32).collect())
+        .collect();
+    let f_w: Vec<f32> = (0..6)
+        .flat_map(|m| (0..K).map(move |t| (m, t)))
+        .map(|(m, t)| weights.signed(m, t) as f32)
+        .collect();
+    let f_b: Vec<f32> = weights.bias.iter().map(|&b| b as f32).collect();
+    let xla_out = runtime.lenet_head(&f_imgs, &f_w, &f_b)?;
+
+    let mut max_gap = 0f64;
+    for (i, pooled) in rb.pooled.iter().enumerate() {
+        let x = &xla_out[i];
+        for m in 0..6 {
+            for y in 0..12 {
+                for xx in 0..12 {
+                    let pe = pooled[m][y][xx] as f64;
+                    let xv = x[m * 144 + y * 12 + xx] as f64;
+                    max_gap = max_gap.max((pe - xv).abs());
+                }
+            }
+        }
+    }
+
+    // --- XLA cross-check: psu_sort vs hardware PSU -------------------------
+    let mut rng = Rng::new(seed ^ 0xE2E);
+    let packets: Vec<[u8; PACKET_ELEMS]> = (0..64)
+        .map(|_| {
+            let mut p = [0u8; PACKET_ELEMS];
+            for b in p.iter_mut() {
+                *b = rng.next_u8();
+            }
+            p
+        })
+        .collect();
+    let (acc_idx, app_idx) = runtime.psu_sort(&packets)?;
+    let hw_acc = AccPsu::new(PACKET_ELEMS);
+    let hw_app = AppPsu::new(PACKET_ELEMS, BucketMap::paper_k4());
+    let mut mismatches = 0;
+    for (i, p) in packets.iter().enumerate() {
+        if hw_acc.sort_indices(p) != acc_idx[i] {
+            mismatches += 1;
+        }
+        if hw_app.sort_indices(p) != app_idx[i] {
+            mismatches += 1;
+        }
+    }
+
+    Ok(E2e {
+        acc_bt_reduction_pct: acc_cmp.bt_reduction_pct,
+        app_bt_reduction_pct: app_cmp.bt_reduction_pct,
+        acc_link_power_reduction_pct: acc_cmp.link_power_reduction_pct,
+        app_link_power_reduction_pct: app_cmp.link_power_reduction_pct,
+        max_numeric_gap: max_gap,
+        sort_mismatches: mismatches,
+        images: PE_BATCH,
+    })
+}
+
+impl E2e {
+    pub fn render(&self) -> String {
+        format!(
+            "== End-to-end: LeNet conv1+pool on {} digit images, 16 PEs ==\n\
+             link BT reduction:    ACC {:.2}%  APP {:.2}%   (paper: 20.42 / 19.50)\n\
+             link power reduction: ACC {:.2}%  APP {:.2}%   (paper: 18.27 / 16.48)\n\
+             PE-vs-XLA max numeric gap: {:.3} (pool divider rounding bound 0.75)\n\
+             PSU-vs-Pallas sorted-index mismatches: {}\n",
+            self.images,
+            self.acc_bt_reduction_pct,
+            self.app_bt_reduction_pct,
+            self.acc_link_power_reduction_pct,
+            self.app_link_power_reduction_pct,
+            self.max_numeric_gap,
+            self.sort_mismatches,
+        )
+    }
+}

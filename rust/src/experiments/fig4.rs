@@ -1,0 +1,52 @@
+//! Fig. 4: cycle-trace (waveform) verification of the APP-PSU on the four
+//! stimulus patterns: all-ones, all-zeros, a repeated 8→0 popcount ramp,
+//! and random data.
+
+use crate::psu::AppPsu;
+use crate::wave::{paper_patterns, trace, Waveform};
+
+/// All four waveforms for a sort width `n`.
+pub fn run(n: usize, seed: u64) -> Vec<Waveform> {
+    let psu = AppPsu::paper_default(n);
+    paper_patterns(n, seed)
+        .into_iter()
+        .map(|(name, vals)| trace(&psu, name, &vals))
+        .collect()
+}
+
+/// Render all four traces.
+pub fn render(waves: &[Waveform]) -> String {
+    waves.iter().map(|w| w.render() + "\n").collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::psu::SorterUnit as _;
+
+    #[test]
+    fn four_patterns_produced() {
+        let waves = run(16, 1);
+        assert_eq!(waves.len(), 4);
+        let names: Vec<&str> = waves.iter().map(|w| w.pattern.as_str()).collect();
+        assert_eq!(names, vec!["all-ones", "all-zeros", "ramp-8-to-0", "random"]);
+    }
+
+    #[test]
+    fn all_outputs_are_bucket_ordered() {
+        // the Fig. 4 observation: indices from higher-count buckets are
+        // placed after those from lower-count buckets, for every pattern.
+        let psu = AppPsu::paper_default(25);
+        for w in run(25, 9) {
+            let pats = paper_patterns(25, 9);
+            let vals = &pats
+                .iter()
+                .find(|(n, _)| *n == w.pattern)
+                .unwrap()
+                .1;
+            let keys: Vec<u8> =
+                w.out_indices().iter().map(|&i| psu.key(vals[i as usize])).collect();
+            assert!(keys.windows(2).all(|p| p[0] <= p[1]), "{}: {keys:?}", w.pattern);
+        }
+    }
+}

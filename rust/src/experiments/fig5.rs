@@ -1,0 +1,117 @@
+//! Fig. 5: area breakdown of the four sorting-unit designs at kernel sizes
+//! 5×5 (K=25) and 7×7 (K=49), 22 nm @ 500 MHz, same pipeline depth.
+//!
+//! Paper anchors: APP-PSU totals 2193 µm² (K=25) and 6928 µm² (K=49);
+//! −35.4 % overall vs ACC-PSU at K=25 (−24.9 % popcount stage, −36.7 %
+//! sorting stage); APP-PSU the smallest of the four designs.
+
+use crate::area::{fig5_rows, AreaRow};
+use crate::hw::Tech;
+use crate::report::{self, Table};
+
+/// Rows for each kernel size.
+#[derive(Debug, Clone)]
+pub struct Fig5 {
+    pub per_kernel: Vec<(usize, Vec<AreaRow>)>,
+}
+
+impl Fig5 {
+    pub fn row(&self, n: usize, design: &str) -> &AreaRow {
+        self.per_kernel
+            .iter()
+            .find(|(k, _)| *k == n)
+            .unwrap()
+            .1
+            .iter()
+            .find(|r| r.design == design)
+            .unwrap()
+    }
+
+    /// Overall APP vs ACC reduction at kernel size n.
+    pub fn app_vs_acc_reduction_pct(&self, n: usize) -> f64 {
+        let acc = self.row(n, "ACC-PSU").total_um2;
+        let app = self.row(n, "APP-PSU").total_um2;
+        (1.0 - app / acc) * 100.0
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (n, rows) in &self.per_kernel {
+            let mut t = Table::new(
+                &format!("Fig. 5: area breakdown, kernel size {n} (um^2, 22nm @ 500MHz)"),
+                &["Design", "Popcount", "Sorting", "Pipeline", "Total"],
+            );
+            for r in rows {
+                t.row(&[
+                    r.design.to_string(),
+                    report::f(r.popcount_um2, 1),
+                    report::f(r.sorting_um2, 1),
+                    report::f(r.pipeline_um2, 1),
+                    report::f(r.total_um2, 1),
+                ]);
+            }
+            out.push_str(&t.render());
+            out.push_str(&format!(
+                "APP-PSU vs ACC-PSU overall reduction: {:.1}%\n\n",
+                self.app_vs_acc_reduction_pct(*n)
+            ));
+        }
+        out
+    }
+}
+
+pub fn run(kernel_sizes: &[usize], tech: &Tech) -> Fig5 {
+    Fig5 {
+        per_kernel: kernel_sizes
+            .iter()
+            .map(|&n| (n, fig5_rows(n, tech)))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig5() -> Fig5 {
+        run(&[25, 49], &Tech::default())
+    }
+
+    #[test]
+    fn app_total_near_paper_anchor_k25() {
+        // 2193 um^2 is the calibration anchor — must hold within 5 %.
+        let app = fig5().row(25, "APP-PSU").total_um2;
+        assert!(
+            (app / 2193.0 - 1.0).abs() < 0.05,
+            "APP-PSU K=25 area {app:.0} vs paper 2193"
+        );
+    }
+
+    #[test]
+    fn app_total_near_paper_k49() {
+        // structural prediction (not calibrated): paper reports 6928 um^2.
+        let app = fig5().row(49, "APP-PSU").total_um2;
+        assert!(
+            (app / 6928.0 - 1.0).abs() < 0.30,
+            "APP-PSU K=49 area {app:.0} vs paper 6928"
+        );
+    }
+
+    #[test]
+    fn overall_reduction_near_35pct() {
+        let red = fig5().app_vs_acc_reduction_pct(25);
+        assert!((28.0..43.0).contains(&red), "reduction {red:.1}% vs paper 35.4%");
+    }
+
+    #[test]
+    fn design_order_matches_paper() {
+        // APP < ACC < Bitonic < CSN at both kernel sizes
+        let f = fig5();
+        for n in [25usize, 49] {
+            let a = |d: &str| f.row(n, d).total_um2;
+            assert!(a("APP-PSU") < a("ACC-PSU"), "K={n}");
+            assert!(a("ACC-PSU") < a("Bitonic"), "K={n}");
+            assert!(a("Bitonic") < a("CSN"), "K={n}");
+        }
+    }
+}

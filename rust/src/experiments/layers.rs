@@ -1,0 +1,131 @@
+//! Future-work extension (paper §IV-C4): BT reduction across layer shapes
+//! beyond LeNet conv1 — ResNet-style 3×3 convolutions and Transformer-style
+//! GEMM tiles — by sweeping the PSU sort width over each layer's natural
+//! reduction-window size.
+//!
+//! The sorting unit operates per accumulation window (the order-insensitive
+//! unit), so the relevant parameter is the window length K: 3×3 conv → 9,
+//! 5×5 → 25, 7×7 → 49, a GEMM tile row → 64. For each shape we stream
+//! activation-statistics windows through a K-wide ACC/APP PSU and measure
+//! the transfer BT reduction plus the unit's area.
+
+use crate::hw::Tech;
+use crate::noc::{Link, Packet};
+use crate::psu::{AccPsu, AppPsu, BucketMap, SorterUnit};
+use crate::report::{self, Table};
+use crate::workload::traffic::{gen_field, TrafficModel};
+use crate::workload::Rng;
+
+/// A layer shape in the sweep.
+#[derive(Debug, Clone)]
+pub struct LayerShape {
+    pub name: &'static str,
+    /// Accumulation-window length = PSU sort width.
+    pub k: usize,
+}
+
+/// The default sweep: the paper's two kernels plus its future-work shapes.
+pub fn default_shapes() -> Vec<LayerShape> {
+    vec![
+        LayerShape { name: "ResNet conv 3x3", k: 9 },
+        LayerShape { name: "LeNet conv 5x5", k: 25 },
+        LayerShape { name: "conv 7x7", k: 49 },
+        LayerShape { name: "Transformer GEMM tile (64)", k: 64 },
+    ]
+}
+
+/// One row of the sweep result.
+#[derive(Debug, Clone)]
+pub struct LayerRow {
+    pub name: &'static str,
+    pub k: usize,
+    pub acc_bt_reduction_pct: f64,
+    pub app_bt_reduction_pct: f64,
+    pub acc_area_um2: f64,
+    pub app_area_um2: f64,
+}
+
+/// Run the sweep: `windows` activation windows per shape.
+pub fn run(shapes: &[LayerShape], windows: usize, seed: u64, tech: &Tech) -> Vec<LayerRow> {
+    let field_model = TrafficModel::default().input;
+    shapes
+        .iter()
+        .map(|s| {
+            let mut rng = Rng::new(seed ^ (s.k as u64) << 8);
+            // one long activation row per shape, chopped into windows
+            let row = gen_field(&field_model, 1, s.k * windows, &mut rng);
+            let acc = AccPsu::new(s.k);
+            let app = AppPsu::new(s.k, BucketMap::paper_k4());
+            let mut base_l = Link::new("base");
+            let mut acc_l = Link::new("acc");
+            let mut app_l = Link::new("app");
+            // small windows share a packet (a 3x3 window alone wouldn't
+            // even span a flit boundary); each window is sorted by its own
+            // K-wide unit, then windows are packed per transfer.
+            let per_packet = (crate::PACKET_BYTES / s.k).max(1);
+            let group = s.k * per_packet;
+            for g in row[0].chunks_exact(group) {
+                let mut base_p = Vec::with_capacity(group);
+                let mut acc_p = Vec::with_capacity(group);
+                let mut app_p = Vec::with_capacity(group);
+                for w in g.chunks_exact(s.k) {
+                    base_p.extend_from_slice(w);
+                    acc_p.extend(acc.reorder(w));
+                    app_p.extend(app.reorder(w));
+                }
+                base_l.send_transfer(&Packet::from_bytes_lane_major(&base_p, 16));
+                acc_l.send_transfer(&Packet::from_bytes_lane_major(&acc_p, 16));
+                app_l.send_transfer(&Packet::from_bytes_lane_major(&app_p, 16));
+            }
+            let base = base_l.total_bt() as f64;
+            LayerRow {
+                name: s.name,
+                k: s.k,
+                acc_bt_reduction_pct: (1.0 - acc_l.total_bt() as f64 / base) * 100.0,
+                app_bt_reduction_pct: (1.0 - app_l.total_bt() as f64 / base) * 100.0,
+                acc_area_um2: acc.area_um2(tech),
+                app_area_um2: app.area_um2(tech),
+            }
+        })
+        .collect()
+}
+
+pub fn render(rows: &[LayerRow]) -> String {
+    let mut t = Table::new(
+        "Layer-shape sweep (paper §IV-C4 future work): BT reduction and PSU area",
+        &["layer", "K", "ACC BT red.", "APP BT red.", "ACC um^2", "APP um^2"],
+    );
+    for r in rows {
+        t.row(&[
+            r.name.to_string(),
+            r.k.to_string(),
+            report::pct(r.acc_bt_reduction_pct),
+            report::pct(r.app_bt_reduction_pct),
+            report::f(r.acc_area_um2, 0),
+            report::f(r.app_area_um2, 0),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_produces_positive_reductions_and_monotone_area() {
+        let rows = run(&default_shapes(), 512, 5, &Tech::default());
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(
+                r.acc_bt_reduction_pct > 0.0,
+                "{}: ACC reduction {:.2}",
+                r.name,
+                r.acc_bt_reduction_pct
+            );
+            assert!(r.app_area_um2 < r.acc_area_um2, "{}", r.name);
+        }
+        // area grows with K
+        assert!(rows.windows(2).all(|w| w[0].app_area_um2 < w[1].app_area_um2));
+    }
+}

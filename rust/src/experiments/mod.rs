@@ -1,0 +1,15 @@
+//! One module per paper table/figure, plus the extensions (bucket-count
+//! ablation, multi-hop scaling) and the end-to-end driver. Each module
+//! exposes a `run(...)` returning structured results plus a rendered
+//! [`crate::report::Table`], so the CLI, the benches, and the integration
+//! tests all share one implementation.
+
+pub mod ablate;
+pub mod e2e;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig67;
+pub mod layers;
+pub mod multihop;
+pub mod table1;

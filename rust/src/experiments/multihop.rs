@@ -1,0 +1,91 @@
+//! Multi-hop scaling (paper §IV-C3): BT-reduction benefits accumulate at
+//! each router-to-router traversal, so absolute link-energy savings grow
+//! linearly with hop count while the relative reduction stays constant.
+
+use crate::hw::Tech;
+use crate::noc::{MultiHopPath, Packet};
+use crate::report::{self, Table};
+use crate::workload::{OrderStrategy, Rng, TrafficModel};
+
+/// One hop-count measurement.
+#[derive(Debug, Clone)]
+pub struct HopPoint {
+    pub hops: usize,
+    pub base_energy_j: f64,
+    pub app_energy_j: f64,
+    /// Absolute energy saved (J).
+    pub saved_j: f64,
+    /// Relative reduction (%).
+    pub reduction_pct: f64,
+}
+
+pub fn run(
+    hop_counts: &[usize],
+    model: &TrafficModel,
+    n_packets: usize,
+    seed: u64,
+    tech: &Tech,
+) -> Vec<HopPoint> {
+    let mut rng = Rng::new(seed);
+    let trace = model.gen_trace(&mut rng);
+    let base_pkts = trace.packets(OrderStrategy::NonOptimized);
+    let app_pkts = trace.packets(OrderStrategy::App);
+    let n = n_packets.min(base_pkts.len());
+
+    hop_counts
+        .iter()
+        .map(|&h| {
+            let mut base_path = MultiHopPath::new("base", h);
+            let mut app_path = MultiHopPath::new("app", h);
+            for p in base_pkts.iter().take(n) {
+                base_path.send_transfer(&Packet::standard(&p.input));
+            }
+            for p in app_pkts.iter().take(n) {
+                app_path.send_transfer(&Packet::standard(&p.input));
+            }
+            let be = base_path.energy_j(tech);
+            let ae = app_path.energy_j(tech);
+            HopPoint {
+                hops: h,
+                base_energy_j: be,
+                app_energy_j: ae,
+                saved_j: be - ae,
+                reduction_pct: (1.0 - ae / be) * 100.0,
+            }
+        })
+        .collect()
+}
+
+pub fn render(points: &[HopPoint]) -> String {
+    let mut t = Table::new(
+        "Multi-hop scaling: APP ordering link-energy savings vs hop count",
+        &["hops", "base uJ", "APP uJ", "saved uJ", "reduction"],
+    );
+    for p in points {
+        t.row(&[
+            p.hops.to_string(),
+            report::f(p.base_energy_j * 1e6, 3),
+            report::f(p.app_energy_j * 1e6, 3),
+            report::f(p.saved_j * 1e6, 3),
+            report::pct(p.reduction_pct),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn savings_scale_linearly_reduction_constant() {
+        let model = TrafficModel { height: 64, width: 64, ..TrafficModel::default() };
+        let pts = run(&[1, 2, 4], &model, 64, 11, &Tech::default());
+        // absolute savings scale with hops
+        assert!((pts[1].saved_j / pts[0].saved_j - 2.0).abs() < 1e-6);
+        assert!((pts[2].saved_j / pts[0].saved_j - 4.0).abs() < 1e-6);
+        // relative reduction constant
+        assert!((pts[0].reduction_pct - pts[2].reduction_pct).abs() < 1e-9);
+        assert!(pts[0].reduction_pct > 0.0);
+    }
+}

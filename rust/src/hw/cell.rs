@@ -1,0 +1,119 @@
+//! Parametric 22 nm standard-cell library.
+//!
+//! Raw per-cell areas follow the relative sizing of a typical 22 nm
+//! high-density library (NAND2 ≈ 0.33 µm²; flops ≈ 6 NAND-equivalents;
+//! XOR ≈ 2 NAND-equivalents). Absolute numbers only matter up to the global
+//! calibration factor in [`super::tech::Tech::area_scale`]; every comparison
+//! the paper makes (ACC vs APP vs Bitonic vs CSN, popcount vs sorting stage)
+//! is a *ratio* and therefore depends only on the relative sizing here.
+//!
+//! Switched capacitance per cell class drives the dynamic-power model
+//! (`E = 1/2 · C · V² per toggle`); relative values follow gate input
+//! capacitance scaling of the same library.
+
+/// Standard-cell classes used by the structural models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CellClass {
+    /// Inverter.
+    Inv,
+    /// 2-input NAND (the unit "gate equivalent").
+    Nand2,
+    /// 2-input NOR.
+    Nor2,
+    /// 2-input XOR.
+    Xor2,
+    /// 2:1 multiplexer.
+    Mux2,
+    /// Half adder (sum + carry).
+    HalfAdder,
+    /// Full adder.
+    FullAdder,
+    /// D flip-flop (pipeline/architectural register bit).
+    Dff,
+    /// 16-entry ROM/LUT bit-plane (one output bit of a 4-input LUT).
+    Lut4Bit,
+    /// 1-bit magnitude-comparator slice (gt/eq cascade cell).
+    Cmp1,
+    /// 1-bit and-or-invert decode slice (one-hot decoders, address decode).
+    Decode1,
+}
+
+impl CellClass {
+    /// Cell area in µm² before global calibration (22 nm HD library flavor).
+    pub fn area_um2(self) -> f64 {
+        match self {
+            CellClass::Inv => 0.20,
+            CellClass::Nand2 => 0.33,
+            CellClass::Nor2 => 0.33,
+            CellClass::Xor2 => 0.65,
+            CellClass::Mux2 => 0.55,
+            CellClass::HalfAdder => 0.90,
+            CellClass::FullAdder => 1.55,
+            CellClass::Dff => 1.95,
+            CellClass::Lut4Bit => 1.30,
+            CellClass::Cmp1 => 0.75,
+            CellClass::Decode1 => 0.40,
+        }
+    }
+
+    /// Effective switched capacitance per output toggle, in femtofarads.
+    pub fn cap_ff(self) -> f64 {
+        match self {
+            CellClass::Inv => 0.08,
+            CellClass::Nand2 => 0.12,
+            CellClass::Nor2 => 0.12,
+            CellClass::Xor2 => 0.22,
+            CellClass::Mux2 => 0.18,
+            CellClass::HalfAdder => 0.30,
+            CellClass::FullAdder => 0.52,
+            CellClass::Dff => 0.65,
+            CellClass::Lut4Bit => 0.40,
+            CellClass::Cmp1 => 0.25,
+            CellClass::Decode1 => 0.14,
+        }
+    }
+
+    /// All classes (report iteration order).
+    pub fn all() -> &'static [CellClass] {
+        &[
+            CellClass::Inv,
+            CellClass::Nand2,
+            CellClass::Nor2,
+            CellClass::Xor2,
+            CellClass::Mux2,
+            CellClass::HalfAdder,
+            CellClass::FullAdder,
+            CellClass::Dff,
+            CellClass::Lut4Bit,
+            CellClass::Cmp1,
+            CellClass::Decode1,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn areas_positive_and_ordered_sensibly() {
+        for &c in CellClass::all() {
+            assert!(c.area_um2() > 0.0);
+            assert!(c.cap_ff() > 0.0);
+        }
+        // flop > full adder > xor > nand > inv: basic library sanity
+        assert!(CellClass::Dff.area_um2() > CellClass::FullAdder.area_um2());
+        assert!(CellClass::FullAdder.area_um2() > CellClass::Xor2.area_um2());
+        assert!(CellClass::Xor2.area_um2() > CellClass::Nand2.area_um2());
+        assert!(CellClass::Nand2.area_um2() > CellClass::Inv.area_um2());
+    }
+
+    #[test]
+    fn all_lists_every_class_once() {
+        let all = CellClass::all();
+        let mut sorted = all.to_vec();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), all.len());
+    }
+}

@@ -1,0 +1,230 @@
+//! Structural gate inventories.
+//!
+//! Every hardware model in [`crate::psu`] elaborates to an `Inventory`: a
+//! multiset of standard cells, partitioned by [`Stage`] so the paper's
+//! Fig. 5 area *breakdown* (popcount unit vs sorting unit vs pipeline
+//! registers) can be regenerated, not just totals.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::cell::CellClass;
+
+/// Which architectural stage a group of cells belongs to (Fig. 5 breakdown).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stage {
+    /// Popcount unit (4-bit LUTs + adder tree / bucket encoder).
+    Popcount,
+    /// Sorting unit (one-hot, histogram, prefix sum, scatter).
+    Sorting,
+    /// Pipeline registers (shared depth across designs).
+    Pipeline,
+    /// Anything else (control FSM, misc).
+    Control,
+}
+
+impl Stage {
+    pub fn all() -> &'static [Stage] {
+        &[Stage::Popcount, Stage::Sorting, Stage::Pipeline, Stage::Control]
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Popcount => "popcount",
+            Stage::Sorting => "sorting",
+            Stage::Pipeline => "pipeline",
+            Stage::Control => "control",
+        }
+    }
+}
+
+/// A multiset of cells per stage.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Inventory {
+    counts: BTreeMap<(Stage, CellClass), u64>,
+}
+
+impl Inventory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` cells of class `cell` to `stage`.
+    pub fn add(&mut self, stage: Stage, cell: CellClass, n: u64) {
+        if n > 0 {
+            *self.counts.entry((stage, cell)).or_insert(0) += n;
+        }
+    }
+
+    /// Merge another inventory into this one.
+    pub fn merge(&mut self, other: &Inventory) {
+        for (&k, &v) in &other.counts {
+            *self.counts.entry(k).or_insert(0) += v;
+        }
+    }
+
+    /// Total cell count.
+    pub fn cells(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    /// Cell count for one stage.
+    pub fn cells_in(&self, stage: Stage) -> u64 {
+        self.counts
+            .iter()
+            .filter(|((s, _), _)| *s == stage)
+            .map(|(_, &v)| v)
+            .sum()
+    }
+
+    /// Count of one cell class across all stages.
+    pub fn count_of(&self, cell: CellClass) -> u64 {
+        self.counts
+            .iter()
+            .filter(|((_, c), _)| *c == cell)
+            .map(|(_, &v)| v)
+            .sum()
+    }
+
+    /// Raw (uncalibrated) area in µm².
+    pub fn raw_area_um2(&self) -> f64 {
+        self.counts
+            .iter()
+            .map(|(&(_, c), &n)| c.area_um2() * n as f64)
+            .sum()
+    }
+
+    /// Raw area of one stage in µm².
+    pub fn raw_area_of(&self, stage: Stage) -> f64 {
+        self.counts
+            .iter()
+            .filter(|((s, _), _)| *s == stage)
+            .map(|(&(_, c), &n)| c.area_um2() * n as f64)
+            .sum()
+    }
+
+    /// Total switched capacitance if every cell toggled once, in fF.
+    /// Used by the activity-proportional combinational power model.
+    pub fn raw_cap_ff(&self) -> f64 {
+        self.counts
+            .iter()
+            .map(|(&(_, c), &n)| c.cap_ff() * n as f64)
+            .sum()
+    }
+
+    /// Switched capacitance of one stage (fF, per full-activity cycle).
+    pub fn raw_cap_of(&self, stage: Stage) -> f64 {
+        self.counts
+            .iter()
+            .filter(|((s, _), _)| *s == stage)
+            .map(|(&(_, c), &n)| c.cap_ff() * n as f64)
+            .sum()
+    }
+
+    /// Iterate (stage, cell, count).
+    pub fn iter(&self) -> impl Iterator<Item = (Stage, CellClass, u64)> + '_ {
+        self.counts.iter().map(|(&(s, c), &n)| (s, c, n))
+    }
+}
+
+impl fmt::Display for Inventory {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for &stage in Stage::all() {
+            let cells = self.cells_in(stage);
+            if cells == 0 {
+                continue;
+            }
+            writeln!(
+                f,
+                "  {:<9} {:>7} cells {:>10.1} um^2 (raw)",
+                stage.label(),
+                cells,
+                self.raw_area_of(stage)
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Convenience builders for common multi-bit structures.
+impl Inventory {
+    /// Ripple/compressor adder of `width` bits (1 HA + width-1 FA).
+    pub fn add_adder(&mut self, stage: Stage, width: u64) {
+        if width == 0 {
+            return;
+        }
+        self.add(stage, CellClass::HalfAdder, 1);
+        self.add(stage, CellClass::FullAdder, width.saturating_sub(1));
+    }
+
+    /// Register of `width` bits.
+    pub fn add_register(&mut self, stage: Stage, width: u64) {
+        self.add(stage, CellClass::Dff, width);
+    }
+
+    /// `width`-bit 2:1 mux.
+    pub fn add_mux(&mut self, stage: Stage, width: u64) {
+        self.add(stage, CellClass::Mux2, width);
+    }
+
+    /// `width`-bit magnitude comparator.
+    pub fn add_comparator(&mut self, stage: Stage, width: u64) {
+        self.add(stage, CellClass::Cmp1, width);
+        // carry/priority combine chain
+        self.add(stage, CellClass::Nand2, width.saturating_sub(1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_merge_accumulate() {
+        let mut a = Inventory::new();
+        a.add(Stage::Popcount, CellClass::FullAdder, 4);
+        a.add(Stage::Popcount, CellClass::FullAdder, 2);
+        let mut b = Inventory::new();
+        b.add(Stage::Sorting, CellClass::Dff, 10);
+        a.merge(&b);
+        assert_eq!(a.cells(), 16);
+        assert_eq!(a.cells_in(Stage::Popcount), 6);
+        assert_eq!(a.cells_in(Stage::Sorting), 10);
+        assert_eq!(a.count_of(CellClass::Dff), 10);
+    }
+
+    #[test]
+    fn area_is_dot_product() {
+        let mut inv = Inventory::new();
+        inv.add(Stage::Sorting, CellClass::Nand2, 3);
+        let expect = 3.0 * CellClass::Nand2.area_um2();
+        assert!((inv.raw_area_um2() - expect).abs() < 1e-12);
+        assert!((inv.raw_area_of(Stage::Sorting) - expect).abs() < 1e-12);
+        assert_eq!(inv.raw_area_of(Stage::Popcount), 0.0);
+    }
+
+    #[test]
+    fn zero_add_is_noop() {
+        let mut inv = Inventory::new();
+        inv.add(Stage::Control, CellClass::Inv, 0);
+        assert_eq!(inv.cells(), 0);
+    }
+
+    #[test]
+    fn adder_builder_width() {
+        let mut inv = Inventory::new();
+        inv.add_adder(Stage::Popcount, 4);
+        assert_eq!(inv.count_of(CellClass::HalfAdder), 1);
+        assert_eq!(inv.count_of(CellClass::FullAdder), 3);
+    }
+
+    #[test]
+    fn stage_totals_sum_to_grand_total() {
+        let mut inv = Inventory::new();
+        inv.add(Stage::Popcount, CellClass::Lut4Bit, 5);
+        inv.add(Stage::Sorting, CellClass::Decode1, 7);
+        inv.add(Stage::Pipeline, CellClass::Dff, 9);
+        let sum: f64 = Stage::all().iter().map(|&s| inv.raw_area_of(s)).sum();
+        assert!((sum - inv.raw_area_um2()).abs() < 1e-9);
+    }
+}

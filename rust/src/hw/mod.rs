@@ -1,0 +1,32 @@
+//! Hardware substrate: the "commercial EDA tools" substitute.
+//!
+//! The paper reports post-synthesis area and post-layout power from a 22 nm
+//! flow. We rebuild that flow as:
+//!
+//! * [`cell`] — a parametric 22 nm standard-cell library (area per cell
+//!   class, switched capacitance per cell class);
+//! * [`inventory`] — structural gate inventories: every modeled design
+//!   elaborates to a multiset of cells, and area is the dot product with the
+//!   library (one *global* scale factor calibrates absolute µm², all ratios
+//!   are structural — DESIGN.md §2);
+//! * [`toggle`] — toggle ledgers: named register/wire groups count actual
+//!   0↔1 transitions while the bit-accurate models run the real workload,
+//!   which is the simulation equivalent of back-annotated switching
+//!   activity (SAIF);
+//! * [`tech`] — operating point (0.8 V, 500 MHz) and the energy/power
+//!   integration helpers;
+//! * [`pipeline`] — shared pipeline-depth register accounting so all four
+//!   sorter designs are compared at the same pipeline depth, as the paper
+//!   requires.
+
+pub mod cell;
+pub mod inventory;
+pub mod netlist;
+pub mod pipeline;
+pub mod tech;
+pub mod toggle;
+
+pub use cell::CellClass;
+pub use inventory::{Inventory, Stage};
+pub use tech::Tech;
+pub use toggle::{ToggleGroup, ToggleLedger};

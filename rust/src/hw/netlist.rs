@@ -1,0 +1,260 @@
+//! Gate-level structural netlists: build, evaluate bit-exactly, and count
+//! per-gate output toggles.
+//!
+//! The inventory model (`inventory.rs`) costs designs by cell *counts*;
+//! this module goes one level deeper for blocks where we want bit-exact
+//! logic validation and per-net switching activity — the popcount slice is
+//! built out of real gates and checked against `u8::count_ones`, which is
+//! the closest software analogue of gate-level simulation with SAIF
+//! annotation that the paper's EDA flow performs.
+
+use super::cell::CellClass;
+
+/// Net identifier.
+pub type Net = usize;
+
+/// One gate instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gate {
+    /// Constant driver.
+    Const(bool),
+    Not(Net),
+    And(Net, Net),
+    Or(Net, Net),
+    Xor(Net, Net),
+    /// Mux2: select ? a : b.
+    Mux(Net, Net, Net),
+    /// Full-adder sum (a ^ b ^ c).
+    Sum3(Net, Net, Net),
+    /// Full-adder carry (majority of a, b, c).
+    Carry3(Net, Net, Net),
+}
+
+impl Gate {
+    /// The library cell this gate maps to (for area/cap accounting).
+    pub fn cell(&self) -> CellClass {
+        match self {
+            Gate::Const(_) => CellClass::Inv, // tie cell, costed as inverter
+            Gate::Not(_) => CellClass::Inv,
+            Gate::And(..) | Gate::Or(..) => CellClass::Nand2,
+            Gate::Xor(..) => CellClass::Xor2,
+            Gate::Mux(..) => CellClass::Mux2,
+            Gate::Sum3(..) | Gate::Carry3(..) => CellClass::FullAdder,
+        }
+    }
+}
+
+/// A combinational netlist in topological order: nets 0..n_inputs are the
+/// primary inputs; every gate appends one net.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub n_inputs: usize,
+    pub gates: Vec<Gate>,
+    pub outputs: Vec<Net>,
+    /// Last evaluated value per net (for toggle counting).
+    state: Vec<bool>,
+    /// Accumulated output toggles per gate net.
+    pub toggles: Vec<u64>,
+    pub evals: u64,
+}
+
+impl Netlist {
+    pub fn new(n_inputs: usize) -> Self {
+        Self {
+            n_inputs,
+            gates: Vec::new(),
+            outputs: Vec::new(),
+            state: Vec::new(),
+            toggles: Vec::new(),
+            evals: 0,
+        }
+    }
+
+    /// Add a gate; returns its output net.
+    pub fn add(&mut self, g: Gate) -> Net {
+        // validate fan-in references only existing nets (topological order)
+        let limit = self.n_inputs + self.gates.len();
+        let ok = |n: Net| n < limit;
+        let valid = match g {
+            Gate::Const(_) => true,
+            Gate::Not(a) => ok(a),
+            Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => ok(a) && ok(b),
+            Gate::Mux(s, a, b) | Gate::Sum3(s, a, b) | Gate::Carry3(s, a, b) => {
+                ok(s) && ok(a) && ok(b)
+            }
+        };
+        assert!(valid, "gate references a later net (not topological)");
+        self.gates.push(g);
+        limit
+    }
+
+    pub fn set_outputs(&mut self, outs: &[Net]) {
+        self.outputs = outs.to_vec();
+    }
+
+    /// Evaluate on `inputs`, counting toggles against the previous state.
+    pub fn eval(&mut self, inputs: &[bool]) -> Vec<bool> {
+        assert_eq!(inputs.len(), self.n_inputs);
+        let total = self.n_inputs + self.gates.len();
+        let first = self.state.len() != total;
+        if first {
+            self.state = vec![false; total];
+            self.toggles = vec![0; total];
+        }
+        let mut next = vec![false; total];
+        next[..self.n_inputs].copy_from_slice(inputs);
+        for (gi, g) in self.gates.iter().enumerate() {
+            let v = |n: Net| next[n];
+            next[self.n_inputs + gi] = match *g {
+                Gate::Const(c) => c,
+                Gate::Not(a) => !v(a),
+                Gate::And(a, b) => v(a) && v(b),
+                Gate::Or(a, b) => v(a) || v(b),
+                Gate::Xor(a, b) => v(a) ^ v(b),
+                Gate::Mux(s, a, b) => {
+                    if v(s) {
+                        v(a)
+                    } else {
+                        v(b)
+                    }
+                }
+                Gate::Sum3(a, b, c) => v(a) ^ v(b) ^ v(c),
+                Gate::Carry3(a, b, c) => {
+                    (v(a) && v(b)) || (v(b) && v(c)) || (v(a) && v(c))
+                }
+            };
+        }
+        for i in 0..total {
+            if self.state[i] != next[i] {
+                self.toggles[i] += 1;
+            }
+        }
+        self.state = next;
+        self.evals += 1;
+        self.outputs.iter().map(|&n| self.state[n]).collect()
+    }
+
+    /// Total gate-output toggles so far (excludes primary inputs).
+    pub fn gate_toggles(&self) -> u64 {
+        self.toggles[self.n_inputs..].iter().sum()
+    }
+
+    /// Switched capacitance so far, in fF (per-cell cap × its toggles).
+    pub fn switched_cap_ff(&self) -> f64 {
+        self.gates
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| g.cell().cap_ff() * self.toggles[self.n_inputs + gi] as f64)
+            .sum()
+    }
+
+    /// Mean fraction of gates toggling per evaluation — the empirical
+    /// activity factor α used by the architectural PSU power model
+    /// (`Tech::psu_alpha`).
+    pub fn activity_factor(&self) -> f64 {
+        if self.evals == 0 || self.gates.is_empty() {
+            return 0.0;
+        }
+        self.gate_toggles() as f64 / (self.evals as f64 * self.gates.len() as f64)
+    }
+}
+
+/// Build the paper's popcount slice for one W-bit element: two 4-bit LUT
+/// halves realized as full-adder compressor trees, aggregated by a 3-bit
+/// adder — output is the 4-bit '1'-bit count.
+pub fn build_popcount8() -> Netlist {
+    let mut nl = Netlist::new(8);
+    // low nibble compressor: count bits 0..4 -> 3-bit value
+    let lo_s0 = nl.add(Gate::Sum3(0, 1, 2));
+    let lo_c0 = nl.add(Gate::Carry3(0, 1, 2));
+    let zero = nl.add(Gate::Const(false));
+    let lo_s1 = nl.add(Gate::Sum3(lo_s0, 3, zero)); // bit0 of low count
+    let lo_c1 = nl.add(Gate::Carry3(lo_s0, 3, zero));
+    let lo_b1s = nl.add(Gate::Sum3(lo_c0, lo_c1, zero)); // bit1
+    let lo_b2 = nl.add(Gate::Carry3(lo_c0, lo_c1, zero)); // bit2
+    // high nibble compressor: bits 4..8
+    let hi_s0 = nl.add(Gate::Sum3(4, 5, 6));
+    let hi_c0 = nl.add(Gate::Carry3(4, 5, 6));
+    let hi_s1 = nl.add(Gate::Sum3(hi_s0, 7, zero));
+    let hi_c1 = nl.add(Gate::Carry3(hi_s0, 7, zero));
+    let hi_b1s = nl.add(Gate::Sum3(hi_c0, hi_c1, zero));
+    let hi_b2 = nl.add(Gate::Carry3(hi_c0, hi_c1, zero));
+    // 3-bit ripple add of the two nibble counts -> 4-bit total
+    let t0 = nl.add(Gate::Sum3(lo_s1, hi_s1, zero));
+    let c0 = nl.add(Gate::Carry3(lo_s1, hi_s1, zero));
+    let t1 = nl.add(Gate::Sum3(lo_b1s, hi_b1s, c0));
+    let c1 = nl.add(Gate::Carry3(lo_b1s, hi_b1s, c0));
+    let t2 = nl.add(Gate::Sum3(lo_b2, hi_b2, c1));
+    let c2 = nl.add(Gate::Carry3(lo_b2, hi_b2, c1));
+    nl.set_outputs(&[t0, t1, t2, c2]);
+    nl
+}
+
+/// Evaluate the popcount netlist on a byte; returns the 4-bit count.
+pub fn popcount8_netlist(nl: &mut Netlist, v: u8) -> u8 {
+    let bits: Vec<bool> = (0..8).map(|i| (v >> i) & 1 == 1).collect();
+    let out = nl.eval(&bits);
+    out.iter()
+        .enumerate()
+        .map(|(i, &b)| (b as u8) << i)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn popcount_netlist_exhaustive() {
+        // bit-exact against count_ones for every byte value
+        let mut nl = build_popcount8();
+        for v in 0..=255u8 {
+            assert_eq!(
+                popcount8_netlist(&mut nl, v),
+                v.count_ones() as u8,
+                "value {v:#04x}"
+            );
+        }
+    }
+
+    #[test]
+    fn toggle_counting_is_exact_on_known_sequence() {
+        let mut nl = Netlist::new(1);
+        let q = nl.add(Gate::Not(0));
+        nl.set_outputs(&[q]);
+        nl.eval(&[false]); // from reset: NOT(0)=1, net toggles 0->1
+        nl.eval(&[true]); // 1->0
+        nl.eval(&[true]); // no change
+        assert_eq!(nl.gate_toggles(), 2);
+        assert_eq!(nl.evals, 3);
+    }
+
+    #[test]
+    fn activity_factor_in_unit_range_on_random_stream() {
+        use crate::workload::Rng;
+        let mut nl = build_popcount8();
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            popcount8_netlist(&mut nl, rng.next_u8());
+        }
+        let a = nl.activity_factor();
+        assert!(a > 0.05 && a < 1.0, "activity {a}");
+        assert!(nl.switched_cap_ff() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not topological")]
+    fn rejects_forward_references() {
+        let mut nl = Netlist::new(1);
+        nl.add(Gate::And(0, 99));
+    }
+
+    #[test]
+    fn mux_and_basic_gates() {
+        let mut nl = Netlist::new(3);
+        let m = nl.add(Gate::Mux(0, 1, 2));
+        nl.set_outputs(&[m]);
+        assert_eq!(nl.eval(&[true, true, false]), vec![true]);
+        assert_eq!(nl.eval(&[false, true, false]), vec![false]);
+    }
+}

@@ -1,0 +1,74 @@
+//! Shared pipeline-depth accounting.
+//!
+//! The paper synthesizes all four sorter designs "using the same pipeline
+//! depth" so area comparisons are apples-to-apples. This module captures
+//! that constraint: given the widths of the values alive at each cut, it
+//! produces the register inventory and the latency model every design
+//! shares.
+
+use super::cell::CellClass;
+use super::inventory::{Inventory, Stage};
+
+/// The pipeline depth the paper uses for all sorting-unit designs: the
+/// three architectural stages of Fig. 1 (popcount → prefix sum → index
+/// mapping).
+pub const PIPELINE_DEPTH: usize = 3;
+
+/// Pipeline register model: one cut per stage boundary.
+#[derive(Debug, Clone)]
+pub struct PipelineModel {
+    /// Bits latched at each stage boundary.
+    pub cut_widths: Vec<u64>,
+}
+
+impl PipelineModel {
+    pub fn new(cut_widths: Vec<u64>) -> Self {
+        Self { cut_widths }
+    }
+
+    /// Number of pipeline stages (cuts + 1 is the combinational stage count;
+    /// latency in cycles equals the number of cuts + 1 for the output reg).
+    pub fn depth(&self) -> usize {
+        self.cut_widths.len()
+    }
+
+    /// Latency in cycles: one per cut plus the output register.
+    pub fn latency_cycles(&self) -> usize {
+        self.cut_widths.len() + 1
+    }
+
+    /// Register inventory for all cuts.
+    pub fn inventory(&self) -> Inventory {
+        let mut inv = Inventory::new();
+        for &w in &self.cut_widths {
+            inv.add(Stage::Pipeline, CellClass::Dff, w);
+        }
+        inv
+    }
+
+    /// Total register bits.
+    pub fn total_bits(&self) -> u64 {
+        self.cut_widths.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_and_bits() {
+        let p = PipelineModel::new(vec![100, 50]);
+        assert_eq!(p.depth(), 2);
+        assert_eq!(p.latency_cycles(), 3);
+        assert_eq!(p.total_bits(), 150);
+        assert_eq!(p.inventory().count_of(CellClass::Dff), 150);
+    }
+
+    #[test]
+    fn empty_pipeline_is_combinational() {
+        let p = PipelineModel::new(vec![]);
+        assert_eq!(p.latency_cycles(), 1);
+        assert_eq!(p.inventory().cells(), 0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Operating point and calibration: the paper's 22 nm @ 500 MHz, 0.8 V.
+//!
+//! `area_scale` is the single global calibration factor described in
+//! DESIGN.md §2: it maps raw structural area (gate-count × library cell
+//! area) to the paper's reported absolute numbers. It is fit **once**
+//! against one anchor (APP-PSU, K=25, 2193 µm²) and then left alone; every
+//! ratio the paper reports must emerge from structure.
+//!
+//! Similarly `cap_scale` anchors absolute power to the paper's APP-PSU
+//! overhead (1.43 mW); the ACC/APP and link/non-link power *ratios* are
+//! measured, not fit.
+
+/// Technology / operating-point parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Tech {
+    /// Supply voltage in volts.
+    pub vdd: f64,
+    /// Clock frequency in Hz.
+    pub freq_hz: f64,
+    /// Global structural-area → reported-area calibration factor.
+    pub area_scale: f64,
+    /// Global switched-capacitance calibration factor.
+    pub cap_scale: f64,
+    /// Wire + repeater capacitance per link lane bit, in fF. Drives the
+    /// TX-register/link switching power proxy (paper §IV-B4).
+    pub link_bit_cap_ff: f64,
+    /// PSU combinational activity factor: the fraction of the sorter's
+    /// total gate capacitance that switches per sort operation (wire and
+    /// clock load folded in).
+    pub psu_alpha: f64,
+    /// PE datapath capacitance multiplier (wire + clock load of the MAC
+    /// array relative to raw gate caps). Sets the platform's link vs
+    /// non-link power split (paper Fig. 6).
+    pub pe_cap_scale: f64,
+    /// Data-independent TX-register capacitance per flit event (clock pins,
+    /// enables) in fF. This is why the paper's link-*power* reduction
+    /// (18.27 %) trails its link-*BT* reduction (20.42 %): part of the
+    /// register's switching doesn't depend on the data.
+    pub tx_flit_cap_ff: f64,
+    /// Place-and-route overhead pivot: synthesized area grows by
+    /// `1 + n/routing_n0` with the sort width n (routing congestion and
+    /// wire spreading at 500 MHz). The *second* calibration point, fit to
+    /// the paper's K=49/K=25 APP-PSU area ratio (6928/2193 = 3.16); it is
+    /// applied uniformly to every design, so all fixed-n comparisons
+    /// (Fig. 5 reductions, design ordering) are unaffected by it.
+    pub routing_n0: f64,
+}
+
+impl Default for Tech {
+    fn default() -> Self {
+        Tech {
+            vdd: 0.8,
+            freq_hz: 500.0e6,
+            // Fit once so APP-PSU(K=25) == 2193 um^2 (paper Fig. 5); see
+            // rust/tests/calibration.rs which asserts the anchor holds.
+            area_scale: 0.6916,
+            // Fit once so APP-PSU(K=25) overhead == 1.43 mW on the Fig. 6/7
+            // workload (rust/tests/calibration.rs asserts the anchor).
+            cap_scale: 201.4,
+            link_bit_cap_ff: 634.0,
+            psu_alpha: 0.50,
+            pe_cap_scale: 1.0,
+            tx_flit_cap_ff: 1580.0,
+            routing_n0: 45.0,
+        }
+    }
+}
+
+impl Tech {
+    /// Energy of one toggle of capacitance `cap_ff` (fF), in joules.
+    pub fn toggle_energy_j(&self, cap_ff: f64) -> f64 {
+        0.5 * cap_ff * 1e-15 * self.vdd * self.vdd * self.cap_scale
+    }
+
+    /// Average power in watts given total toggled capacitance (fF·toggles)
+    /// over `cycles` clock cycles.
+    pub fn avg_power_w(&self, cap_ff_toggles: f64, cycles: u64) -> f64 {
+        if cycles == 0 {
+            return 0.0;
+        }
+        let energy = self.toggle_energy_j(cap_ff_toggles);
+        let time_s = cycles as f64 / self.freq_hz;
+        energy / time_s
+    }
+
+    /// Calibrated area in µm² from a raw structural area.
+    pub fn area_um2(&self, raw_um2: f64) -> f64 {
+        raw_um2 * self.area_scale
+    }
+
+    /// Place-and-route overhead factor for a block of sort width `n`.
+    pub fn routing_factor(&self, n: usize) -> f64 {
+        1.0 + n as f64 / self.routing_n0
+    }
+
+    /// Calibrated post-layout area for a sorter of width `n`.
+    pub fn sorter_area_um2(&self, raw_um2: f64, n: usize) -> f64 {
+        self.area_um2(raw_um2) * self.routing_factor(n)
+    }
+
+    /// Energy of one bit transition on a link lane, in joules.
+    pub fn link_toggle_energy_j(&self) -> f64 {
+        self.toggle_energy_j(self.link_bit_cap_ff)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_operating_point() {
+        let t = Tech::default();
+        assert_eq!(t.vdd, 0.8);
+        assert_eq!(t.freq_hz, 500.0e6);
+    }
+
+    #[test]
+    fn toggle_energy_scales_with_cap() {
+        let t = Tech::default();
+        let e1 = t.toggle_energy_j(1.0);
+        let e2 = t.toggle_energy_j(2.0);
+        assert!((e2 / e1 - 2.0).abs() < 1e-12);
+        assert!(e1 > 0.0);
+    }
+
+    #[test]
+    fn avg_power_zero_cycles_is_zero() {
+        assert_eq!(Tech::default().avg_power_w(100.0, 0), 0.0);
+    }
+
+    #[test]
+    fn avg_power_halves_with_double_time() {
+        let t = Tech::default();
+        let p1 = t.avg_power_w(1000.0, 100);
+        let p2 = t.avg_power_w(1000.0, 200);
+        assert!((p1 / p2 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,197 @@
+//! Toggle ledgers: the simulation analogue of back-annotated switching
+//! activity (SAIF).
+//!
+//! A [`ToggleLedger`] tracks a set of named register/wire groups. Each group
+//! remembers the last word latched into it; writing a new word XORs against
+//! the previous one and accumulates the popcount — the exact number of
+//! 0↔1 transitions a physical register bank of that width would make.
+
+use std::collections::BTreeMap;
+
+/// One named register/wire group (e.g. "tx_reg", "mac_operand_a").
+#[derive(Debug, Clone, Default)]
+pub struct ToggleGroup {
+    /// Last value latched (LSB-packed words).
+    last: Vec<u64>,
+    /// Accumulated bit transitions.
+    pub toggles: u64,
+    /// Number of latch events (cycles the group was written).
+    pub writes: u64,
+    /// Width in bits (set on first write, checked after).
+    pub width: usize,
+}
+
+impl ToggleGroup {
+    /// Latch a new value expressed as packed u64 words; counts transitions
+    /// against the previous value. The first write establishes the width
+    /// and counts transitions from the all-zero reset state, matching how a
+    /// physical register bank leaves reset.
+    pub fn latch_words(&mut self, words: &[u64], width: usize) {
+        debug_assert!(words.len() * 64 >= width);
+        if self.last.len() != words.len() {
+            self.last = vec![0; words.len()];
+            self.width = width;
+        }
+        for (l, &w) in self.last.iter_mut().zip(words) {
+            self.toggles += (*l ^ w).count_ones() as u64;
+            *l = w;
+        }
+        self.writes += 1;
+    }
+
+    /// Latch a byte-lane value (convenience for flit-wide registers).
+    /// Allocation-free for widths up to 512 bits (covers every register in
+    /// the platform — hot-path requirement, EXPERIMENTS.md §Perf).
+    pub fn latch_bytes(&mut self, bytes: &[u8]) {
+        let nwords = bytes.len().div_ceil(8);
+        if nwords <= 8 {
+            let mut words = [0u64; 8];
+            for (i, &b) in bytes.iter().enumerate() {
+                words[i / 8] |= (b as u64) << ((i % 8) * 8);
+            }
+            self.latch_words(&words[..nwords], bytes.len() * 8);
+        } else {
+            let mut words = vec![0u64; nwords];
+            for (i, &b) in bytes.iter().enumerate() {
+                words[i / 8] |= (b as u64) << ((i % 8) * 8);
+            }
+            self.latch_words(&words, bytes.len() * 8);
+        }
+    }
+
+    /// Latch a scalar value of `width` bits.
+    pub fn latch_scalar(&mut self, v: u64, width: usize) {
+        self.latch_words(&[v], width);
+    }
+
+    /// Mean toggles per write.
+    pub fn activity(&self) -> f64 {
+        if self.writes == 0 {
+            0.0
+        } else {
+            self.toggles as f64 / self.writes as f64
+        }
+    }
+}
+
+/// A collection of named toggle groups.
+#[derive(Debug, Clone, Default)]
+pub struct ToggleLedger {
+    groups: BTreeMap<String, ToggleGroup>,
+}
+
+impl ToggleLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create a group.
+    pub fn group(&mut self, name: &str) -> &mut ToggleGroup {
+        self.groups.entry(name.to_string()).or_default()
+    }
+
+    /// Read-only lookup.
+    pub fn get(&self, name: &str) -> Option<&ToggleGroup> {
+        self.groups.get(name)
+    }
+
+    /// Total toggles across all groups.
+    pub fn total_toggles(&self) -> u64 {
+        self.groups.values().map(|g| g.toggles).sum()
+    }
+
+    /// Total toggles across groups whose name starts with `prefix`.
+    pub fn toggles_with_prefix(&self, prefix: &str) -> u64 {
+        self.groups
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, g)| g.toggles)
+            .sum()
+    }
+
+    /// Iterate (name, group).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &ToggleGroup)> {
+        self.groups.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Merge counts from another ledger (group-wise).
+    pub fn merge(&mut self, other: &ToggleLedger) {
+        for (name, g) in &other.groups {
+            let dst = self.groups.entry(name.clone()).or_default();
+            dst.toggles += g.toggles;
+            dst.writes += g.writes;
+            if dst.width == 0 {
+                dst.width = g.width;
+            }
+        }
+    }
+
+    /// Reset all counters, keeping last-values (steady-state measurement
+    /// after a warm-up phase).
+    pub fn reset_counts(&mut self) {
+        for g in self.groups.values_mut() {
+            g.toggles = 0;
+            g.writes = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_exact_transitions() {
+        let mut g = ToggleGroup::default();
+        g.latch_scalar(0b1010, 4); // from reset 0000: 2 toggles
+        g.latch_scalar(0b0101, 4); // all 4 flip
+        g.latch_scalar(0b0101, 4); // none flip
+        assert_eq!(g.toggles, 6);
+        assert_eq!(g.writes, 3);
+        assert!((g.activity() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn byte_lane_latching_matches_scalar() {
+        let mut a = ToggleGroup::default();
+        let mut b = ToggleGroup::default();
+        a.latch_bytes(&[0xFF, 0x00]);
+        a.latch_bytes(&[0x0F, 0xF0]);
+        b.latch_scalar(0x00FF, 16);
+        b.latch_scalar(0xF00F, 16);
+        assert_eq!(a.toggles, b.toggles);
+    }
+
+    #[test]
+    fn ledger_prefix_sums() {
+        let mut l = ToggleLedger::new();
+        l.group("link.in").latch_scalar(0xF, 4);
+        l.group("link.out").latch_scalar(0x3, 4);
+        l.group("mac").latch_scalar(0x1, 4);
+        assert_eq!(l.toggles_with_prefix("link."), 6);
+        assert_eq!(l.total_toggles(), 7);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = ToggleLedger::new();
+        a.group("x").latch_scalar(0xFF, 8);
+        let mut b = ToggleLedger::new();
+        b.group("x").latch_scalar(0x0F, 8);
+        b.group("y").latch_scalar(0x01, 8);
+        a.merge(&b);
+        assert_eq!(a.get("x").unwrap().toggles, 8 + 4);
+        assert_eq!(a.get("y").unwrap().toggles, 1);
+    }
+
+    #[test]
+    fn reset_counts_keeps_state() {
+        let mut l = ToggleLedger::new();
+        l.group("x").latch_scalar(0xFF, 8);
+        l.reset_counts();
+        assert_eq!(l.total_toggles(), 0);
+        // next latch counts from 0xFF, not from reset
+        l.group("x").latch_scalar(0xFF, 8);
+        assert_eq!(l.total_toggles(), 0);
+    }
+}

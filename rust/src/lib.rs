@@ -1,0 +1,63 @@
+//! Reproduction of "'1'-bit Count-based Sorting Unit to Reduce Link Power in
+//! DNN Accelerators" (Han et al., KTH, CS.AR 2026).
+//!
+//! The paper contributes a comparison-free, counting-sort-based *popcount
+//! sorting unit* (PSU) that reorders packet bytes by Hamming weight before
+//! they cross an on-chip link, cutting bit transitions (BT) and therefore
+//! dynamic link power, plus an *approximate* variant (APP-PSU) that buckets
+//! popcounts to shrink the sorter datapath.
+//!
+//! Because the paper's artifacts are 22 nm silicon, this crate rebuilds the
+//! entire evaluation stack as bit-accurate simulation (see DESIGN.md §2 for
+//! the substitution map):
+//!
+//! * [`hw`] — standard-cell area/capacitance models and toggle-counting
+//!   power accounting (the "commercial EDA tools" substitute).
+//! * [`psu`] — the sorting units: ACC-PSU, APP-PSU, and the Bitonic / CSN
+//!   baselines, each with behavioural, area, and activity models.
+//! * [`noc`] — 128-bit link with flit framing and BT ledger; multi-hop
+//!   extension.
+//! * [`pe`] / [`platform`] — the paper's Fig. 3 platform: an allocation
+//!   unit (PSU + transmitting units) feeding 16 LeNet conv/pool PEs.
+//! * [`workload`] — traffic and tensor generators for every experiment.
+//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); Python never runs at request time.
+//! * [`coordinator`] — experiment orchestration and the async serving loop.
+//! * [`experiments`] — one module per paper table/figure.
+
+pub mod area;
+pub mod benchutil;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod hw;
+pub mod noc;
+pub mod pe;
+pub mod platform;
+pub mod power;
+pub mod psu;
+pub mod report;
+pub mod runtime;
+pub mod wave;
+pub mod workload;
+
+/// The paper's element width W: 8-bit fixed point.
+pub const WIDTH: usize = 8;
+
+/// Bytes per flit on the 128-bit link.
+pub const FLIT_LANES: usize = 16;
+
+/// Flits per packet in the Table-I experiment.
+pub const PACKET_FLITS: usize = 4;
+
+/// Bytes per packet.
+pub const PACKET_BYTES: usize = FLIT_LANES * PACKET_FLITS;
+
+/// Number of processing elements in the Fig. 3 platform.
+pub const NUM_PES: usize = 16;
+
+/// Popcount of a byte (reference helper used across the crate).
+#[inline]
+pub fn popcount8(v: u8) -> u8 {
+    v.count_ones() as u8
+}

@@ -1,0 +1,217 @@
+//! `repro` CLI: regenerate every table and figure of the paper, run the
+//! ablations and the end-to-end driver, or start the sort service demo.
+//!
+//! Std-only argument parsing (the build is offline; no CLI crate is
+//! vendored). Usage:
+//!
+//! ```text
+//! repro <command> [--config FILE] [--seed N] [command options]
+//!
+//! commands:
+//!   table1 [--packets N]    Table I: BT per flit, four ordering strategies
+//!   fig2                    ordered-flit snapshot after the APP-PSU
+//!   fig4 [--n K]            APP-PSU cycle-trace waveforms
+//!   fig5                    area breakdown of the four sorter designs
+//!   fig6|fig7 [--vectors N] DNN-workload power experiment
+//!   ablate-k [--packets N] [--ks 2,3,4,6,9]
+//!   multihop                multi-hop NoC scaling
+//!   e2e                     end-to-end three-layer driver (needs artifacts)
+//!   serve [--requests N]    threaded sort-service demo over the artifact
+//!   all                     everything above, in paper order
+//! ```
+
+use anyhow::{bail, Result};
+
+use repro::config::Config;
+use repro::experiments::{ablate, e2e, fig2, fig4, fig5, fig67, layers, multihop, table1};
+use repro::hw::Tech;
+use repro::runtime::Runtime;
+use repro::workload::TrafficModel;
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut argv = std::env::args().skip(1);
+        let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = Vec::new();
+        let rest: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let k = rest[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {}", rest[i]))?;
+            let v = rest
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("--{k} needs a value"))?;
+            flags.push((k.to_string(), v.clone()));
+            i += 2;
+        }
+        Ok(Self { cmd, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad number {v}")))
+            .transpose()
+    }
+
+    fn get_usize_list(&self, key: &str) -> Result<Option<Vec<usize>>> {
+        self.get(key)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| {
+                        s.trim()
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("--{key}: bad list {v}"))
+                    })
+                    .collect()
+            })
+            .transpose()
+    }
+}
+
+const HELP: &str = "repro — reproduction of \"'1'-bit Count-based Sorting Unit to \
+Reduce Link Power in DNN Accelerators\"
+
+usage: repro <command> [--config FILE] [--seed N] [options]
+
+commands:
+  table1 [--packets N]      Table I: BT/flit under four ordering strategies
+  fig2                      Fig. 2: ordered-flit snapshot (APP-PSU)
+  fig4 [--n K]              Fig. 4: APP-PSU cycle-trace waveforms
+  fig5                      Fig. 5: area breakdown, 4 designs x {25,49}
+  fig6 | fig7 [--vectors N] Fig. 6/7 + §IV-B4: DNN-workload power
+  ablate-k [--ks 2,3,4,6,9] [--packets N]  bucket-count frontier
+  multihop                  §IV-C3: multi-hop link-energy scaling
+  layers                    §IV-C4 future work: ResNet/Transformer layer sweep
+  e2e                       end-to-end 3-layer driver (needs `make artifacts`)
+  serve [--requests N]      dynamic-batching sort service demo
+  all                       everything, in paper order
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let mut cfg = match args.get("config") {
+        Some(p) => Config::from_toml_file(p)?,
+        None => Config::default(),
+    };
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse()?;
+    }
+    let tech = Tech::default();
+    let model = TrafficModel::default();
+
+    match args.cmd.as_str() {
+        "table1" => {
+            let n = args.get_usize("packets")?.unwrap_or(cfg.table1_packets);
+            println!("{}", table1::run(&model, n, cfg.seed).render());
+        }
+        "fig2" => println!("{}", fig2::run(&model, cfg.seed).render()),
+        "fig4" => {
+            let n = args.get_usize("n")?.unwrap_or(25);
+            println!("{}", fig4::render(&fig4::run(n, cfg.seed)));
+        }
+        "fig5" => println!("{}", fig5::run(&cfg.kernel_sizes, &tech).render()),
+        "fig6" | "fig7" => {
+            let n = args.get_usize("vectors")?.unwrap_or(cfg.test_vectors);
+            println!("{}", fig67::run(n, cfg.buckets, cfg.seed, &tech).render(&tech));
+        }
+        "ablate-k" => {
+            let ks = args.get_usize_list("ks")?.unwrap_or(vec![2, 3, 4, 6, 9]);
+            let n = args.get_usize("packets")?.unwrap_or(4096);
+            let pts = ablate::run(&ks, &model, n, cfg.seed, &tech);
+            println!("{}", ablate::render(&pts));
+        }
+        "multihop" => {
+            let pts = multihop::run(&cfg.hops, &model, 1024, cfg.seed, &tech);
+            println!("{}", multihop::render(&pts));
+        }
+        "layers" => {
+            let rows = layers::run(&layers::default_shapes(), 2048, cfg.seed, &tech);
+            println!("{}", layers::render(&rows));
+        }
+        "e2e" => {
+            let rt = Runtime::load(&cfg.artifacts_dir)?;
+            println!("{}", e2e::run(&rt, cfg.seed, &tech)?.render());
+        }
+        "serve" => {
+            let n = args.get_usize("requests")?.unwrap_or(1024);
+            serve_demo(&cfg, n)?;
+        }
+        "all" => {
+            println!("{}", table1::run(&model, cfg.table1_packets, cfg.seed).render());
+            println!("{}", fig2::run(&model, cfg.seed).render());
+            println!("{}", fig4::render(&fig4::run(25, cfg.seed)));
+            println!("{}", fig5::run(&cfg.kernel_sizes, &tech).render());
+            println!(
+                "{}",
+                fig67::run(cfg.test_vectors, cfg.buckets, cfg.seed, &tech).render(&tech)
+            );
+            let pts = ablate::run(&[2, 3, 4, 6, 9], &model, 4096, cfg.seed, &tech);
+            println!("{}", ablate::render(&pts));
+            let pts = multihop::run(&cfg.hops, &model, 1024, cfg.seed, &tech);
+            println!("{}", multihop::render(&pts));
+            let rows = layers::run(&layers::default_shapes(), 2048, cfg.seed, &tech);
+            println!("{}", layers::render(&rows));
+            match Runtime::load(&cfg.artifacts_dir) {
+                Ok(rt) => println!("{}", e2e::run(&rt, cfg.seed, &tech)?.render()),
+                Err(e) => println!("(skipping e2e: {e})"),
+            }
+        }
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        other => bail!("unknown command {other:?}\n\n{HELP}"),
+    }
+    Ok(())
+}
+
+/// Threaded sort-service demo: N concurrent clients, dynamic batching onto
+/// the AOT `psu_sort` artifact, throughput + batching-efficiency report.
+fn serve_demo(cfg: &Config, n_requests: usize) -> Result<()> {
+    use repro::coordinator::SortService;
+    use repro::runtime::PACKET_ELEMS;
+    use repro::workload::Rng;
+    use std::time::{Duration, Instant};
+
+    let svc = SortService::spawn(cfg.artifacts_dir.clone(), Duration::from_millis(2))?;
+    let mut rng = Rng::new(cfg.seed);
+    let packets: Vec<[u8; PACKET_ELEMS]> = (0..n_requests)
+        .map(|_| {
+            let mut p = [0u8; PACKET_ELEMS];
+            for b in p.iter_mut() {
+                *b = rng.next_u8();
+            }
+            p
+        })
+        .collect();
+
+    let start = Instant::now();
+    let clients = 8;
+    let chunk = n_requests.div_ceil(clients);
+    std::thread::scope(|s| {
+        for c in packets.chunks(chunk) {
+            let svc = svc.clone();
+            s.spawn(move || svc.sort_many(c).expect("sort"));
+        }
+    });
+    let dt = start.elapsed();
+    println!(
+        "served {} sort requests in {:.1} ms ({:.0} req/s), {} XLA batches, \
+         mean batch {:.1}, max batch {}",
+        n_requests,
+        dt.as_secs_f64() * 1e3,
+        n_requests as f64 / dt.as_secs_f64(),
+        svc.metrics.batches.load(std::sync::atomic::Ordering::Relaxed),
+        svc.metrics.mean_batch(),
+        svc.metrics.max_batch.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    Ok(())
+}

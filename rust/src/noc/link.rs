@@ -1,0 +1,168 @@
+//! The 128-bit link model.
+//!
+//! A link is a transmission register driving 128 wire lanes. Every flit
+//! latched into the TX register toggles exactly the bits that differ from
+//! the previous flit; the paper extracts "the switching power of the
+//! transmission registers as a proxy for link power" (§IV-B4), so this
+//! register's toggle ledger *is* the link-related power measurement.
+
+use crate::hw::{Tech, ToggleGroup};
+use crate::FLIT_LANES;
+
+use super::packet::Packet;
+
+/// A point-to-point on-chip link with BT accounting.
+#[derive(Debug, Clone)]
+pub struct Link {
+    /// Human-readable name (e.g. "pe3.input").
+    pub name: String,
+    /// Transmission register (one per link end; we model the driver end).
+    tx_reg: ToggleGroup,
+    /// Flits transmitted.
+    pub flits_sent: u64,
+    /// Lanes (bytes) per flit.
+    pub lanes: usize,
+}
+
+impl Link {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            tx_reg: ToggleGroup::default(),
+            flits_sent: 0,
+            lanes: FLIT_LANES,
+        }
+    }
+
+    /// Transmit one flit; returns the bit transitions this flit caused.
+    pub fn send_flit(&mut self, flit: &[u8]) -> u64 {
+        debug_assert_eq!(flit.len(), self.lanes);
+        let before = self.tx_reg.toggles;
+        self.tx_reg.latch_bytes(flit);
+        self.flits_sent += 1;
+        self.tx_reg.toggles - before
+    }
+
+    /// Transmit a whole packet; returns the bit transitions it caused
+    /// (including the boundary transition from the previous traffic).
+    pub fn send_packet(&mut self, packet: &Packet) -> u64 {
+        packet.flits.iter().map(|f| self.send_flit(f)).sum()
+    }
+
+    /// Transmit one *transfer*: the transmitting unit parallel-loads the
+    /// serializer with the first flit (no shift-path switching) and then
+    /// shifts the remaining flits out, so only the packet's internal flit
+    /// boundaries toggle the TX register. This is the platform's link
+    /// semantics (windows are independent transfers; the link idles
+    /// between them).
+    pub fn send_transfer(&mut self, packet: &Packet) -> u64 {
+        let mut it = packet.flits.iter();
+        if let Some(first) = it.next() {
+            // parallel load: overwrite state without counting
+            let before = self.tx_reg.toggles;
+            self.tx_reg.latch_bytes(first);
+            self.tx_reg.toggles = before;
+            self.flits_sent += 1;
+        }
+        it.map(|f| self.send_flit(f)).sum()
+    }
+
+    /// Transmit a raw byte stream (framed into flits).
+    pub fn send_bytes(&mut self, bytes: &[u8]) -> u64 {
+        self.send_packet(&Packet::from_bytes(bytes, self.lanes))
+    }
+
+    /// Total bit transitions so far.
+    pub fn total_bt(&self) -> u64 {
+        self.tx_reg.toggles
+    }
+
+    /// Mean BT per flit.
+    pub fn bt_per_flit(&self) -> f64 {
+        if self.flits_sent == 0 {
+            0.0
+        } else {
+            self.tx_reg.toggles as f64 / self.flits_sent as f64
+        }
+    }
+
+    /// Link-related energy so far: every TX-register bit toggle re-drives
+    /// one wire lane of `link_bit_cap_ff`, plus a data-independent clock
+    /// load per flit event.
+    pub fn energy_j(&self, tech: &Tech) -> f64 {
+        self.tx_reg.toggles as f64 * tech.link_toggle_energy_j()
+            + tech.toggle_energy_j(self.flits_sent as f64 * tech.tx_flit_cap_ff)
+    }
+
+    /// Link-related average power over `cycles` (one flit per cycle at
+    /// capacity; callers pass the platform's actual cycle count).
+    pub fn avg_power_w(&self, tech: &Tech, cycles: u64) -> f64 {
+        if cycles == 0 {
+            return 0.0;
+        }
+        self.energy_j(tech) / (cycles as f64 / tech.freq_hz)
+    }
+
+    /// Reset counters but keep line state (steady-state measurement).
+    pub fn reset_counts(&mut self) {
+        self.tx_reg.toggles = 0;
+        self.tx_reg.writes = 0;
+        self.flits_sent = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_transitions_between_flits() {
+        let mut link = Link::new("t");
+        assert_eq!(link.send_flit(&[0x00; 16]), 0); // from reset
+        assert_eq!(link.send_flit(&[0xFF; 16]), 128);
+        assert_eq!(link.send_flit(&[0xFF; 16]), 0);
+        assert_eq!(link.send_flit(&[0x0F; 16]), 64);
+        assert_eq!(link.total_bt(), 192);
+        assert_eq!(link.flits_sent, 4);
+    }
+
+    #[test]
+    fn packet_boundary_transitions_counted() {
+        // two identical packets: the second costs zero BT
+        let mut link = Link::new("t");
+        let p = Packet::from_bytes(&[0x5Au8; 64], 16);
+        let first = link.send_packet(&p);
+        let second = link.send_packet(&p);
+        assert_eq!(first, 64); // 0 -> 0x5A per lane (4 bits x 16 lanes)
+        assert_eq!(second, 0);
+    }
+
+    #[test]
+    fn energy_proportional_to_bt() {
+        let tech = Tech::default();
+        let mut link = Link::new("t");
+        link.send_flit(&[0xFF; 16]);
+        let e1 = link.energy_j(&tech);
+        link.send_flit(&[0x00; 16]);
+        let e2 = link.energy_j(&tech);
+        assert!((e2 / e1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bt_per_flit_average() {
+        let mut link = Link::new("t");
+        link.send_flit(&[0x00; 16]);
+        link.send_flit(&[0xFF; 16]);
+        assert!((link.bt_per_flit() - 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_keeps_line_state() {
+        let mut link = Link::new("t");
+        link.send_flit(&[0xFF; 16]);
+        link.reset_counts();
+        assert_eq!(link.total_bt(), 0);
+        // line still at 0xFF: resending it costs nothing
+        assert_eq!(link.send_flit(&[0xFF; 16]), 0);
+    }
+}

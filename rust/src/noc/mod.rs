@@ -1,0 +1,17 @@
+//! On-chip interconnect models.
+//!
+//! * [`link`] — the 128-bit point-to-point link of the paper's platform:
+//!   flit framing, a transmission register whose switching activity is the
+//!   link-power proxy (paper §IV-B4), and an exact bit-transition ledger.
+//! * [`packet`] — packet framing helpers (bytes ↔ flits).
+//! * [`multihop`] — router-to-router multi-hop paths (the paper's §IV-C3
+//!   discussion, built out as a real model): BT savings accumulate at each
+//!   hop because every traversal re-drives the wires.
+
+pub mod link;
+pub mod multihop;
+pub mod packet;
+
+pub use link::Link;
+pub use multihop::MultiHopPath;
+pub use packet::{bytes_to_flits, Packet};

@@ -1,0 +1,113 @@
+//! Packet and flit framing.
+
+use crate::{FLIT_LANES, PACKET_BYTES};
+#[cfg(test)]
+use crate::PACKET_FLITS;
+
+/// A packet: a fixed number of flits, each a byte-lane vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Packet {
+    pub flits: Vec<Vec<u8>>,
+}
+
+impl Packet {
+    /// Frame a byte stream into flits of `lanes` bytes, zero-padding the
+    /// tail flit (idle lanes hold their previous value in hardware; zero
+    /// padding is the conservative choice and is applied identically to
+    /// every ordering strategy).
+    pub fn from_bytes(bytes: &[u8], lanes: usize) -> Self {
+        assert!(lanes > 0);
+        let mut flits = Vec::with_capacity(bytes.len().div_ceil(lanes));
+        for chunk in bytes.chunks(lanes) {
+            let mut flit = chunk.to_vec();
+            flit.resize(lanes, 0);
+            flits.push(flit);
+        }
+        Self { flits }
+    }
+
+    /// Standard Table-I framing: 4 flits × 16 lanes.
+    pub fn standard(bytes: &[u8]) -> Self {
+        assert_eq!(bytes.len(), PACKET_BYTES);
+        Self::from_bytes(bytes, FLIT_LANES)
+    }
+
+    /// Lane-major (serpentine) framing: consecutive stream bytes ride the
+    /// *same lane* in consecutive flits — byte `j` lands in flit `j % F`,
+    /// lane `j / F`. This is the transmitting-unit mapping the platform
+    /// uses for sorted transfers: adjacent sorted elements (nearly equal
+    /// popcounts) stay on one lane, so per-lane switching follows the
+    /// sorted popcount gradient instead of jumping across it.
+    pub fn from_bytes_lane_major(bytes: &[u8], lanes: usize) -> Self {
+        assert!(lanes > 0);
+        let nflits = bytes.len().div_ceil(lanes);
+        let mut flits = vec![vec![0u8; lanes]; nflits];
+        for (j, &b) in bytes.iter().enumerate() {
+            flits[j % nflits][j / nflits] = b;
+        }
+        Self { flits }
+    }
+
+    pub fn num_flits(&self) -> usize {
+        self.flits.len()
+    }
+
+    /// Internal bit transitions (between consecutive flits of this packet).
+    pub fn internal_bt(&self) -> u64 {
+        self.flits
+            .windows(2)
+            .map(|w| {
+                w[0].iter()
+                    .zip(&w[1])
+                    .map(|(&a, &b)| (a ^ b).count_ones() as u64)
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+
+    /// Flatten back to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.flits.iter().flatten().copied().collect()
+    }
+}
+
+/// Frame a byte stream into standard flits without packet structure.
+pub fn bytes_to_flits(bytes: &[u8]) -> Vec<Vec<u8>> {
+    Packet::from_bytes(bytes, FLIT_LANES).flits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_framing_shape() {
+        let bytes: Vec<u8> = (0..PACKET_BYTES as u32).map(|i| i as u8).collect();
+        let p = Packet::standard(&bytes);
+        assert_eq!(p.num_flits(), PACKET_FLITS);
+        assert!(p.flits.iter().all(|f| f.len() == FLIT_LANES));
+        assert_eq!(p.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn tail_padding() {
+        let p = Packet::from_bytes(&[0xFF; 20], 16);
+        assert_eq!(p.num_flits(), 2);
+        assert_eq!(p.flits[1][4..], [0u8; 12]);
+    }
+
+    #[test]
+    fn internal_bt_counts_flit_boundaries() {
+        let mut bytes = vec![0u8; 64];
+        bytes[16..32].fill(0xFF); // flit 1 all ones
+        let p = Packet::standard(&bytes);
+        // 0->FF: 128, FF->0: 128, 0->0: 0
+        assert_eq!(p.internal_bt(), 256);
+    }
+
+    #[test]
+    fn identical_flits_zero_bt() {
+        let p = Packet::from_bytes(&[0xA5; 64], 16);
+        assert_eq!(p.internal_bt(), 0);
+    }
+}

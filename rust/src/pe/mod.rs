@@ -1,0 +1,195 @@
+//! Processing element: the int8 MAC datapath of the paper's Fig. 3
+//! platform (conv + pooling layers of LeNet-5).
+//!
+//! Bit-accurate: the PE consumes (input byte, offset-128 weight byte) pairs
+//! and accumulates `in · (w − 128)` in a 32-bit register, applying bias and
+//! ReLU at window end — integer exact, so any operand ordering produces an
+//! identical output (the order-insensitivity the PSU exploits).
+//!
+//! Power model (architectural, activity-proportional — DESIGN.md §2):
+//! * operand registers (8+8 bits) and the accumulator register (32 bits)
+//!   count exact toggles;
+//! * the combinational multiplier/adder energy per cycle scales with the
+//!   operand-register toggle count of that cycle (switching in an array
+//!   multiplier is driven by operand bit flips), with per-cell capacitance
+//!   from the MAC's gate inventory.
+
+use crate::hw::{CellClass, Inventory, Stage, Tech, ToggleGroup};
+
+/// Gate inventory of one PE MAC datapath (8×8 multiplier + 32-bit
+/// accumulator + control), for area/cap accounting.
+pub fn mac_inventory() -> Inventory {
+    let mut inv = Inventory::new();
+    // 8x8 Baugh-Wooley array multiplier: ~64 AND + 56 FA
+    inv.add(Stage::Control, CellClass::Nand2, 64);
+    inv.add(Stage::Control, CellClass::FullAdder, 56);
+    // 32-bit accumulator adder + register
+    inv.add(Stage::Control, CellClass::FullAdder, 32);
+    inv.add(Stage::Control, CellClass::Dff, 32 + 16); // acc + operand regs
+    // control FSM / mux overhead
+    inv.add(Stage::Control, CellClass::Mux2, 24);
+    inv.add(Stage::Control, CellClass::Nand2, 40);
+    inv
+}
+
+/// Order-insensitive per-cycle capacitance of a PE (clock tree, control,
+/// accumulator precharge) in fF — the share of PE power that data ordering
+/// cannot touch. Sets the ceiling on the non-link reduction (paper Fig. 6
+/// shows the non-link share of the gain is small).
+pub const PE_FIXED_CAP_PER_CYCLE_FF: f64 = 254.0;
+
+/// One processing element.
+///
+/// The operand and accumulator registers are owned `ToggleGroup`s (not a
+/// name-keyed ledger): `conv_window` runs once per MAC cycle, and the map
+/// lookup + allocation of a ledger was the platform's top hotspot
+/// (EXPERIMENTS.md §Perf).
+#[derive(Debug)]
+pub struct Pe {
+    pub id: usize,
+    /// Operand register bank (input byte || weight byte, 16 bits).
+    pub operand: ToggleGroup,
+    /// 32-bit accumulator register.
+    pub acc_reg: ToggleGroup,
+    /// MAC operations executed.
+    pub macs: u64,
+    /// Cycles consumed (1 MAC per cycle).
+    pub cycles: u64,
+    /// Combinational switched capacitance accumulated (fF·toggles).
+    comb_cap_ff: f64,
+    /// Per-operand-toggle combinational capacitance (from the MAC inventory,
+    /// normalized to full 16-bit operand activity).
+    cap_per_operand_toggle: f64,
+}
+
+impl Pe {
+    pub fn new(id: usize) -> Self {
+        let comb_cap: f64 = mac_inventory()
+            .iter()
+            .filter(|(_, c, _)| *c != CellClass::Dff)
+            .map(|(_, c, n)| c.cap_ff() * n as f64)
+            .sum();
+        Self {
+            id,
+            operand: ToggleGroup::default(),
+            acc_reg: ToggleGroup::default(),
+            macs: 0,
+            cycles: 0,
+            // full activity = all 16 operand bits toggling
+            cap_per_operand_toggle: comb_cap / 16.0,
+            comb_cap_ff: 0.0,
+        }
+    }
+
+    /// Execute one window of `K` MACs: returns relu(bias + Σ in·(w−128)).
+    /// `inputs` and `weights` must be permuted consistently (pairs intact).
+    pub fn conv_window(&mut self, inputs: &[u8], weights: &[u8], bias: i32) -> i32 {
+        debug_assert_eq!(inputs.len(), weights.len());
+        let mut acc = bias;
+        for (&i, &w) in inputs.iter().zip(weights) {
+            // operand registers latch both bytes each cycle
+            let before = self.operand.toggles;
+            self.operand.latch_scalar(i as u64 | ((w as u64) << 8), 16);
+            let operand_toggles = self.operand.toggles - before;
+            self.comb_cap_ff += operand_toggles as f64 * self.cap_per_operand_toggle;
+
+            acc += i as i32 * (w as i32 - 128);
+            self.acc_reg.latch_scalar(acc as u32 as u64, 32);
+            self.macs += 1;
+            self.cycles += 1;
+        }
+        acc.max(0)
+    }
+
+    /// 2×2 average pooling of four conv outputs (shift-based divider).
+    pub fn pool4(&mut self, v: [i32; 4]) -> i32 {
+        let s = v[0] + v[1] + v[2] + v[3];
+        self.acc_reg.latch_scalar(s as u32 as u64, 32);
+        self.cycles += 1;
+        s >> 2
+    }
+
+    /// Non-link energy of this PE so far: register toggles + combinational
+    /// MAC switching, scaled by the PE wire/clock-load factor.
+    pub fn energy_j(&self, tech: &Tech) -> f64 {
+        let data_dependent =
+            self.reg_toggles() as f64 * CellClass::Dff.cap_ff() + self.comb_cap_ff;
+        let fixed = self.cycles as f64 * PE_FIXED_CAP_PER_CYCLE_FF;
+        tech.toggle_energy_j((data_dependent + fixed) * tech.pe_cap_scale)
+    }
+
+    /// Total architectural-register toggles.
+    pub fn reg_toggles(&self) -> u64 {
+        self.operand.toggles + self.acc_reg.toggles
+    }
+
+    /// Reset activity counters (keep register state).
+    pub fn reset_counts(&mut self) {
+        self.operand.toggles = 0;
+        self.operand.writes = 0;
+        self.acc_reg.toggles = 0;
+        self.acc_reg.writes = 0;
+        self.comb_cap_ff = 0.0;
+        self.macs = 0;
+        self.cycles = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_window_matches_scalar_math() {
+        let mut pe = Pe::new(0);
+        let inputs = [10u8, 20, 30];
+        let weights = [130u8, 126, 128]; // signed +2, -2, 0
+        // 10*2 + 20*(-2) + 30*0 + bias 5 = -15 -> relu 0
+        assert_eq!(pe.conv_window(&inputs, &weights, 5), 0);
+        // 10*2 + 20*(-2) + 30*0 + bias 100 = 80
+        assert_eq!(pe.conv_window(&inputs, &weights, 100), 80);
+        assert_eq!(pe.macs, 6);
+    }
+
+    #[test]
+    fn order_insensitive_output() {
+        let mut pe = Pe::new(0);
+        let inputs = [1u8, 2, 3, 4, 5];
+        let weights = [129u8, 130, 131, 132, 133];
+        let a = pe.conv_window(&inputs, &weights, 7);
+        // reversed pairs
+        let ri: Vec<u8> = inputs.iter().rev().copied().collect();
+        let rw: Vec<u8> = weights.iter().rev().copied().collect();
+        let b = pe.conv_window(&ri, &rw, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pool4_floor_average() {
+        let mut pe = Pe::new(0);
+        assert_eq!(pe.pool4([4, 4, 4, 4]), 4);
+        assert_eq!(pe.pool4([1, 2, 3, 4]), 2); // 10 >> 2
+        assert_eq!(pe.pool4([0, 0, 0, 3]), 0);
+    }
+
+    #[test]
+    fn energy_increases_with_activity() {
+        let tech = Tech::default();
+        let mut hot = Pe::new(0);
+        let mut cold = Pe::new(1);
+        for i in 0..100u32 {
+            // alternating operands toggle heavily
+            let v = if i % 2 == 0 { 0xFF } else { 0x00 };
+            hot.conv_window(&[v], &[v], 0);
+            cold.conv_window(&[0x55], &[0x55], 0);
+        }
+        assert!(hot.energy_j(&tech) > cold.energy_j(&tech));
+    }
+
+    #[test]
+    fn mac_inventory_nonempty() {
+        let inv = mac_inventory();
+        assert!(inv.cells() > 100);
+        assert!(inv.raw_cap_ff() > 0.0);
+    }
+}

@@ -1,0 +1,322 @@
+//! The paper's Fig. 3 evaluation platform: a data-allocation unit (sorting
+//! unit + transmitting units) feeding 16 PEs that implement LeNet-5's first
+//! convolution and pooling layers.
+//!
+//! The PE array is **weight-stationary**: each test vector's quantized
+//! weights load once per PE over the weight link (traffic dwarfed by the
+//! input stream), and each PE pairs resident taps with arriving inputs
+//! through the sorted-index sideband the PSU emits (Fig. 1's index output;
+//! its switching is part of the PSU overhead energy). Per window the
+//! allocation unit:
+//! 1. extracts the 5×5 = 25-byte input window (the PSU's sort width K);
+//! 2. runs the sorting unit once to obtain sorted indices (or bypasses);
+//! 3. the transmitting unit permutes the input bytes and streams them over
+//!    that PE's input link (2 flits per 25-byte window, lane-major fill);
+//! 4. the PE MACs inputs against index-addressed resident taps —
+//!    order-insensitive accumulation makes the result bit-identical to the
+//!    unsorted reference.
+//!
+//! All link BT, TX-register switching (the link-power proxy), PE register
+//! and MAC activity, and PSU overhead activity are accounted during the
+//! run; [`RunReport`] carries the raw ledgers the Fig. 6/7 experiments
+//! aggregate.
+
+use crate::hw::{Tech, ToggleLedger};
+use crate::noc::{Link, Packet};
+use crate::pe::Pe;
+use crate::psu::SorterUnit;
+use crate::workload::lenet::{
+    self, QuantWeights, K, OH, OUT_MAPS, OW,
+};
+use crate::workload::digits::IMG;
+use crate::NUM_PES;
+
+/// Ordering configuration of the platform run.
+pub enum PlatformOrdering {
+    /// Non-optimized baseline: bypass path, raster tap order.
+    Bypass,
+    /// Sort each window's (input, weight) pairs with this unit (K = 25).
+    Sorted(Box<dyn SorterUnit>),
+}
+
+/// The simulated platform.
+pub struct Platform {
+    pub ordering: PlatformOrdering,
+    pub pes: Vec<Pe>,
+    pub input_links: Vec<Link>,
+    pub weight_links: Vec<Link>,
+    /// PSU architectural-register activity (overhead power).
+    pub psu_ledger: ToggleLedger,
+    /// Sort operations performed.
+    pub sorts: u64,
+    pub tech: Tech,
+}
+
+/// Aggregated results of one or more images.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Pooled feature maps per image: [img][map][y][x].
+    pub pooled: Vec<Vec<Vec<Vec<i32>>>>,
+    /// Total BT on input links / weight links.
+    pub input_bt: u64,
+    pub weight_bt: u64,
+    /// Flits sent per link class.
+    pub input_flits: u64,
+    pub weight_flits: u64,
+    /// Total platform cycles (max over PEs; links run in parallel).
+    pub cycles: u64,
+    /// Energies in joules.
+    pub link_energy_j: f64,
+    pub input_link_energy_j: f64,
+    pub weight_link_energy_j: f64,
+    pub pe_energy_j: f64,
+    pub psu_energy_j: f64,
+}
+
+impl RunReport {
+    /// Mean BT per 128-bit flit, input side.
+    pub fn input_bt_per_flit(&self) -> f64 {
+        self.input_bt as f64 / self.input_flits.max(1) as f64
+    }
+
+    pub fn weight_bt_per_flit(&self) -> f64 {
+        self.weight_bt as f64 / self.weight_flits.max(1) as f64
+    }
+
+    /// Link-related power in watts (TX-register switching proxy).
+    pub fn link_power_w(&self, tech: &Tech) -> f64 {
+        self.link_energy_j / (self.cycles.max(1) as f64 / tech.freq_hz)
+    }
+
+    /// Input-link power only (the data path the sorting unit targets).
+    pub fn input_link_power_w(&self, tech: &Tech) -> f64 {
+        self.input_link_energy_j / (self.cycles.max(1) as f64 / tech.freq_hz)
+    }
+
+    /// Non-link PE power in watts.
+    pub fn pe_power_w(&self, tech: &Tech) -> f64 {
+        self.pe_energy_j / (self.cycles.max(1) as f64 / tech.freq_hz)
+    }
+
+    /// PSU overhead power in watts.
+    pub fn psu_power_w(&self, tech: &Tech) -> f64 {
+        self.psu_energy_j / (self.cycles.max(1) as f64 / tech.freq_hz)
+    }
+
+    /// PE-level total power: links + PEs + PSU overhead.
+    pub fn total_power_w(&self, tech: &Tech) -> f64 {
+        self.link_power_w(tech) + self.pe_power_w(tech) + self.psu_power_w(tech)
+    }
+}
+
+impl Platform {
+    pub fn new(ordering: PlatformOrdering) -> Self {
+        Self {
+            ordering,
+            pes: (0..NUM_PES).map(Pe::new).collect(),
+            input_links: (0..NUM_PES).map(|i| Link::new(format!("pe{i}.in"))).collect(),
+            weight_links: (0..NUM_PES).map(|i| Link::new(format!("pe{i}.w"))).collect(),
+            psu_ledger: ToggleLedger::new(),
+            sorts: 0,
+            tech: Tech::default(),
+        }
+    }
+
+    /// PSU combinational capacitance switched per sort: an activity factor
+    /// times the unit's total gate capacitance (wire + clock load folded
+    /// into the factor and the global `cap_scale`).
+    fn psu_comb_cap_per_sort(sorter: &dyn SorterUnit, alpha: f64) -> f64 {
+        sorter.inventory().raw_cap_ff() * alpha
+    }
+
+    /// Run one image through conv1 + pool; returns pooled maps.
+    pub fn run_image(
+        &mut self,
+        img: &[[u8; IMG]; IMG],
+        weights: &QuantWeights,
+    ) -> Vec<Vec<Vec<i32>>> {
+        let mut conv = vec![vec![vec![0i32; OW]; OH]; OUT_MAPS];
+        for pe_id in 0..NUM_PES {
+            // weight-stationary: load this vector's taps once per PE
+            for m in 0..OUT_MAPS {
+                self.weight_links[pe_id]
+                    .send_transfer(&Packet::from_bytes_lane_major(&weights.bytes[m], 16));
+            }
+            for &(oy, ox) in &lenet::windows_for_pe(pe_id, NUM_PES) {
+                let win = lenet::window(img, oy, ox);
+                // 1-2. sorted indices (or identity)
+                let idx: Vec<u16> = match &self.ordering {
+                    PlatformOrdering::Bypass => (0..K as u16).collect(),
+                    PlatformOrdering::Sorted(s) => {
+                        s.record_activity(&win, &mut self.psu_ledger);
+                        self.sorts += 1;
+                        s.sort_indices(&win)
+                    }
+                };
+                // 3. transmit permuted input window once per window; the
+                //    transmitting unit fills lanes serpentine (lane-major)
+                //    so adjacent sorted elements ride the same lane
+                let sin: Vec<u8> = idx.iter().map(|&i| win[i as usize]).collect();
+                self.input_links[pe_id]
+                    .send_transfer(&Packet::from_bytes_lane_major(&sin, 16));
+                // per output map: MAC against index-addressed resident taps
+                for m in 0..OUT_MAPS {
+                    let sw: Vec<u8> =
+                        idx.iter().map(|&i| weights.bytes[m][i as usize]).collect();
+                    let out =
+                        self.pes[pe_id].conv_window(&sin, &sw, weights.bias[m]);
+                    conv[m][oy][ox] = out;
+                }
+            }
+        }
+        // 4. pooling (2x2, handled by the PEs' pool datapath round-robin)
+        let mut pooled = vec![vec![vec![0i32; OW / 2]; OH / 2]; OUT_MAPS];
+        for m in 0..OUT_MAPS {
+            for y in 0..OH / 2 {
+                for x in 0..OW / 2 {
+                    let q = [
+                        conv[m][2 * y][2 * x],
+                        conv[m][2 * y][2 * x + 1],
+                        conv[m][2 * y + 1][2 * x],
+                        conv[m][2 * y + 1][2 * x + 1],
+                    ];
+                    let pe = (m * (OH / 2) * (OW / 2) + y * (OW / 2) + x) % NUM_PES;
+                    pooled[m][y][x] = self.pes[pe].pool4(q);
+                }
+            }
+        }
+        pooled
+    }
+
+    /// Run a batch and aggregate the report.
+    pub fn run_batch(
+        &mut self,
+        vectors: &[([[u8; IMG]; IMG], QuantWeights)],
+    ) -> RunReport {
+        let mut pooled = Vec::with_capacity(vectors.len());
+        for (img, w) in vectors {
+            pooled.push(self.run_image(img, w));
+        }
+        self.report(pooled)
+    }
+
+    fn report(&self, pooled: Vec<Vec<Vec<Vec<i32>>>>) -> RunReport {
+        let tech = &self.tech;
+        let input_bt: u64 = self.input_links.iter().map(|l| l.total_bt()).sum();
+        let weight_bt: u64 = self.weight_links.iter().map(|l| l.total_bt()).sum();
+        let input_flits: u64 = self.input_links.iter().map(|l| l.flits_sent).sum();
+        let weight_flits: u64 = self.weight_links.iter().map(|l| l.flits_sent).sum();
+        let input_link_energy_j: f64 =
+            self.input_links.iter().map(|l| l.energy_j(tech)).sum();
+        let weight_link_energy_j: f64 =
+            self.weight_links.iter().map(|l| l.energy_j(tech)).sum();
+        let link_energy_j = input_link_energy_j + weight_link_energy_j;
+        let pe_energy_j: f64 = self.pes.iter().map(|p| p.energy_j(tech)).sum();
+        // PSU overhead: per sort operation, the whole pipelined unit
+        // switches — an activity-scaled share of its combinational cap
+        // (including wire/clock load via `psu_alpha`) plus the measured
+        // architectural-register toggles.
+        let psu_energy_j = match &self.ordering {
+            PlatformOrdering::Bypass => 0.0,
+            PlatformOrdering::Sorted(s) => {
+                let reg = self.psu_ledger.total_toggles() as f64
+                    * crate::hw::CellClass::Dff.cap_ff();
+                let comb = Self::psu_comb_cap_per_sort(s.as_ref(), tech.psu_alpha)
+                    * self.sorts as f64;
+                tech.toggle_energy_j(reg + comb)
+            }
+        };
+        let cycles = self.pes.iter().map(|p| p.cycles).max().unwrap_or(0);
+        RunReport {
+            pooled,
+            input_bt,
+            weight_bt,
+            input_flits,
+            weight_flits,
+            cycles,
+            link_energy_j,
+            input_link_energy_j,
+            weight_link_energy_j,
+            pe_energy_j,
+            psu_energy_j,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::psu::{AccPsu, AppPsu, BucketMap};
+    use crate::workload::digits;
+
+    fn one_vector() -> ([[u8; IMG]; IMG], QuantWeights) {
+        (digits::render_digit(4, 21), QuantWeights::random(21))
+    }
+
+    #[test]
+    fn bypass_matches_reference_conv_pool() {
+        let (img, w) = one_vector();
+        let mut p = Platform::new(PlatformOrdering::Bypass);
+        let got = p.run_image(&img, &w);
+        let want = lenet::pool_reference(&lenet::conv_reference(&img, &w));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn sorted_outputs_bit_identical_to_bypass() {
+        // the paper's correctness premise: ordering never changes results
+        let (img, w) = one_vector();
+        let mut base = Platform::new(PlatformOrdering::Bypass);
+        let want = base.run_image(&img, &w);
+        for sorter in [
+            PlatformOrdering::Sorted(Box::new(AccPsu::new(K)) as Box<dyn SorterUnit>),
+            PlatformOrdering::Sorted(Box::new(AppPsu::new(K, BucketMap::paper_k4()))),
+        ] {
+            let mut p = Platform::new(sorter);
+            assert_eq!(p.run_image(&img, &w), want);
+        }
+    }
+
+    #[test]
+    fn sorting_reduces_input_link_bt() {
+        let vectors: Vec<_> = (0..4).map(|i| {
+            (digits::render_digit(i as u8, 33 + i as u64), QuantWeights::random(77 + i as u64))
+        }).collect();
+        let mut base = Platform::new(PlatformOrdering::Bypass);
+        let rb = base.run_batch(&vectors);
+        let mut acc = Platform::new(PlatformOrdering::Sorted(Box::new(AccPsu::new(K))));
+        let ra = acc.run_batch(&vectors);
+        assert!(
+            ra.input_bt < rb.input_bt,
+            "ACC {} should beat bypass {}",
+            ra.input_bt,
+            rb.input_bt
+        );
+        assert_eq!(ra.input_flits, rb.input_flits);
+    }
+
+    #[test]
+    fn psu_overhead_only_when_sorting() {
+        let (img, w) = one_vector();
+        let mut base = Platform::new(PlatformOrdering::Bypass);
+        base.run_image(&img, &w);
+        let rb = base.report(vec![]);
+        assert_eq!(rb.psu_energy_j, 0.0);
+        let mut acc = Platform::new(PlatformOrdering::Sorted(Box::new(AccPsu::new(K))));
+        acc.run_image(&img, &w);
+        let ra = acc.report(vec![]);
+        assert!(ra.psu_energy_j > 0.0);
+        assert_eq!(acc.sorts, 576);
+    }
+
+    #[test]
+    fn cycle_count_matches_mac_schedule() {
+        let (img, w) = one_vector();
+        let mut p = Platform::new(PlatformOrdering::Bypass);
+        p.run_image(&img, &w);
+        // 36 windows x 6 maps x 25 MACs = 5400 cycles + pooling share
+        let macs = 36 * 6 * 25;
+        let pool_ops = (6 * 12 * 12) / 16;
+        assert_eq!(p.pes[0].cycles as usize, macs + pool_ops);
+    }
+}

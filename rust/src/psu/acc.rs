@@ -1,0 +1,152 @@
+//! ACC-PSU: the Accurate Popcount-Sorting Unit (paper §III-A, adapted from
+//! Yang's comparison-free O(N) sorter).
+//!
+//! Three pipeline stages: popcount → prefix sum → index mapping. Keys are
+//! exact '1'-bit counts, so the counting core carries W+1 = 9 buckets.
+
+use crate::hw::pipeline::PipelineModel;
+use crate::hw::{Inventory, ToggleLedger};
+use crate::WIDTH;
+
+use super::counting::CountingCore;
+use super::popcount::PopcountUnit;
+use super::traits::SorterUnit;
+
+/// Accurate popcount-sorting unit over packets of `n` bytes.
+#[derive(Debug, Clone)]
+pub struct AccPsu {
+    popcount: PopcountUnit,
+    core: CountingCore,
+}
+
+impl AccPsu {
+    pub fn new(n: usize) -> Self {
+        Self {
+            popcount: PopcountUnit::new(n),
+            core: CountingCore::new(n, WIDTH + 1),
+        }
+    }
+
+    pub fn core(&self) -> &CountingCore {
+        &self.core
+    }
+}
+
+impl SorterUnit for AccPsu {
+    fn name(&self) -> &'static str {
+        "ACC-PSU"
+    }
+
+    fn n(&self) -> usize {
+        self.core.n
+    }
+
+    fn key(&self, v: u8) -> u8 {
+        v.count_ones() as u8
+    }
+
+    fn sort_indices(&self, values: &[u8]) -> Vec<u16> {
+        // key computation fused into the counting sort (no key vector)
+        self.core.sort_indices_by(values, |v| v.count_ones() as u8)
+    }
+
+    fn inventory(&self) -> Inventory {
+        let mut inv = self.popcount.inventory();
+        inv.merge(&self.core.inventory());
+        inv.merge(&self.pipeline().inventory());
+        inv
+    }
+
+    fn pipeline(&self) -> PipelineModel {
+        let n = self.n() as u64;
+        let keyw = self.core.key_bits() as u64;
+        let cntw = self.core.cnt_bits() as u64;
+        let b = self.core.b as u64;
+        // cut 1: keys after the popcount stage
+        // cut 2: start addresses + keys + ranks after the prefix-sum stage
+        PipelineModel::new(vec![n * keyw, b * cntw + n * keyw + n * cntw])
+    }
+
+    fn record_activity(&self, values: &[u8], ledger: &mut ToggleLedger) {
+        let keys = self.popcount.popcounts(values);
+        let idx = self.core.sort_indices(&keys);
+        ledger.group("psu.in").latch_bytes(values);
+        ledger.group("psu.key").latch_bytes(&keys);
+        ledger.group("psu.out").latch_bytes(
+            &idx.iter().map(|&i| i as u8).collect::<Vec<_>>(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::Stage;
+
+    fn check_sorted_by_popcount(values: &[u8], idx: &[u16]) {
+        let mut seen = vec![false; values.len()];
+        for &i in idx {
+            seen[i as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "not a permutation");
+        let keys: Vec<u8> = idx.iter().map(|&i| values[i as usize].count_ones() as u8).collect();
+        assert!(keys.windows(2).all(|w| w[0] <= w[1]), "keys not sorted: {keys:?}");
+    }
+
+    #[test]
+    fn sorts_by_exact_popcount_stably() {
+        let psu = AccPsu::new(8);
+        let v = [0xFFu8, 0x00, 0x0F, 0xF0, 0x01, 0x80, 0x7F, 0x55];
+        let idx = psu.sort_indices(&v);
+        check_sorted_by_popcount(&v, &idx);
+        // stability: 0x0F (idx 2) and 0xF0 (idx 3) both have popcount 4 and
+        // must keep original order; same for 0x01/0x80 (popcount 1).
+        let pos = |x: u16| idx.iter().position(|&i| i == x).unwrap();
+        assert!(pos(2) < pos(3));
+        assert!(pos(4) < pos(5));
+    }
+
+    #[test]
+    fn paper_waveform_patterns() {
+        // Fig. 4: all-ones and all-zeros inputs produce ascending indices.
+        let psu = AccPsu::new(16);
+        let ones = [0xFFu8; 16];
+        let zeros = [0x00u8; 16];
+        let asc: Vec<u16> = (0..16).collect();
+        assert_eq!(psu.sort_indices(&ones), asc);
+        assert_eq!(psu.sort_indices(&zeros), asc);
+    }
+
+    #[test]
+    fn three_stage_pipeline() {
+        let psu = AccPsu::new(25);
+        assert_eq!(psu.pipeline().depth(), 2); // two cuts = three stages
+        assert_eq!(psu.latency_cycles(), 3);
+    }
+
+    #[test]
+    fn inventory_has_all_three_stage_groups() {
+        let inv = AccPsu::new(25).inventory();
+        assert!(inv.raw_area_of(Stage::Popcount) > 0.0);
+        assert!(inv.raw_area_of(Stage::Sorting) > 0.0);
+        assert!(inv.raw_area_of(Stage::Pipeline) > 0.0);
+        assert!(inv.raw_area_of(Stage::Sorting) > inv.raw_area_of(Stage::Popcount));
+    }
+
+    #[test]
+    fn reorder_applies_permutation() {
+        let psu = AccPsu::new(4);
+        let v = [0xFFu8, 0x00, 0x03, 0x07];
+        assert_eq!(psu.reorder(&v), vec![0x00, 0x03, 0x07, 0xFF]);
+    }
+
+    #[test]
+    fn activity_recording_counts_toggles() {
+        let psu = AccPsu::new(4);
+        let mut ledger = ToggleLedger::new();
+        psu.record_activity(&[0xFF, 0x00, 0x0F, 0xF0], &mut ledger);
+        psu.record_activity(&[0x00, 0xFF, 0xF0, 0x0F], &mut ledger);
+        assert!(ledger.total_toggles() > 0);
+        assert_eq!(ledger.get("psu.in").unwrap().writes, 2);
+    }
+}

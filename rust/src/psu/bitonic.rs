@@ -1,0 +1,179 @@
+//! Batcher's bitonic sorting network (paper baseline [10]).
+//!
+//! Comparator-heavy: N' = next power of two ≥ N lanes, log2(N')·(log2(N')+1)/2
+//! compare-exchange stages of N'/2 comparators each. Each comparator works
+//! on a (popcount-key, index) pair so it sorts the same keys as the PSUs;
+//! the pipeline registers are placed to give the same 3-deep pipeline the
+//! paper synthesizes all designs at (cuts carry all N' lanes, which is why
+//! bitonic pays a much larger register bill than the PSUs).
+//!
+//! Note bitonic networks are **not stable**; the resulting permutation is
+//! still a valid popcount ordering, and `tests` assert exactly that.
+
+use crate::hw::pipeline::PipelineModel;
+use crate::hw::{Inventory, Stage, ToggleLedger};
+use crate::WIDTH;
+
+use super::counting::clog2;
+use super::popcount::PopcountUnit;
+use super::traits::SorterUnit;
+
+/// Bitonic sorter over packets of `n` bytes, keyed by popcount.
+#[derive(Debug, Clone)]
+pub struct BitonicSorter {
+    n: usize,
+    popcount: PopcountUnit,
+}
+
+impl BitonicSorter {
+    pub fn new(n: usize) -> Self {
+        Self { n, popcount: PopcountUnit::new(n) }
+    }
+
+    /// Padded lane count (next power of two).
+    pub fn lanes(&self) -> usize {
+        self.n.next_power_of_two()
+    }
+
+    /// Total compare-exchange elements in the network.
+    pub fn num_compare_exchange(&self) -> usize {
+        let l = self.lanes();
+        let stages = clog2(l) * (clog2(l) + 1) / 2;
+        stages * l / 2
+    }
+}
+
+impl SorterUnit for BitonicSorter {
+    fn name(&self) -> &'static str {
+        "Bitonic"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn key(&self, v: u8) -> u8 {
+        v.count_ones() as u8
+    }
+
+    fn sort_indices(&self, values: &[u8]) -> Vec<u16> {
+        debug_assert_eq!(values.len(), self.n);
+        let l = self.lanes();
+        // (key, original index); padding lanes carry the max key so they
+        // sink to the end and are dropped.
+        let mut lane: Vec<(u8, u16)> = values
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v.count_ones() as u8, i as u16))
+            .collect();
+        lane.resize(l, (u8::MAX, u16::MAX));
+
+        // Iterative Batcher bitonic network (the exact wire pattern the
+        // hardware implements).
+        let mut k = 2;
+        while k <= l {
+            let mut j = k / 2;
+            while j >= 1 {
+                for i in 0..l {
+                    let partner = i ^ j;
+                    if partner > i {
+                        let ascending = (i & k) == 0;
+                        let (a, b) = (lane[i], lane[partner]);
+                        if (a.0 > b.0) == ascending {
+                            lane[i] = b;
+                            lane[partner] = a;
+                        }
+                    }
+                }
+                j /= 2;
+            }
+            k *= 2;
+        }
+        lane.into_iter()
+            .filter(|&(_, i)| i != u16::MAX)
+            .map(|(_, i)| i)
+            .collect()
+    }
+
+    fn inventory(&self) -> Inventory {
+        let mut inv = self.popcount.inventory();
+        let keyw = (clog2(WIDTH + 1)) as u64; // 4-bit popcount key
+        let idxw = clog2(self.n.max(2)) as u64;
+        let ce = self.num_compare_exchange() as u64;
+        // each compare-exchange: key comparator + full (key+idx) swap muxes
+        for _ in 0..ce {
+            inv.add_comparator(Stage::Sorting, keyw);
+        }
+        inv.add(
+            Stage::Sorting,
+            crate::hw::CellClass::Mux2,
+            ce * 2 * (keyw + idxw),
+        );
+        inv.merge(&self.pipeline().inventory());
+        inv
+    }
+
+    fn pipeline(&self) -> PipelineModel {
+        // same 3-stage depth as the PSUs: two cuts, each latching every
+        // lane's (key, index) pair.
+        let l = self.lanes() as u64;
+        let keyw = clog2(WIDTH + 1) as u64;
+        let idxw = clog2(self.n.max(2)) as u64;
+        let cut = l * (keyw + idxw);
+        PipelineModel::new(vec![cut, cut])
+    }
+
+    fn record_activity(&self, values: &[u8], ledger: &mut ToggleLedger) {
+        let idx = self.sort_indices(values);
+        ledger.group("psu.in").latch_bytes(values);
+        ledger.group("psu.out").latch_bytes(
+            &idx.iter().map(|&i| i as u8).collect::<Vec<_>>(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_popcount_sorted_permutation() {
+        let s = BitonicSorter::new(25);
+        let v: Vec<u8> = (0..25).map(|i| (i * 73 + 19) as u8).collect();
+        let idx = s.sort_indices(&v);
+        let mut check = idx.clone();
+        check.sort_unstable();
+        assert_eq!(check, (0..25).collect::<Vec<u16>>());
+        let keys: Vec<u8> = idx.iter().map(|&i| v[i as usize].count_ones() as u8).collect();
+        assert!(keys.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn handles_non_power_of_two_sizes() {
+        for n in [3usize, 5, 7, 25, 49] {
+            let s = BitonicSorter::new(n);
+            let v: Vec<u8> = (0..n).map(|i| (i * 41 + 3) as u8).collect();
+            let idx = s.sort_indices(&v);
+            assert_eq!(idx.len(), n);
+            let mut check = idx.clone();
+            check.sort_unstable();
+            assert_eq!(check, (0..n as u16).collect::<Vec<u16>>());
+        }
+    }
+
+    #[test]
+    fn ce_count_formula() {
+        // 32 lanes: 5*6/2 = 15 stages * 16 = 240 CEs
+        assert_eq!(BitonicSorter::new(25).num_compare_exchange(), 240);
+        // 64 lanes: 6*7/2 = 21 stages * 32 = 672 CEs
+        assert_eq!(BitonicSorter::new(49).num_compare_exchange(), 672);
+    }
+
+    #[test]
+    fn larger_than_acc_psu() {
+        use crate::psu::acc::AccPsu;
+        let bit = BitonicSorter::new(25).inventory().raw_area_um2();
+        let acc = AccPsu::new(25).inventory().raw_area_um2();
+        assert!(bit > acc, "bitonic {bit} should exceed ACC-PSU {acc}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Popcount bucket mappings (the APP-PSU approximation, paper §III-B2).
+//!
+//! A mapping assigns each exact '1'-bit count `p ∈ [0, W]` to one of `k`
+//! coarse buckets via increment thresholds: `bucket(p) = #{t : p >= t}`.
+//! The paper's k=4 mapping for W=8 is {0,1,2}→0, {3,4}→1, {5,6}→2,
+//! {7,8}→3, i.e. thresholds (3, 5, 7).
+
+use crate::WIDTH;
+
+/// A deterministic popcount → bucket mapping.
+///
+/// Construction precomputes a 256-entry byte → bucket LUT — the software
+/// twin of the hardware's mapping LUT — so the per-element hot path is a
+/// single table load (perf log: EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketMap {
+    thresholds: Vec<u8>,
+    byte_lut: [u8; 256],
+}
+
+impl BucketMap {
+    /// Build from explicit increment thresholds (strictly increasing, each
+    /// in [1, W]).
+    pub fn from_thresholds(thresholds: &[u8]) -> Self {
+        assert!(
+            thresholds.windows(2).all(|w| w[0] < w[1]),
+            "thresholds must be strictly increasing"
+        );
+        assert!(
+            thresholds.iter().all(|&t| t >= 1 && t as usize <= WIDTH),
+            "thresholds must lie in [1, W]"
+        );
+        let mut byte_lut = [0u8; 256];
+        for (v, slot) in byte_lut.iter_mut().enumerate() {
+            let pc = (v as u8).count_ones() as u8;
+            *slot = thresholds.iter().filter(|&&t| pc >= t).count() as u8;
+        }
+        Self { thresholds: thresholds.to_vec(), byte_lut }
+    }
+
+    /// The paper's k=4 mapping: {0,1,2} {3,4} {5,6} {7,8}.
+    pub fn paper_k4() -> Self {
+        Self::from_thresholds(&[3, 5, 7])
+    }
+
+    /// Evenly-spaced k-bucket mapping over [0, W].
+    pub fn uniform(k: usize) -> Self {
+        assert!((2..=WIDTH + 1).contains(&k), "k must be in [2, W+1]");
+        let span = (WIDTH + 1) as f64;
+        let thresholds: Vec<u8> = (1..k)
+            .map(|i| (span * i as f64 / k as f64).ceil() as u8)
+            .collect();
+        Self::from_thresholds(&thresholds)
+    }
+
+    /// The identity mapping (k = W+1): bucket(p) == p, making APP ≡ ACC.
+    pub fn exact() -> Self {
+        Self::from_thresholds(&(1..=WIDTH as u8).collect::<Vec<_>>())
+    }
+
+    /// Number of buckets k.
+    pub fn k(&self) -> usize {
+        self.thresholds.len() + 1
+    }
+
+    /// Bits needed for a bucket index: ceil(log2 k).
+    pub fn index_bits(&self) -> usize {
+        (usize::BITS - (self.k() - 1).leading_zeros()) as usize
+    }
+
+    /// Map an exact popcount to its bucket index.
+    pub fn bucket_of_popcount(&self, pc: u8) -> u8 {
+        debug_assert!(pc as usize <= WIDTH);
+        self.thresholds.iter().filter(|&&t| pc >= t).count() as u8
+    }
+
+    /// Map a data byte to its bucket index (popcount then bucket) — one
+    /// LUT load, exactly like the hardware encoder.
+    #[inline]
+    pub fn bucket_of(&self, v: u8) -> u8 {
+        self.byte_lut[v as usize]
+    }
+
+    /// The thresholds.
+    pub fn thresholds(&self) -> &[u8] {
+        &self.thresholds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_from_section_iii() {
+        // counts {4,1,7,5,3,5} -> buckets {1,0,3,2,1,2}
+        let m = BucketMap::paper_k4();
+        let counts = [4u8, 1, 7, 5, 3, 5];
+        let buckets: Vec<u8> = counts.iter().map(|&p| m.bucket_of_popcount(p)).collect();
+        assert_eq!(buckets, vec![1, 0, 3, 2, 1, 2]);
+    }
+
+    #[test]
+    fn paper_k4_full_range() {
+        let m = BucketMap::paper_k4();
+        let got: Vec<u8> = (0..=8).map(|p| m.bucket_of_popcount(p)).collect();
+        assert_eq!(got, vec![0, 0, 0, 1, 1, 2, 2, 3, 3]);
+        assert_eq!(m.k(), 4);
+        assert_eq!(m.index_bits(), 2);
+    }
+
+    #[test]
+    fn exact_is_identity() {
+        let m = BucketMap::exact();
+        for p in 0..=8u8 {
+            assert_eq!(m.bucket_of_popcount(p), p);
+        }
+        assert_eq!(m.k(), 9);
+        assert_eq!(m.index_bits(), 4);
+    }
+
+    #[test]
+    fn uniform_monotone_and_covering() {
+        for k in 2..=9 {
+            let m = BucketMap::uniform(k);
+            assert_eq!(m.k(), k);
+            let buckets: Vec<u8> = (0..=8).map(|p| m.bucket_of_popcount(p)).collect();
+            assert_eq!(buckets[0], 0);
+            assert_eq!(*buckets.last().unwrap() as usize, k - 1);
+            assert!(buckets.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn rejects_unsorted_thresholds() {
+        BucketMap::from_thresholds(&[5, 3]);
+    }
+
+    #[test]
+    fn bucket_of_uses_popcount() {
+        let m = BucketMap::paper_k4();
+        assert_eq!(m.bucket_of(0xFF), 3); // popcount 8
+        assert_eq!(m.bucket_of(0x00), 0);
+        assert_eq!(m.bucket_of(0x0F), 1); // popcount 4
+    }
+}

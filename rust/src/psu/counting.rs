@@ -1,0 +1,226 @@
+//! The comparison-free counting-sort core shared by ACC-PSU and APP-PSU
+//! (stages 2–3 of Fig. 1).
+//!
+//! Dataflow per packet of `n` keyed elements with keys in `[0, b)`:
+//!
+//! 1. one-hot encode each key;
+//! 2. frequency histogram over the packet;
+//! 3. exclusive prefix sum → per-key starting addresses;
+//! 4. stable rank within key + scatter → sorted index vector.
+//!
+//! The behavioural model is bit-exact against the hardware (and against the
+//! Pallas kernel `python/compile/kernels/sortidx.py` through the AOT
+//! artifact). The structural model elaborates each of those four blocks to
+//! cells; everything except the scatter crossbar scales with the bucket
+//! count `b`, which is exactly the lever the APP approximation pulls.
+
+use crate::hw::{CellClass, Inventory, Stage};
+
+/// ceil(log2(x)) for x >= 1.
+pub fn clog2(x: usize) -> usize {
+    assert!(x >= 1);
+    (usize::BITS - (x - 1).leading_zeros()) as usize
+}
+
+/// Behavioural + structural counting-sort core.
+#[derive(Debug, Clone)]
+pub struct CountingCore {
+    /// Elements per packet (kernel size K).
+    pub n: usize,
+    /// Number of key buckets b (9 for ACC at W=8; k for APP).
+    pub b: usize,
+}
+
+impl CountingCore {
+    pub fn new(n: usize, b: usize) -> Self {
+        assert!(n >= 1 && b >= 2);
+        Self { n, b }
+    }
+
+    /// Index width: bits to address an element.
+    pub fn idx_bits(&self) -> usize {
+        clog2(self.n.max(2))
+    }
+
+    /// Counter width: bits to hold a count in [0, n].
+    pub fn cnt_bits(&self) -> usize {
+        clog2(self.n + 1)
+    }
+
+    /// Key width: bits to hold a bucket index.
+    pub fn key_bits(&self) -> usize {
+        clog2(self.b)
+    }
+
+    /// Frequency histogram of `keys`.
+    pub fn histogram(&self, keys: &[u8]) -> Vec<u32> {
+        debug_assert_eq!(keys.len(), self.n);
+        let mut h = vec![0u32; self.b];
+        for &k in keys {
+            h[k as usize] += 1;
+        }
+        h
+    }
+
+    /// Exclusive prefix sum (per-bucket starting addresses).
+    pub fn starts(&self, hist: &[u32]) -> Vec<u32> {
+        let mut s = Vec::with_capacity(self.b);
+        let mut acc = 0u32;
+        for &h in hist {
+            s.push(acc);
+            acc += h;
+        }
+        s
+    }
+
+    /// Stable counting-sort permutation: `out[p]` = original index of the
+    /// element transmitted in slot `p`.
+    pub fn sort_indices(&self, keys: &[u8]) -> Vec<u16> {
+        debug_assert_eq!(keys.len(), self.n);
+        self.sort_indices_by(keys, |k| k)
+    }
+
+    /// Counting sort with the key function fused into the passes — no
+    /// intermediate key vector. For b ≤ 16 (always true at W = 8) the
+    /// histogram and running start addresses live in one stack array, so
+    /// the only heap allocation is the output permutation
+    /// (EXPERIMENTS.md §Perf).
+    pub fn sort_indices_by(&self, values: &[u8], key: impl Fn(u8) -> u8) -> Vec<u16> {
+        debug_assert_eq!(values.len(), self.n);
+        let mut out = vec![0u16; self.n];
+        if self.b <= 16 {
+            let mut next = [0u32; 16];
+            for &v in values {
+                next[key(v) as usize] += 1;
+            }
+            // in-place exclusive scan: counts -> start addresses
+            let mut acc = 0u32;
+            for slot in next.iter_mut().take(self.b) {
+                let c = *slot;
+                *slot = acc;
+                acc += c;
+            }
+            for (i, &v) in values.iter().enumerate() {
+                let k = key(v) as usize;
+                let pos = next[k] as usize;
+                next[k] += 1;
+                out[pos] = i as u16;
+            }
+        } else {
+            let keys: Vec<u8> = values.iter().map(|&v| key(v)).collect();
+            let hist = self.histogram(&keys);
+            let mut next = self.starts(&hist);
+            for (i, &k) in keys.iter().enumerate() {
+                let pos = next[k as usize] as usize;
+                next[k as usize] += 1;
+                out[pos] = i as u16;
+            }
+        }
+        out
+    }
+
+    /// Structural inventory of the sorting stage (Fig. 5 "sorting unit").
+    pub fn inventory(&self) -> Inventory {
+        let mut inv = Inventory::new();
+        let (n, b) = (self.n as u64, self.b as u64);
+        let idxw = self.idx_bits() as u64;
+        let cntw = self.cnt_bits() as u64;
+
+        // 1. one-hot key decoders: b decode slices per element.
+        inv.add(Stage::Sorting, CellClass::Decode1, n * b);
+
+        // 2. histogram: per bucket, an (n-1)-input population counter
+        //    realized as a compressor tree of full adders.
+        inv.add(Stage::Sorting, CellClass::FullAdder, b * (n - 1));
+
+        // 3. exclusive prefix sum: (b-1) cnt-wide adders + start registers.
+        for _ in 0..(b - 1) {
+            inv.add_adder(Stage::Sorting, cntw);
+        }
+        inv.add_register(Stage::Sorting, b * cntw);
+
+        // 4. stable-rank generation: per-bucket running counters
+        //    (registers + incrementers) and a b:1 counter-select mux per
+        //    element.
+        inv.add_register(Stage::Sorting, b * cntw);
+        for _ in 0..b {
+            inv.add(Stage::Sorting, CellClass::HalfAdder, cntw);
+        }
+        inv.add(Stage::Sorting, CellClass::Mux2, n * cntw * (b - 1));
+
+        // 5. position adder per element: start + rank.
+        for _ in 0..n {
+            inv.add_adder(Stage::Sorting, cntw);
+        }
+
+        // 6. index-mapping scatter: per element an n-line write decoder; per
+        //    output slot an idx-wide latch plus OR-combine gating.
+        inv.add(Stage::Sorting, CellClass::Decode1, n * n);
+        inv.add_register(Stage::Sorting, n * idxw);
+        inv.add(Stage::Sorting, CellClass::Nand2, n * idxw * 4);
+
+        inv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clog2_values() {
+        assert_eq!(clog2(1), 0);
+        assert_eq!(clog2(2), 1);
+        assert_eq!(clog2(9), 4);
+        assert_eq!(clog2(25), 5);
+        assert_eq!(clog2(26), 5);
+        assert_eq!(clog2(64), 6);
+    }
+
+    #[test]
+    fn histogram_and_starts() {
+        let c = CountingCore::new(6, 4);
+        let keys = [1u8, 0, 3, 2, 1, 2]; // paper §III-B2 bucket example
+        assert_eq!(c.histogram(&keys), vec![1, 2, 2, 1]);
+        assert_eq!(c.starts(&[1, 2, 2, 1]), vec![0, 1, 3, 5]);
+    }
+
+    #[test]
+    fn sort_is_stable_and_sorted() {
+        let c = CountingCore::new(6, 4);
+        let keys = [1u8, 0, 3, 2, 1, 2];
+        let idx = c.sort_indices(&keys);
+        // bucket 0: element 1; bucket 1: elements 0,4; bucket 2: 3,5; bucket 3: 2
+        assert_eq!(idx, vec![1, 0, 4, 3, 5, 2]);
+    }
+
+    #[test]
+    fn sort_indices_is_permutation() {
+        let c = CountingCore::new(25, 9);
+        let keys: Vec<u8> = (0..25).map(|i| (i * 7 % 9) as u8).collect();
+        let mut idx = c.sort_indices(&keys);
+        idx.sort_unstable();
+        assert_eq!(idx, (0..25).collect::<Vec<u16>>());
+    }
+
+    #[test]
+    fn sorting_area_shrinks_with_fewer_buckets() {
+        // The paper's structural claim: sorting-stage area scales with the
+        // bucket count; 9 -> 4 buckets gives ~36.7 % at K=25.
+        let acc = CountingCore::new(25, 9).inventory().raw_area_um2();
+        let app = CountingCore::new(25, 4).inventory().raw_area_um2();
+        let reduction = 1.0 - app / acc;
+        assert!(
+            (0.25..0.50).contains(&reduction),
+            "sorting-stage reduction {reduction:.3} out of plausible band"
+        );
+    }
+
+    #[test]
+    fn area_monotone_in_buckets() {
+        let areas: Vec<f64> = (2..=9)
+            .map(|b| CountingCore::new(25, b).inventory().raw_area_um2())
+            .collect();
+        assert!(areas.windows(2).all(|w| w[0] < w[1]));
+    }
+}

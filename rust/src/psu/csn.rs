@@ -1,0 +1,155 @@
+//! Competition Sorter Network (paper baseline [11][12]).
+//!
+//! O(1)-latency rank computation: an N×N matrix of key comparators
+//! ("competitions"); each element's output position is the popcount of its
+//! matrix row (how many competitors it beats), with index tie-breaking to
+//! keep the sort stable. Constant-time but comparator-quadratic — the
+//! paper notes CSN-style designs spend ~80 % more logic than tree sorters.
+
+use crate::hw::pipeline::PipelineModel;
+use crate::hw::{CellClass, Inventory, Stage, ToggleLedger};
+use crate::WIDTH;
+
+use super::counting::clog2;
+use super::popcount::PopcountUnit;
+use super::traits::SorterUnit;
+
+/// Competition sorter over packets of `n` bytes, keyed by popcount.
+#[derive(Debug, Clone)]
+pub struct CsnSorter {
+    n: usize,
+    popcount: PopcountUnit,
+}
+
+impl CsnSorter {
+    pub fn new(n: usize) -> Self {
+        Self { n, popcount: PopcountUnit::new(n) }
+    }
+
+    /// Comparator count: full pairwise matrix (each unordered pair decided
+    /// once, fanned out to both rows).
+    pub fn num_comparators(&self) -> usize {
+        self.n * (self.n - 1) / 2
+    }
+}
+
+impl SorterUnit for CsnSorter {
+    fn name(&self) -> &'static str {
+        "CSN"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn key(&self, v: u8) -> u8 {
+        v.count_ones() as u8
+    }
+
+    fn sort_indices(&self, values: &[u8]) -> Vec<u16> {
+        debug_assert_eq!(values.len(), self.n);
+        let keys = self.popcount.popcounts(values);
+        // rank_i = #{j : key_j < key_i or (key_j == key_i and j < i)}
+        let mut out = vec![0u16; self.n];
+        for i in 0..self.n {
+            let mut rank = 0usize;
+            for j in 0..self.n {
+                if keys[j] < keys[i] || (keys[j] == keys[i] && j < i) {
+                    rank += 1;
+                }
+            }
+            out[rank] = i as u16;
+        }
+        out
+    }
+
+    fn inventory(&self) -> Inventory {
+        let mut inv = self.popcount.inventory();
+        let keyw = clog2(WIDTH + 1) as u64;
+        let idxw = clog2(self.n.max(2)) as u64;
+        let pairs = self.num_comparators() as u64;
+        let n = self.n as u64;
+        // pairwise competitions: key comparator + index tie-break comparator
+        for _ in 0..pairs {
+            inv.add_comparator(Stage::Sorting, keyw);
+            inv.add_comparator(Stage::Sorting, idxw);
+        }
+        // row popcounts: (n-1)-input compressor per element
+        inv.add(Stage::Sorting, CellClass::FullAdder, n * (n - 1));
+        // output crossbar: rank-decoded routing of each index to its slot
+        inv.add(Stage::Sorting, CellClass::Decode1, n * n);
+        inv.add(Stage::Sorting, CellClass::Mux2, n * idxw * (n - 1) / 2);
+        inv.add_register(Stage::Sorting, n * idxw);
+        inv.merge(&self.pipeline().inventory());
+        inv
+    }
+
+    fn pipeline(&self) -> PipelineModel {
+        // same 3-stage depth: cut 1 after key extraction, cut 2 after the
+        // competition matrix (rank vector).
+        let n = self.n as u64;
+        let keyw = clog2(WIDTH + 1) as u64;
+        let cntw = clog2(self.n + 1) as u64;
+        PipelineModel::new(vec![n * keyw, n * cntw])
+    }
+
+    fn record_activity(&self, values: &[u8], ledger: &mut ToggleLedger) {
+        let idx = self.sort_indices(values);
+        ledger.group("psu.in").latch_bytes(values);
+        ledger.group("psu.out").latch_bytes(
+            &idx.iter().map(|&i| i as u8).collect::<Vec<_>>(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::psu::acc::AccPsu;
+
+    #[test]
+    fn matches_stable_counting_sort() {
+        // CSN with index tie-break is stable, so it must agree exactly with
+        // ACC-PSU's stable counting sort.
+        let csn = CsnSorter::new(25);
+        let acc = AccPsu::new(25);
+        let v: Vec<u8> = (0..25).map(|i| (i * 59 + 31) as u8).collect();
+        assert_eq!(csn.sort_indices(&v), acc.sort_indices(&v));
+    }
+
+    #[test]
+    fn comparator_count_quadratic() {
+        assert_eq!(CsnSorter::new(25).num_comparators(), 300);
+        assert_eq!(CsnSorter::new(49).num_comparators(), 1176);
+    }
+
+    #[test]
+    fn largest_design_of_the_four() {
+        use crate::psu::all_designs;
+        let designs = all_designs(25);
+        let csn_area = designs
+            .iter()
+            .find(|d| d.name() == "CSN")
+            .unwrap()
+            .inventory()
+            .raw_area_um2();
+        for d in &designs {
+            if d.name() != "CSN" {
+                assert!(
+                    csn_area > d.inventory().raw_area_um2(),
+                    "CSN should out-area {}",
+                    d.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_cycle_rank_is_permutation() {
+        let csn = CsnSorter::new(49);
+        let v: Vec<u8> = (0..49).map(|i| (i * 13 + 7) as u8).collect();
+        let mut idx = csn.sort_indices(&v);
+        idx.sort_unstable();
+        assert_eq!(idx, (0..49).collect::<Vec<u16>>());
+    }
+}

@@ -1,0 +1,46 @@
+//! The paper's contribution: popcount sorting units (PSUs) and the sorter
+//! baselines they are compared against.
+//!
+//! Four designs, all bit-accurate and all elaborated to structural gate
+//! inventories at the same pipeline depth (paper §IV-B3):
+//!
+//! * [`acc::AccPsu`] — Accurate Popcount-Sorting Unit: comparison-free
+//!   counting sort keyed on the exact '1'-bit count (W+1 = 9 buckets).
+//! * [`app::AppPsu`] — Approximate PSU: same dataflow with the popcount
+//!   bucket encoder collapsing counts into k coarse buckets.
+//! * [`bitonic::BitonicSorter`] — Batcher's bitonic network (comparator
+//!   heavy baseline).
+//! * [`csn::CsnSorter`] — Competition Sorter Network (O(1)-latency N²
+//!   comparison-matrix baseline).
+//!
+//! Shared pieces: [`popcount::PopcountUnit`] (4-bit-LUT + adder-tree
+//! Hamming-weight unit and its approximate bucket-encoder variant) and
+//! [`counting::CountingCore`] (one-hot → histogram → prefix sum → stable
+//! scatter).
+
+pub mod acc;
+pub mod app;
+pub mod bitonic;
+pub mod bucket;
+pub mod counting;
+pub mod csn;
+pub mod popcount;
+pub mod traits;
+
+pub use acc::AccPsu;
+pub use app::AppPsu;
+pub use bitonic::BitonicSorter;
+pub use bucket::BucketMap;
+pub use csn::CsnSorter;
+pub use traits::SorterUnit;
+
+/// Construct every design the paper synthesizes, for a given sort width
+/// (kernel size K = 25 or 49).
+pub fn all_designs(n: usize) -> Vec<Box<dyn SorterUnit>> {
+    vec![
+        Box::new(BitonicSorter::new(n)),
+        Box::new(CsnSorter::new(n)),
+        Box::new(AccPsu::new(n)),
+        Box::new(AppPsu::new(n, BucketMap::paper_k4())),
+    ]
+}

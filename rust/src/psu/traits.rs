@@ -1,0 +1,111 @@
+//! The common interface every sorter design implements.
+
+use crate::hw::pipeline::PipelineModel;
+use crate::hw::{Inventory, Tech, ToggleLedger};
+
+/// A hardware sorting unit operating on one packet of `n` byte elements.
+pub trait SorterUnit: Send + Sync {
+    /// Design name as it appears in the paper's figures.
+    fn name(&self) -> &'static str;
+
+    /// Sort width (elements per operation; the conv kernel size K).
+    fn n(&self) -> usize;
+
+    /// The sort key of a value: exact popcount, bucket index, etc.
+    fn key(&self, v: u8) -> u8;
+
+    /// Sorted-index generation: `out[p]` is the original position of the
+    /// element to transmit in slot `p`; keys are non-decreasing along `p`.
+    fn sort_indices(&self, values: &[u8]) -> Vec<u16>;
+
+    /// Structural gate inventory (popcount / sorting / pipeline stages).
+    fn inventory(&self) -> Inventory;
+
+    /// Pipeline cut model (all designs share the same depth).
+    fn pipeline(&self) -> PipelineModel;
+
+    /// Latch one packet's worth of architectural register activity into
+    /// `ledger` (groups prefixed with `psu.`) — the power-model stimulus.
+    fn record_activity(&self, values: &[u8], ledger: &mut ToggleLedger);
+
+    /// Calibrated post-layout area in µm² (cell area × global scale ×
+    /// routing factor for this sort width).
+    fn area_um2(&self, tech: &Tech) -> f64 {
+        tech.sorter_area_um2(self.inventory().raw_area_um2(), self.n())
+    }
+
+    /// Latency in cycles from input latch to sorted indices.
+    fn latency_cycles(&self) -> usize {
+        self.pipeline().latency_cycles()
+    }
+
+    /// Apply the unit to a packet: returns the values in transmission
+    /// order. (The "transmitting unit" permutation step of Fig. 1.)
+    fn reorder(&self, values: &[u8]) -> Vec<u8> {
+        self.sort_indices(values).iter().map(|&i| values[i as usize]).collect()
+    }
+
+    /// Reorder parallel payloads with the permutation derived from
+    /// `values` (e.g. weights follow the input ordering, paper §IV-A).
+    fn reorder_pair(&self, values: &[u8], payload: &[u8]) -> (Vec<u8>, Vec<u8>) {
+        let idx = self.sort_indices(values);
+        (
+            idx.iter().map(|&i| values[i as usize]).collect(),
+            idx.iter().map(|&i| payload[i as usize]).collect(),
+        )
+    }
+}
+
+/// A pass-through "sorter" used for the non-optimized baseline bypass path.
+#[derive(Debug, Clone)]
+pub struct BypassUnit {
+    n: usize,
+}
+
+impl BypassUnit {
+    pub fn new(n: usize) -> Self {
+        Self { n }
+    }
+}
+
+impl SorterUnit for BypassUnit {
+    fn name(&self) -> &'static str {
+        "Bypass"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn key(&self, _v: u8) -> u8 {
+        0
+    }
+
+    fn sort_indices(&self, values: &[u8]) -> Vec<u16> {
+        (0..values.len() as u16).collect()
+    }
+
+    fn inventory(&self) -> Inventory {
+        Inventory::new()
+    }
+
+    fn pipeline(&self) -> PipelineModel {
+        PipelineModel::new(vec![])
+    }
+
+    fn record_activity(&self, _values: &[u8], _ledger: &mut ToggleLedger) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bypass_is_identity() {
+        let b = BypassUnit::new(4);
+        let v = [9u8, 3, 7, 1];
+        assert_eq!(b.sort_indices(&v), vec![0, 1, 2, 3]);
+        assert_eq!(b.reorder(&v), v.to_vec());
+        assert_eq!(b.area_um2(&Tech::default()), 0.0);
+    }
+}

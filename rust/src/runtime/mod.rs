@@ -1,0 +1,166 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from the Rust hot path. Python never runs at request time.
+//!
+//! Interchange is HLO **text** (`artifacts/*.hlo.txt`): jax ≥ 0.5 emits
+//! serialized protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+//! and python/compile/aot.py).
+//!
+//! Three executables, one per L2 entry point:
+//! * `lenet_head`  — f32[16,28,28] × f32[6,5,5] × f32[6] → f32[16,6,12,12]
+//! * `psu_sort`    — i32[256,64] → (i32[256,64], i32[256,64])
+//! * `packet_bt`   — i32[256,4,16] → i32[256]
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow as eyre, Context, Result};
+
+/// Shapes fixed at AOT time (must match python/compile/model.py).
+pub const PE_BATCH: usize = 16;
+pub const BT_BATCH: usize = 256;
+pub const PACKET_ELEMS: usize = 64;
+pub const PACKET_FLITS: usize = 4;
+pub const FLIT_LANES: usize = 16;
+
+/// A loaded, compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The runtime: a PJRT CPU client plus the compiled artifacts.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub lenet_head: Executable,
+    pub psu_sort: Executable,
+    pub packet_bt: Executable,
+}
+
+fn load_one(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<Executable> {
+    let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| eyre!("bad path"))?,
+    )
+    .map_err(|e| eyre!("{e:?}"))
+    .with_context(|| format!("loading {path:?} (run `make artifacts` first)"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| eyre!("compiling {name}: {e:?}"))?;
+    Ok(Executable { exe, name: name.to_string() })
+}
+
+impl Runtime {
+    /// Load every artifact from `dir` and compile on the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("pjrt cpu: {e:?}"))?;
+        Ok(Self {
+            lenet_head: load_one(&client, dir, "lenet_head")?,
+            psu_sort: load_one(&client, dir, "psu_sort")?,
+            packet_bt: load_one(&client, dir, "packet_bt")?,
+            client,
+        })
+    }
+
+    /// LeNet conv1+pool on a 16-image batch.
+    ///
+    /// `imgs` is [16][28*28] normalized f32, `weights` is [6][25] f32,
+    /// `bias` is [6] f32; returns [16][6*12*12] f32.
+    pub fn lenet_head(
+        &self,
+        imgs: &[Vec<f32>],
+        weights: &[f32],
+        bias: &[f32],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(imgs.len() == PE_BATCH, "need {PE_BATCH} images");
+        let flat: Vec<f32> = imgs.iter().flatten().copied().collect();
+        let x = xla::Literal::vec1(&flat)
+            .reshape(&[PE_BATCH as i64, 28, 28])
+            .map_err(|e| eyre!("{e:?}"))?;
+        let w = xla::Literal::vec1(weights)
+            .reshape(&[6, 5, 5])
+            .map_err(|e| eyre!("{e:?}"))?;
+        let b = xla::Literal::vec1(bias);
+        let out = self
+            .lenet_head
+            .exe
+            .execute::<xla::Literal>(&[x, w, b])
+            .map_err(|e| eyre!("{e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("{e:?}"))?;
+        let out = out.to_tuple1().map_err(|e| eyre!("{e:?}"))?;
+        let v = out.to_vec::<f32>().map_err(|e| eyre!("{e:?}"))?;
+        let per = 6 * 12 * 12;
+        Ok(v.chunks(per).map(|c| c.to_vec()).collect())
+    }
+
+    /// Sorted indices (ACC and APP k=4) for a batch of 64-byte packets.
+    pub fn psu_sort(&self, packets: &[[u8; PACKET_ELEMS]]) -> Result<(Vec<Vec<u16>>, Vec<Vec<u16>>)> {
+        anyhow::ensure!(packets.len() <= BT_BATCH, "batch too large");
+        let mut flat = vec![0i32; BT_BATCH * PACKET_ELEMS];
+        for (i, p) in packets.iter().enumerate() {
+            for (j, &b) in p.iter().enumerate() {
+                flat[i * PACKET_ELEMS + j] = b as i32;
+            }
+        }
+        let x = xla::Literal::vec1(&flat)
+            .reshape(&[BT_BATCH as i64, PACKET_ELEMS as i64])
+            .map_err(|e| eyre!("{e:?}"))?;
+        let out = self
+            .psu_sort
+            .exe
+            .execute::<xla::Literal>(&[x])
+            .map_err(|e| eyre!("{e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("{e:?}"))?;
+        let (acc, app) = out.to_tuple2().map_err(|e| eyre!("{e:?}"))?;
+        let conv = |lit: xla::Literal| -> Result<Vec<Vec<u16>>> {
+            let v = lit.to_vec::<i32>().map_err(|e| eyre!("{e:?}"))?;
+            Ok(v.chunks(PACKET_ELEMS)
+                .take(packets.len())
+                .map(|c| c.iter().map(|&x| x as u16).collect())
+                .collect())
+        };
+        Ok((conv(acc)?, conv(app)?))
+    }
+
+    /// Per-packet BT counts for a batch of [4][16]-byte packets.
+    pub fn packet_bt(&self, packets: &[[[u8; FLIT_LANES]; PACKET_FLITS]]) -> Result<Vec<u32>> {
+        anyhow::ensure!(packets.len() <= BT_BATCH, "batch too large");
+        let mut flat = vec![0i32; BT_BATCH * PACKET_FLITS * FLIT_LANES];
+        for (i, p) in packets.iter().enumerate() {
+            for (f, flit) in p.iter().enumerate() {
+                for (l, &b) in flit.iter().enumerate() {
+                    flat[(i * PACKET_FLITS + f) * FLIT_LANES + l] = b as i32;
+                }
+            }
+        }
+        let x = xla::Literal::vec1(&flat)
+            .reshape(&[BT_BATCH as i64, PACKET_FLITS as i64, FLIT_LANES as i64])
+            .map_err(|e| eyre!("{e:?}"))?;
+        let out = self
+            .packet_bt
+            .exe
+            .execute::<xla::Literal>(&[x])
+            .map_err(|e| eyre!("{e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("{e:?}"))?;
+        let out = out.to_tuple1().map_err(|e| eyre!("{e:?}"))?;
+        let v = out.to_vec::<i32>().map_err(|e| eyre!("{e:?}"))?;
+        Ok(v.into_iter().take(packets.len()).map(|x| x as u32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Integration tests that require built artifacts live in
+    // rust/tests/runtime_integration.rs; unit-level shape checks here.
+    use super::*;
+
+    #[test]
+    fn constants_match_model_py() {
+        assert_eq!(PE_BATCH, 16);
+        assert_eq!(BT_BATCH, 256);
+        assert_eq!(PACKET_ELEMS, PACKET_FLITS * FLIT_LANES);
+    }
+}

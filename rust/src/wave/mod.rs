@@ -1,0 +1,183 @@
+//! Cycle-trace emitter: the QuestaSim-waveform substitute for Fig. 4.
+//!
+//! Emits a text waveform of the PSU pipeline on a stimulus pattern: per
+//! cycle, the latched input element, its (bucketed) key, and — once the
+//! pipeline has filled — the sorted index popping out. The paper's four
+//! stimulus patterns are provided as constructors.
+
+use crate::psu::SorterUnit;
+
+/// The four Fig. 4 stimulus patterns for a sort width `n`.
+pub fn paper_patterns(n: usize, seed: u64) -> Vec<(&'static str, Vec<u8>)> {
+    use crate::workload::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let ramp: Vec<u8> = (0..n)
+        .map(|i| {
+            // '1'-bit count decreasing 8 -> 0, repeating
+            let pc = 8 - (i % 9) as u32;
+            if pc == 0 {
+                0u8
+            } else {
+                (0xFFu8).wrapping_shr(8 - pc) // pc ones, LSB-aligned
+            }
+        })
+        .collect();
+    vec![
+        ("all-ones", vec![0xFF; n]),
+        ("all-zeros", vec![0x00; n]),
+        ("ramp-8-to-0", ramp),
+        ("random", (0..n).map(|_| rng.next_u8()).collect()),
+    ]
+}
+
+/// One waveform: cycle-indexed rows.
+#[derive(Debug, Clone)]
+pub struct Waveform {
+    pub design: &'static str,
+    pub pattern: String,
+    /// (cycle, signal, value) tuples.
+    pub rows: Vec<(u64, &'static str, String)>,
+}
+
+/// Trace one packet through a sorting unit.
+pub fn trace(sorter: &dyn SorterUnit, pattern_name: &str, values: &[u8]) -> Waveform {
+    let latency = sorter.latency_cycles() as u64;
+    let mut rows = Vec::new();
+    for (i, &v) in values.iter().enumerate() {
+        let c = i as u64;
+        rows.push((c, "in_data", format!("0x{v:02X}")));
+        rows.push((c, "in_key", format!("{}", sorter.key(v))));
+    }
+    let idx = sorter.sort_indices(values);
+    for (p, &i) in idx.iter().enumerate() {
+        let c = latency + p as u64;
+        rows.push((c, "out_idx", format!("{i}")));
+        rows.push((
+            c,
+            "out_key",
+            format!("{}", sorter.key(values[i as usize])),
+        ));
+    }
+    Waveform {
+        design: sorter.name(),
+        pattern: pattern_name.to_string(),
+        rows,
+    }
+}
+
+impl Waveform {
+    /// Render as an aligned text waveform (one line per signal).
+    pub fn render(&self) -> String {
+        let mut out = format!("# {} / pattern: {}\n", self.design, self.pattern);
+        let max_cycle = self.rows.iter().map(|r| r.0).max().unwrap_or(0);
+        for sig in ["in_data", "in_key", "out_idx", "out_key"] {
+            let mut line = format!("{sig:>8} |");
+            for c in 0..=max_cycle {
+                let v = self
+                    .rows
+                    .iter()
+                    .find(|r| r.0 == c && r.1 == sig)
+                    .map(|r| r.2.clone())
+                    .unwrap_or_default();
+                line.push_str(&format!("{v:>5}"));
+            }
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Export as a Value Change Dump (IEEE 1364) viewable in GTKWave —
+    /// the literal file-format bridge to the paper's QuestaSim screenshots.
+    pub fn to_vcd(&self) -> String {
+        let mut out = String::from(
+            "$date today $end\n$version repro wave $end\n$timescale 1ns $end\n\
+             $scope module psu $end\n\
+             $var wire 8 a in_data $end\n$var wire 4 k in_key $end\n\
+             $var wire 16 o out_idx $end\n$var wire 4 q out_key $end\n\
+             $upscope $end\n$enddefinitions $end\n",
+        );
+        let max_cycle = self.rows.iter().map(|r| r.0).max().unwrap_or(0);
+        for c in 0..=max_cycle {
+            out.push_str(&format!("#{c}\n"));
+            for (sig, code) in
+                [("in_data", 'a'), ("in_key", 'k'), ("out_idx", 'o'), ("out_key", 'q')]
+            {
+                if let Some(r) = self.rows.iter().find(|r| r.0 == c && r.1 == sig) {
+                    let v: u64 = if let Some(hex) = r.2.strip_prefix("0x") {
+                        u64::from_str_radix(hex, 16).unwrap_or(0)
+                    } else {
+                        r.2.parse().unwrap_or(0)
+                    };
+                    out.push_str(&format!("b{v:b} {code}\n"));
+                }
+            }
+        }
+        out
+    }
+
+    /// The output-index sequence (for assertions).
+    pub fn out_indices(&self) -> Vec<u16> {
+        self.rows
+            .iter()
+            .filter(|r| r.1 == "out_idx")
+            .map(|r| r.2.parse().unwrap())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::psu::AppPsu;
+
+    #[test]
+    fn all_ones_and_zeros_give_ascending_indices() {
+        // the paper's Fig. 4 observation (1) and (2)
+        let psu = AppPsu::paper_default(16);
+        for (name, vals) in &paper_patterns(16, 1)[..2] {
+            let w = trace(&psu, name, vals);
+            assert_eq!(w.out_indices(), (0..16).collect::<Vec<u16>>(), "{name}");
+        }
+    }
+
+    #[test]
+    fn ramp_pattern_reverses_bucket_order() {
+        // counts decrease 8->0, so output keys must be non-decreasing,
+        // i.e. late-arriving low-count elements come out first.
+        let psu = AppPsu::paper_default(9);
+        let pats = paper_patterns(9, 2);
+        let (name, vals) = &pats[2];
+        let w = trace(&psu, name, vals);
+        let keys: Vec<u8> = w
+            .out_indices()
+            .iter()
+            .map(|&i| psu.key(vals[i as usize]))
+            .collect();
+        assert!(keys.windows(2).all(|p| p[0] <= p[1]), "{keys:?}");
+        // bucket 0 holds the ramp's tail (counts 2,1,0 = inputs 6,7,8);
+        // stability keeps their arrival order
+        assert_eq!(&w.out_indices()[..3], &[6, 7, 8]);
+    }
+
+    #[test]
+    fn render_contains_all_signals() {
+        let psu = AppPsu::paper_default(8);
+        let pats = paper_patterns(8, 3);
+        let text = trace(&psu, &pats[3].0, &pats[3].1).render();
+        for sig in ["in_data", "in_key", "out_idx", "out_key"] {
+            assert!(text.contains(sig));
+        }
+    }
+
+    #[test]
+    fn vcd_export_has_header_and_values() {
+        let psu = AppPsu::paper_default(8);
+        let pats = paper_patterns(8, 7);
+        let vcd = trace(&psu, &pats[3].0, &pats[3].1).to_vcd();
+        assert!(vcd.contains("$enddefinitions"));
+        assert!(vcd.contains("$var wire 8 a in_data"));
+        assert!(vcd.contains("#0"));
+        assert!(vcd.lines().filter(|l| l.starts_with('b')).count() > 8);
+    }
+}

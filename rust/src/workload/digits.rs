@@ -1,0 +1,127 @@
+//! Synthetic MNIST-like digits: 28×28 grayscale images drawn procedurally
+//! from seven-segment-style strokes with jitter and noise.
+//!
+//! The paper evaluates LeNet-5's first two layers; any 28×28 digit-shaped
+//! input with activation-like statistics exercises the same code path
+//! (DESIGN.md §2). Images are u8 (the platform's 8-bit fixed point) and
+//! deterministic per (digit, seed).
+
+use super::rng::Rng;
+
+pub const IMG: usize = 28;
+
+/// Which of the 7 segments are lit for digits 0-9 (a..g, standard layout).
+const SEGMENTS: [[bool; 7]; 10] = [
+    // a      b      c      d      e      f      g
+    [true, true, true, true, true, true, false],   // 0
+    [false, true, true, false, false, false, false], // 1
+    [true, true, false, true, true, false, true],  // 2
+    [true, true, true, true, false, false, true],  // 3
+    [false, true, true, false, false, true, true], // 4
+    [true, false, true, true, false, true, true],  // 5
+    [true, false, true, true, true, true, true],   // 6
+    [true, true, true, false, false, false, false], // 7
+    [true, true, true, true, true, true, true],    // 8
+    [true, true, true, true, false, true, true],   // 9
+];
+
+fn draw_line(img: &mut [[f64; IMG]; IMG], x0: f64, y0: f64, x1: f64, y1: f64, w: f64) {
+    let steps = 48;
+    for s in 0..=steps {
+        let t = s as f64 / steps as f64;
+        let cx = x0 + t * (x1 - x0);
+        let cy = y0 + t * (y1 - y0);
+        let r = w.ceil() as i32 + 1;
+        for dy in -r..=r {
+            for dx in -r..=r {
+                let px = cx + dx as f64;
+                let py = cy + dy as f64;
+                if px < 0.0 || py < 0.0 || px >= IMG as f64 || py >= IMG as f64 {
+                    continue;
+                }
+                let d2 = (px - cx) * (px - cx) + (py - cy) * (py - cy);
+                let v = (-d2 / (w * w)).exp();
+                let (xi, yi) = (px as usize, py as usize);
+                img[yi][xi] = (img[yi][xi] + v).min(1.0);
+            }
+        }
+    }
+}
+
+/// Render one digit image; `seed` controls jitter and noise.
+pub fn render_digit(digit: u8, seed: u64) -> [[u8; IMG]; IMG] {
+    assert!(digit < 10);
+    let mut rng = Rng::new(seed ^ ((digit as u64) << 32) ^ 0xD161_7D16);
+    let mut canvas = [[0f64; IMG]; IMG];
+    let jx = rng.next_gaussian() * 1.0;
+    let jy = rng.next_gaussian() * 1.0;
+    let (l, r) = (9.0 + jx, 19.0 + jx);
+    let (t, m, b) = (5.0 + jy, 14.0 + jy, 23.0 + jy);
+    let w = 1.3 + rng.next_f64() * 0.5;
+    let segs = SEGMENTS[digit as usize];
+    let lines = [
+        (l, t, r, t), // a: top
+        (r, t, r, m), // b: top-right
+        (r, m, r, b), // c: bottom-right
+        (l, b, r, b), // d: bottom
+        (l, m, l, b), // e: bottom-left
+        (l, t, l, m), // f: top-left
+        (l, m, r, m), // g: middle
+    ];
+    for (i, &(x0, y0, x1, y1)) in lines.iter().enumerate() {
+        if segs[i] {
+            draw_line(&mut canvas, x0, y0, x1, y1, w);
+        }
+    }
+    let mut out = [[0u8; IMG]; IMG];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let noise = rng.next_gaussian() * 4.0;
+            out[y][x] = (canvas[y][x] * 255.0 + noise).clamp(0.0, 255.0) as u8;
+        }
+    }
+    out
+}
+
+/// A batch of digit images cycling 0..9.
+pub fn batch(n: usize, seed: u64) -> Vec<[[u8; IMG]; IMG]> {
+    (0..n).map(|i| render_digit((i % 10) as u8, seed.wrapping_add(i as u64))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(render_digit(3, 42), render_digit(3, 42));
+        assert_ne!(render_digit(3, 42), render_digit(3, 43));
+        assert_ne!(render_digit(3, 42), render_digit(8, 42));
+    }
+
+    #[test]
+    fn digits_have_ink_and_background() {
+        for d in 0..10u8 {
+            let img = render_digit(d, 1);
+            let bright = img.iter().flatten().filter(|&&v| v > 128).count();
+            let dark = img.iter().flatten().filter(|&&v| v < 32).count();
+            assert!(bright > 20, "digit {d} has too little ink ({bright})");
+            assert!(dark > 300, "digit {d} has too little background ({dark})");
+        }
+    }
+
+    #[test]
+    fn eight_has_more_ink_than_one() {
+        let ink = |d: u8| {
+            render_digit(d, 2).iter().flatten().map(|&v| v as u64).sum::<u64>()
+        };
+        assert!(ink(8) > ink(1) * 2);
+    }
+
+    #[test]
+    fn batch_cycles_digits() {
+        let b = batch(12, 5);
+        assert_eq!(b.len(), 12);
+        assert_ne!(b[0], b[10]); // same digit class, different seed
+    }
+}

@@ -1,0 +1,212 @@
+//! The DNN-workload experiment's tensors: LeNet-5 conv1 (5×5, 6 filters)
+//! over 28×28 u8 images, int8 weights in offset-128 representation, and the
+//! im2col window streams the allocation unit sends to the PEs.
+
+use super::digits::{self, IMG};
+use super::rng::Rng;
+
+/// LeNet conv1 geometry.
+pub const KH: usize = 5;
+pub const KW: usize = 5;
+pub const K: usize = KH * KW; // 25 = the paper's 5x5 kernel-size config
+pub const OUT_MAPS: usize = 6;
+pub const OH: usize = IMG - KH + 1; // 24
+pub const OW: usize = IMG - KW + 1; // 24
+pub const WINDOWS: usize = OH * OW; // 576
+
+/// Quantized conv weights: signed int8 stored offset-128 (u8 on the link).
+#[derive(Debug, Clone)]
+pub struct QuantWeights {
+    /// [map][tap] offset-128 bytes.
+    pub bytes: Vec<[u8; K]>,
+    /// bias per map (i32 accumulator domain).
+    pub bias: Vec<i32>,
+}
+
+impl QuantWeights {
+    /// Gaussian-initialized quantized weights (σ ≈ 18 LSB, zero-mean).
+    pub fn random(seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x7E19_A7ED);
+        let bytes = (0..OUT_MAPS)
+            .map(|_| {
+                let mut taps = [0u8; K];
+                for t in taps.iter_mut() {
+                    let w = (rng.next_gaussian() * 18.0).round().clamp(-127.0, 127.0);
+                    *t = (w + 128.0) as u8;
+                }
+                taps
+            })
+            .collect();
+        let bias = (0..OUT_MAPS)
+            .map(|_| (rng.next_gaussian() * 64.0).round() as i32)
+            .collect();
+        Self { bytes, bias }
+    }
+
+    /// Signed tap value of (map, tap).
+    #[inline]
+    pub fn signed(&self, map: usize, tap: usize) -> i32 {
+        self.bytes[map][tap] as i32 - 128
+    }
+}
+
+/// A batch of test vectors: the paper's "set of 100 convolution kernels"
+/// applied as stimulus (§IV-B4). The input images carry the same
+/// activation-like statistics as the Table-I traffic (spatially-correlated
+/// sparse support, random magnitudes) — the paper's test vectors are
+/// random stimulus, not natural images.
+pub fn test_vectors(n: usize, seed: u64) -> Vec<([[u8; IMG]; IMG], QuantWeights)> {
+    use super::traffic::{gen_field, TrafficModel};
+    let field_model = TrafficModel::default().input;
+    let mut rng = Rng::new(seed ^ 0x7E57_Fec7);
+    (0..n)
+        .map(|i| {
+            let f = gen_field(&field_model, IMG, IMG, &mut rng);
+            let mut img = [[0u8; IMG]; IMG];
+            for (y, row) in f.iter().enumerate() {
+                img[y][..IMG].copy_from_slice(&row[..IMG]);
+            }
+            let w = QuantWeights::random(seed.wrapping_add(0x1000 + i as u64));
+            (img, w)
+        })
+        .collect()
+}
+
+/// Natural-image test vectors (synthetic digits) for correctness demos.
+pub fn digit_vectors(n: usize, seed: u64) -> Vec<([[u8; IMG]; IMG], QuantWeights)> {
+    (0..n)
+        .map(|i| {
+            let img = digits::render_digit((i % 10) as u8, seed.wrapping_add(i as u64));
+            let w = QuantWeights::random(seed.wrapping_add(0x1000 + i as u64));
+            (img, w)
+        })
+        .collect()
+}
+
+/// The im2col window at output pixel (oy, ox): 25 input bytes in raster tap
+/// order.
+pub fn window(img: &[[u8; IMG]; IMG], oy: usize, ox: usize) -> [u8; K] {
+    let mut out = [0u8; K];
+    for dy in 0..KH {
+        for dx in 0..KW {
+            out[dy * KW + dx] = img[oy + dy][ox + dx];
+        }
+    }
+    out
+}
+
+/// Reference conv1 + bias + ReLU output in the integer accumulator domain:
+/// out[map][oy][ox] = relu(Σ_tap in·(w−128) + bias).
+pub fn conv_reference(img: &[[u8; IMG]; IMG], w: &QuantWeights) -> Vec<Vec<Vec<i32>>> {
+    let mut out = vec![vec![vec![0i32; OW]; OH]; OUT_MAPS];
+    for m in 0..OUT_MAPS {
+        for oy in 0..OH {
+            for ox in 0..OW {
+                let win = window(img, oy, ox);
+                let mut acc = w.bias[m];
+                for t in 0..K {
+                    acc += win[t] as i32 * w.signed(m, t);
+                }
+                out[m][oy][ox] = acc.max(0);
+            }
+        }
+    }
+    out
+}
+
+/// 2×2 average pool over the conv output (integer floor division, matching
+/// the PE's shift-based divider).
+pub fn pool_reference(conv: &[Vec<Vec<i32>>]) -> Vec<Vec<Vec<i32>>> {
+    let maps = conv.len();
+    let (oh, ow) = (conv[0].len() / 2, conv[0][0].len() / 2);
+    let mut out = vec![vec![vec![0i32; ow]; oh]; maps];
+    for (m, map) in conv.iter().enumerate() {
+        for y in 0..oh {
+            for x in 0..ow {
+                let s = map[2 * y][2 * x]
+                    + map[2 * y][2 * x + 1]
+                    + map[2 * y + 1][2 * x]
+                    + map[2 * y + 1][2 * x + 1];
+                out[m][y][x] = s >> 2;
+            }
+        }
+    }
+    out
+}
+
+/// Round-robin assignment of the 576 windows to `num_pes` PEs.
+pub fn windows_for_pe(pe: usize, num_pes: usize) -> Vec<(usize, usize)> {
+    (0..WINDOWS)
+        .filter(|i| i % num_pes == pe)
+        .map(|i| (i / OW, i % OW))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        assert_eq!(K, 25);
+        assert_eq!(WINDOWS, 576);
+        assert_eq!(windows_for_pe(0, 16).len(), 36);
+        let all: usize = (0..16).map(|p| windows_for_pe(p, 16).len()).sum();
+        assert_eq!(all, WINDOWS);
+    }
+
+    #[test]
+    fn weights_deterministic_and_in_range() {
+        let a = QuantWeights::random(1);
+        let b = QuantWeights::random(1);
+        assert_eq!(a.bytes, b.bytes);
+        for m in 0..OUT_MAPS {
+            for t in 0..K {
+                assert!((-127..=127).contains(&a.signed(m, t)));
+            }
+        }
+    }
+
+    #[test]
+    fn window_extracts_raster_patch() {
+        let mut img = [[0u8; IMG]; IMG];
+        img[3][4] = 77;
+        let w = window(&img, 3, 4);
+        assert_eq!(w[0], 77); // top-left tap of window at (3,4)
+        let w2 = window(&img, 2, 3);
+        assert_eq!(w2[KW + 1], 77); // tap (1,1)
+    }
+
+    #[test]
+    fn conv_reference_relu_and_shape() {
+        let img = digits::render_digit(5, 9);
+        let w = QuantWeights::random(9);
+        let out = conv_reference(&img, &w);
+        assert_eq!(out.len(), OUT_MAPS);
+        assert_eq!(out[0].len(), OH);
+        assert!(out.iter().flatten().flatten().all(|&v| v >= 0));
+    }
+
+    #[test]
+    fn pool_reduces_resolution() {
+        let img = digits::render_digit(2, 3);
+        let w = QuantWeights::random(3);
+        let pooled = pool_reference(&conv_reference(&img, &w));
+        assert_eq!(pooled[0].len(), OH / 2);
+        assert_eq!(pooled[0][0].len(), OW / 2);
+    }
+
+    #[test]
+    fn accumulation_is_order_insensitive() {
+        // permute taps of a window: conv output unchanged (exact integers)
+        let img = digits::render_digit(7, 11);
+        let w = QuantWeights::random(11);
+        let win = window(&img, 4, 6);
+        let mut rng = Rng::new(13);
+        let mut order: Vec<usize> = (0..K).collect();
+        rng.shuffle(&mut order);
+        let direct: i32 = (0..K).map(|t| win[t] as i32 * w.signed(0, t)).sum();
+        let permuted: i32 = order.iter().map(|&t| win[t] as i32 * w.signed(0, t)).sum();
+        assert_eq!(direct, permuted);
+    }
+}

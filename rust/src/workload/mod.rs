@@ -1,0 +1,20 @@
+//! Workload and traffic generators for every experiment.
+//!
+//! * [`rng`] — deterministic xoshiro256++ PRNG (no external dependency, so
+//!   every experiment is bit-reproducible from its seed).
+//! * [`traffic`] — the Table-I link-traffic generator: 2-D activation-like
+//!   byte fields with separable spatial correlation, streamed under the
+//!   four ordering strategies. See DESIGN.md §2 for why the paper's
+//!   "random" generator is re-specified as a calibrated correlated field.
+//! * [`digits`] — synthetic MNIST-like digit images (procedural strokes)
+//!   for the end-to-end LeNet run.
+//! * [`lenet`] — the DNN-workload experiment: LeNet conv1/pool tensors,
+//!   quantization, im2col streaming to the 16 PEs.
+
+pub mod digits;
+pub mod lenet;
+pub mod rng;
+pub mod traffic;
+
+pub use rng::Rng;
+pub use traffic::{OrderStrategy, TrafficModel};

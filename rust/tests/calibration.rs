@@ -1,0 +1,135 @@
+//! Calibration anchors: every headline number the paper reports, asserted
+//! against the reproduction with explicit tolerance bands.
+//!
+//! Two kinds of assertion (DESIGN.md §2):
+//! * **anchors** — quantities a single global calibration factor was fit
+//!   to (APP-PSU K=25 area; APP-PSU overhead power). Tight bands.
+//! * **predictions** — everything else: these must emerge from structure
+//!   and identical-stimulus measurement. Wider bands.
+
+use repro::experiments::{fig5, fig67, table1};
+use repro::hw::Tech;
+use repro::workload::{OrderStrategy, TrafficModel};
+
+fn close(actual: f64, paper: f64, tol_frac: f64, what: &str) {
+    assert!(
+        (actual / paper - 1.0).abs() <= tol_frac,
+        "{what}: actual {actual:.3} vs paper {paper:.3} (tol {:.0}%)",
+        tol_frac * 100.0
+    );
+}
+
+// -------------------------------------------------------------------------
+// Table I (prediction, identical stimulus across strategies)
+// -------------------------------------------------------------------------
+
+#[test]
+fn table1_operating_point_and_reductions() {
+    let t = table1::run(&TrafficModel::default(), 16_384, 0xC0FFEE);
+    use OrderStrategy::*;
+    // operating point (baseline)
+    close(t.get(NonOptimized).input_bt_per_flit, 31.035, 0.06, "T1 input baseline");
+    close(t.get(NonOptimized).weight_bt_per_flit, 32.036, 0.06, "T1 weight baseline");
+    close(t.get(NonOptimized).overall(), 63.072, 0.05, "T1 overall baseline");
+    // per-strategy per-side values
+    close(t.get(ColumnMajor).input_bt_per_flit, 26.004, 0.08, "T1 col input");
+    close(t.get(ColumnMajor).weight_bt_per_flit, 28.007, 0.08, "T1 col weight");
+    close(t.get(Acc).input_bt_per_flit, 22.333, 0.08, "T1 acc input");
+    close(t.get(Acc).weight_bt_per_flit, 28.013, 0.08, "T1 acc weight");
+    close(t.get(App).input_bt_per_flit, 22.887, 0.08, "T1 app input");
+    // headline reductions (percentage points)
+    let col = t.reduction_pct(ColumnMajor);
+    let acc = t.reduction_pct(Acc);
+    let app = t.reduction_pct(App);
+    assert!((col - 14.366).abs() < 2.5, "col-major reduction {col:.2} vs 14.37");
+    assert!((acc - 20.177).abs() < 2.0, "ACC reduction {acc:.2} vs 20.18");
+    assert!((app - 19.305).abs() < 2.0, "APP reduction {app:.2} vs 19.31");
+    // ordering relations the paper's story depends on
+    assert!(acc > app, "ACC must beat APP");
+    assert!(app > col, "APP must beat column-major");
+    assert!(app > 0.9 * acc, "APP must retain >90% of ACC's reduction");
+}
+
+// -------------------------------------------------------------------------
+// Fig. 5 (anchor: APP@25; predictions: everything else)
+// -------------------------------------------------------------------------
+
+#[test]
+fn fig5_area_anchor_and_predictions() {
+    let f = fig5::run(&[25, 49], &Tech::default());
+    // anchor
+    close(f.row(25, "APP-PSU").total_um2, 2193.0, 0.03, "APP area K=25 (anchor)");
+    // second anchor: K=49 (routing_n0 fit to the paper's 49/25 area ratio)
+    close(f.row(49, "APP-PSU").total_um2, 6928.0, 0.05, "APP area K=49 (anchor)");
+    // prediction: overall reduction 35.4 %
+    let red = f.app_vs_acc_reduction_pct(25);
+    assert!((red - 35.4).abs() < 6.0, "overall reduction {red:.1} vs 35.4");
+    // prediction: stage-level reductions 24.9 % (popcount), 36.7 % (sorting)
+    let acc = f.row(25, "ACC-PSU");
+    let app = f.row(25, "APP-PSU");
+    let pop_red = (1.0 - app.popcount_um2 / acc.popcount_um2) * 100.0;
+    let sort_red = (1.0 - app.sorting_um2 / acc.sorting_um2) * 100.0;
+    assert!((pop_red - 24.9).abs() < 8.0, "popcount-stage reduction {pop_red:.1} vs 24.9");
+    assert!((sort_red - 36.7).abs() < 8.0, "sorting-stage reduction {sort_red:.1} vs 36.7");
+    // prediction: design ordering APP < ACC < Bitonic < CSN at both sizes
+    for n in [25, 49] {
+        let a = |d: &str| f.row(n, d).total_um2;
+        assert!(a("APP-PSU") < a("ACC-PSU"));
+        assert!(a("ACC-PSU") < a("Bitonic"));
+        assert!(a("Bitonic") < a("CSN"));
+    }
+}
+
+// -------------------------------------------------------------------------
+// Fig. 6 / Fig. 7 / §IV-B4 (anchor: APP overhead; predictions: the rest)
+// -------------------------------------------------------------------------
+
+#[test]
+fn fig67_power_anchors_and_predictions() {
+    let tech = Tech::default();
+    let f = fig67::run(30, 4, 0xC0FFEE, &tech);
+
+    // anchor: APP-PSU power overhead 1.43 mW
+    close(f.app_cmp.psu_overhead_w * 1e3, 1.43, 0.06, "APP overhead (anchor)");
+    // prediction: ACC overhead 2.28 mW (structure + activity)
+    close(f.acc_cmp.psu_overhead_w * 1e3, 2.28, 0.20, "ACC overhead");
+    // prediction: overhead reduction ~37.3 %
+    let ovh_red =
+        (1.0 - f.app_cmp.psu_overhead_w / f.acc_cmp.psu_overhead_w) * 100.0;
+    assert!((22.0..45.0).contains(&ovh_red), "overhead reduction {ovh_red:.1} vs 37.3");
+
+    // predictions: link BT reduction 20.42 / 19.50 %
+    assert!((f.acc_cmp.bt_reduction_pct - 20.42).abs() < 3.0, "ACC BT {:.2}", f.acc_cmp.bt_reduction_pct);
+    assert!((f.app_cmp.bt_reduction_pct - 19.50).abs() < 3.0, "APP BT {:.2}", f.app_cmp.bt_reduction_pct);
+    // predictions: link power reduction 18.27 / 16.48 %
+    assert!((f.acc_cmp.link_power_reduction_pct - 18.27).abs() < 3.0, "ACC linkP {:.2}", f.acc_cmp.link_power_reduction_pct);
+    assert!((f.app_cmp.link_power_reduction_pct - 16.48).abs() < 3.0, "APP linkP {:.2}", f.app_cmp.link_power_reduction_pct);
+    // predictions: PE-level reduction 4.98 / 4.58 %
+    assert!((f.acc_cmp.pe_level_reduction_pct - 4.98).abs() < 1.5, "ACC PE {:.2}", f.acc_cmp.pe_level_reduction_pct);
+    assert!((f.app_cmp.pe_level_reduction_pct - 4.58).abs() < 1.5, "APP PE {:.2}", f.app_cmp.pe_level_reduction_pct);
+    // the paper's retention claim: APP keeps >= 90 % of ACC's link savings
+    assert!(
+        f.app_cmp.link_power_reduction_pct >= 0.85 * f.acc_cmp.link_power_reduction_pct,
+        "APP retention"
+    );
+    // correctness invariant: all three configs produce identical outputs
+    assert_eq!(f.baseline.pooled, f.acc.pooled);
+    assert_eq!(f.baseline.pooled, f.app.pooled);
+}
+
+#[test]
+fn conclusion_headline_ratios() {
+    // §V: "APP-PSU achieves 35.4% area reduction and ~37% power reduction
+    // ... while maintaining 95.5% BT reduction efficiency (19.5 vs 20.4)"
+    let tech = Tech::default();
+    let f5 = fig5::run(&[25], &tech);
+    let area_red = f5.app_vs_acc_reduction_pct(25);
+    assert!(area_red > 28.0 && area_red < 43.0);
+
+    let f = fig67::run(10, 4, 7, &tech);
+    let retention = f.app_cmp.bt_reduction_pct / f.acc_cmp.bt_reduction_pct;
+    assert!(
+        (0.85..1.01).contains(&retention),
+        "BT retention {retention:.3} vs paper 0.955"
+    );
+}

@@ -1,0 +1,95 @@
+//! Platform-level integration: the Fig. 3 system end to end, plus failure
+//! injection on the config/CLI surfaces.
+
+use repro::platform::{Platform, PlatformOrdering};
+use repro::psu::{AccPsu, AppPsu, BitonicSorter, BucketMap, CsnSorter, SorterUnit};
+use repro::workload::lenet::{self, QuantWeights, K};
+use repro::workload::digits;
+
+fn vectors(n: usize, seed: u64) -> Vec<([[u8; digits::IMG]; digits::IMG], QuantWeights)> {
+    lenet::test_vectors(n, seed)
+}
+
+#[test]
+fn every_sorter_design_preserves_conv_results_on_platform() {
+    let vs = vectors(2, 31);
+    let mut base = Platform::new(PlatformOrdering::Bypass);
+    let want = base.run_batch(&vs).pooled;
+    let designs: Vec<Box<dyn SorterUnit>> = vec![
+        Box::new(AccPsu::new(K)),
+        Box::new(AppPsu::new(K, BucketMap::paper_k4())),
+        Box::new(AppPsu::new(K, BucketMap::uniform(2))),
+        Box::new(BitonicSorter::new(K)),
+        Box::new(CsnSorter::new(K)),
+    ];
+    for d in designs {
+        let name = d.name();
+        let mut p = Platform::new(PlatformOrdering::Sorted(d));
+        assert_eq!(p.run_batch(&vs).pooled, want, "{name} changed results");
+    }
+}
+
+#[test]
+fn digit_images_also_compute_correctly() {
+    // natural images exercise different value ranges than test vectors
+    let vs = lenet::digit_vectors(3, 17);
+    let mut base = Platform::new(PlatformOrdering::Bypass);
+    let got = base.run_batch(&vs);
+    for (i, (img, w)) in vs.iter().enumerate() {
+        let want = lenet::pool_reference(&lenet::conv_reference(img, w));
+        assert_eq!(got.pooled[i], want, "vector {i}");
+    }
+}
+
+#[test]
+fn report_metrics_are_consistent() {
+    let vs = vectors(3, 99);
+    let mut p = Platform::new(PlatformOrdering::Sorted(Box::new(AccPsu::new(K))));
+    let r = p.run_batch(&vs);
+    // flit counts: per image, 576 windows x 2 flits input; 6 weight loads
+    let imgs = vs.len() as u64;
+    assert_eq!(r.input_flits, imgs * 576 * 2 * 1);
+    assert_eq!(r.weight_flits, imgs * 16 * 6 * 2);
+    assert!(r.input_bt > 0 && r.weight_bt > 0);
+    assert!(r.link_energy_j > 0.0 && r.pe_energy_j > 0.0 && r.psu_energy_j > 0.0);
+    assert_eq!(r.pooled.len(), vs.len());
+    // 36 windows x 6 maps x 25 MACs + pool share per PE per image
+    assert_eq!(r.cycles, imgs * (36 * 6 * 25 + (6 * 12 * 12) / 16) as u64);
+    // energy split adds up
+    let sum = r.input_link_energy_j + r.weight_link_energy_j;
+    assert!((sum - r.link_energy_j).abs() < 1e-18);
+}
+
+#[test]
+fn config_failure_injection() {
+    use repro::config::Config;
+    // unknown key
+    assert!(Config::from_toml_str("not_a_key = 3").is_err());
+    // malformed values
+    assert!(Config::from_toml_str("seed = -1").is_err());
+    assert!(Config::from_toml_str("kernel_sizes = [25, -3]").is_err());
+    assert!(Config::from_toml_str("kernel_sizes = 25").is_err());
+    // missing file
+    assert!(Config::from_toml_file("/nonexistent/config.toml").is_err());
+    // empty config == defaults
+    assert_eq!(Config::from_toml_str("").unwrap(), Config::default());
+}
+
+#[test]
+fn runtime_load_fails_cleanly_without_artifacts() {
+    use repro::runtime::Runtime;
+    let Err(err) = Runtime::load("/nonexistent/artifacts") else {
+        panic!("expected load failure");
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn platform_accepts_empty_batch() {
+    let mut p = Platform::new(PlatformOrdering::Bypass);
+    let r = p.run_batch(&[]);
+    assert_eq!(r.cycles, 0);
+    assert_eq!(r.input_bt, 0);
+    assert_eq!(r.pooled.len(), 0);
+}

@@ -1,0 +1,243 @@
+//! Property-based tests over the DESIGN.md §6 invariants.
+//!
+//! The build is offline (no proptest vendored), so properties are driven by
+//! the crate's own deterministic PRNG: many random shapes/seeds per
+//! property, with the failing seed printed on assert.
+
+use repro::hw::Tech;
+use repro::noc::Packet;
+use repro::popcount8;
+use repro::psu::{all_designs, AccPsu, AppPsu, BucketMap, CsnSorter, SorterUnit};
+use repro::workload::Rng;
+
+const CASES: usize = 60;
+
+fn random_values(rng: &mut Rng, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.next_u8()).collect()
+}
+
+fn assert_permutation(idx: &[u16], n: usize, ctx: &str) {
+    let mut seen = vec![false; n];
+    for &i in idx {
+        assert!((i as usize) < n, "{ctx}: index {i} out of range");
+        assert!(!seen[i as usize], "{ctx}: duplicate index {i}");
+        seen[i as usize] = true;
+    }
+}
+
+/// Invariant 1+2+7: every design emits a key-sorted permutation.
+#[test]
+fn all_designs_emit_sorted_permutations() {
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let n = 2 + rng.next_below(80);
+        let values = random_values(&mut rng, n);
+        for d in all_designs(n) {
+            let ctx = format!("case {case}, n {n}, design {}", d.name());
+            let idx = d.sort_indices(&values);
+            assert_permutation(&idx, n, &ctx);
+            let keys: Vec<u8> = idx.iter().map(|&i| d.key(values[i as usize])).collect();
+            assert!(keys.windows(2).all(|w| w[0] <= w[1]), "{ctx}: keys {keys:?}");
+        }
+    }
+}
+
+/// Invariant 2: ACC, APP, CSN are stable (bitonic is exempt by design).
+#[test]
+fn counting_and_csn_sorts_are_stable() {
+    let mut rng = Rng::new(202);
+    for case in 0..CASES {
+        let n = 2 + rng.next_below(64);
+        let values = random_values(&mut rng, n);
+        let designs: Vec<Box<dyn SorterUnit>> = vec![
+            Box::new(AccPsu::new(n)),
+            Box::new(AppPsu::paper_default(n)),
+            Box::new(CsnSorter::new(n)),
+        ];
+        for d in designs {
+            let idx = d.sort_indices(&values);
+            let keys: Vec<u8> = idx.iter().map(|&i| d.key(values[i as usize])).collect();
+            for w in 0..idx.len().saturating_sub(1) {
+                if keys[w] == keys[w + 1] {
+                    assert!(
+                        idx[w] < idx[w + 1],
+                        "case {case} {}: unstable at {w}: {idx:?}",
+                        d.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Invariant 3: APP with the identity mapping is bit-identical to ACC.
+#[test]
+fn app_identity_equals_acc_everywhere() {
+    let mut rng = Rng::new(303);
+    for _ in 0..CASES {
+        let n = 2 + rng.next_below(100);
+        let values = random_values(&mut rng, n);
+        let acc = AccPsu::new(n);
+        let app = AppPsu::new(n, BucketMap::exact());
+        assert_eq!(acc.sort_indices(&values), app.sort_indices(&values));
+    }
+}
+
+/// Invariant 2 (cross-design): stable designs agree exactly with each other.
+#[test]
+fn stable_designs_agree_exactly() {
+    let mut rng = Rng::new(404);
+    for _ in 0..CASES {
+        let n = 2 + rng.next_below(60);
+        let values = random_values(&mut rng, n);
+        let acc = AccPsu::new(n).sort_indices(&values);
+        let csn = CsnSorter::new(n).sort_indices(&values);
+        assert_eq!(acc, csn);
+    }
+}
+
+/// Invariant 4: histogram sums to N; starts are an exclusive scan.
+#[test]
+fn histogram_and_prefix_sum_laws() {
+    use repro::psu::counting::CountingCore;
+    let mut rng = Rng::new(505);
+    for _ in 0..CASES {
+        let n = 1 + rng.next_below(128);
+        let b = 2 + rng.next_below(15);
+        let core = CountingCore::new(n, b);
+        let keys: Vec<u8> = (0..n).map(|_| rng.next_below(b) as u8).collect();
+        let hist = core.histogram(&keys);
+        assert_eq!(hist.iter().sum::<u32>() as usize, n);
+        let starts = core.starts(&hist);
+        assert_eq!(starts[0], 0);
+        for i in 1..b {
+            assert_eq!(starts[i], starts[i - 1] + hist[i - 1]);
+        }
+    }
+}
+
+/// Invariant 5: BT bounds — |Δpopcount| ≤ BT ≤ lanes·8 per boundary.
+#[test]
+fn bt_bounds_hold() {
+    let mut rng = Rng::new(606);
+    for _ in 0..CASES {
+        let bytes = random_values(&mut rng, 64);
+        let p = Packet::standard(&bytes);
+        let bt = p.internal_bt();
+        let flit_pc: Vec<u64> = p
+            .flits
+            .iter()
+            .map(|f| f.iter().map(|&b| popcount8(b) as u64).sum())
+            .collect();
+        let lower: u64 = flit_pc.windows(2).map(|w| w[0].abs_diff(w[1])).sum();
+        assert!(bt >= lower, "bt {bt} < popcount lower bound {lower}");
+        assert!(bt <= 3 * 128);
+    }
+}
+
+/// Invariant 5 (covariance): reorder-then-count == count-on-reordered.
+#[test]
+fn bt_accounting_is_permutation_covariant() {
+    let mut rng = Rng::new(707);
+    for _ in 0..CASES {
+        let bytes = random_values(&mut rng, 64);
+        let psu = AppPsu::paper_default(64);
+        let idx = psu.sort_indices(&bytes);
+        let via_reorder = Packet::standard(&psu.reorder(&bytes)).internal_bt();
+        let manual: Vec<u8> = idx.iter().map(|&i| bytes[i as usize]).collect();
+        let via_manual = Packet::standard(&manual).internal_bt();
+        assert_eq!(via_reorder, via_manual);
+    }
+}
+
+/// Invariant 6: conv accumulation is order-insensitive (platform level is
+/// covered in rust/tests/platform_integration.rs; here the PE datapath).
+#[test]
+fn pe_conv_order_insensitive() {
+    use repro::pe::Pe;
+    let mut rng = Rng::new(808);
+    for _ in 0..CASES {
+        let n = 1 + rng.next_below(25);
+        let inputs = random_values(&mut rng, n);
+        let weights = random_values(&mut rng, n);
+        let bias = rng.next_u64() as i32 % 1000;
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let pi: Vec<u8> = order.iter().map(|&i| inputs[i]).collect();
+        let pw: Vec<u8> = order.iter().map(|&i| weights[i]).collect();
+        let mut pe = Pe::new(0);
+        let a = pe.conv_window(&inputs, &weights, bias);
+        let b = pe.conv_window(&pi, &pw, bias);
+        assert_eq!(a, b);
+    }
+}
+
+/// Invariant 8: APP area strictly increases with bucket count, and is
+/// bounded above by ACC's.
+#[test]
+fn app_area_monotone_and_bounded() {
+    let tech = Tech::default();
+    for n in [9usize, 16, 25, 36, 49, 64] {
+        let acc_area = AccPsu::new(n).area_um2(&tech);
+        let mut prev = 0.0;
+        for k in 2..=9 {
+            let area = AppPsu::new(n, BucketMap::uniform(k)).area_um2(&tech);
+            assert!(area > prev, "n {n} k {k}: area not monotone");
+            assert!(area <= acc_area * 1.001, "n {n} k {k}: APP above ACC");
+            prev = area;
+        }
+    }
+}
+
+/// Buckets never decrease in popcount; the paper mapping covers [0, 3].
+#[test]
+fn bucket_map_monotone_random_thresholds() {
+    let mut rng = Rng::new(909);
+    for _ in 0..CASES {
+        // random strictly-increasing threshold subset of 1..=8
+        let mut th: Vec<u8> = (1..=8u8).filter(|_| rng.next_f64() < 0.5).collect();
+        if th.is_empty() {
+            th.push(1 + rng.next_below(8) as u8);
+        }
+        let map = BucketMap::from_thresholds(&th);
+        let buckets: Vec<u8> = (0..=8).map(|p| map.bucket_of_popcount(p)).collect();
+        assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "{th:?}: {buckets:?}");
+        assert_eq!(*buckets.last().unwrap() as usize, map.k() - 1);
+    }
+}
+
+/// Sorting any packet never changes the multiset of bytes (transmitting
+/// units only permute).
+#[test]
+fn reorder_preserves_multiset() {
+    let mut rng = Rng::new(1010);
+    for _ in 0..CASES {
+        let n = 1 + rng.next_below(96);
+        let values = random_values(&mut rng, n);
+        for d in all_designs(n) {
+            let mut out = d.reorder(&values);
+            let mut base = values.clone();
+            out.sort_unstable();
+            base.sort_unstable();
+            assert_eq!(out, base, "{}", d.name());
+        }
+    }
+}
+
+/// Lane-major framing is a bijection on packet bytes.
+#[test]
+fn lane_major_framing_preserves_bytes() {
+    let mut rng = Rng::new(1111);
+    for _ in 0..CASES {
+        let n = 1 + rng.next_below(64);
+        let bytes = random_values(&mut rng, n);
+        let p = Packet::from_bytes_lane_major(&bytes, 16);
+        let mut all: Vec<u8> = p.flits.iter().flatten().copied().collect();
+        // remove the structural zero padding
+        let mut with_pad = bytes.clone();
+        with_pad.resize(p.num_flits() * 16, 0);
+        all.sort_unstable();
+        with_pad.sort_unstable();
+        assert_eq!(all, with_pad);
+    }
+}

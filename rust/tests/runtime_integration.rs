@@ -1,0 +1,124 @@
+//! Runtime integration: the Rust hardware models cross-checked against the
+//! AOT-compiled JAX/Pallas artifacts through PJRT.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! loud message) if artifacts/ is absent so plain `cargo test` still works
+//! in a fresh checkout.
+
+use repro::psu::{AccPsu, AppPsu, BucketMap, SorterUnit};
+use repro::runtime::{Runtime, BT_BATCH, PACKET_ELEMS, PE_BATCH};
+use repro::workload::lenet::{self, QuantWeights};
+use repro::workload::{digits, Rng};
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/lenet_head.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::load("artifacts").expect("load artifacts"))
+}
+
+#[test]
+fn psu_sort_artifact_matches_hardware_models() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(42);
+    let packets: Vec<[u8; PACKET_ELEMS]> = (0..BT_BATCH)
+        .map(|_| {
+            let mut p = [0u8; PACKET_ELEMS];
+            p.iter_mut().for_each(|b| *b = rng.next_u8());
+            p
+        })
+        .collect();
+    let (acc_idx, app_idx) = rt.psu_sort(&packets).unwrap();
+    let hw_acc = AccPsu::new(PACKET_ELEMS);
+    let hw_app = AppPsu::new(PACKET_ELEMS, BucketMap::paper_k4());
+    for (i, p) in packets.iter().enumerate() {
+        assert_eq!(hw_acc.sort_indices(p), acc_idx[i], "ACC packet {i}");
+        assert_eq!(hw_app.sort_indices(p), app_idx[i], "APP packet {i}");
+    }
+}
+
+#[test]
+fn packet_bt_artifact_matches_link_model() {
+    use repro::noc::Packet;
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(77);
+    let packets: Vec<[[u8; 16]; 4]> = (0..128)
+        .map(|_| {
+            let mut p = [[0u8; 16]; 4];
+            for f in p.iter_mut() {
+                f.iter_mut().for_each(|b| *b = rng.next_u8());
+            }
+            p
+        })
+        .collect();
+    let got = rt.packet_bt(&packets).unwrap();
+    for (i, p) in packets.iter().enumerate() {
+        let bytes: Vec<u8> = p.iter().flatten().copied().collect();
+        let want = Packet::standard(&bytes).internal_bt() as u32;
+        assert_eq!(got[i], want, "packet {i}");
+    }
+}
+
+#[test]
+fn lenet_head_artifact_matches_integer_reference() {
+    let Some(rt) = runtime() else { return };
+    let imgs = digits::batch(PE_BATCH, 5);
+    let w = QuantWeights::random(5);
+    let f_imgs: Vec<Vec<f32>> = imgs
+        .iter()
+        .map(|img| img.iter().flatten().map(|&v| v as f32).collect())
+        .collect();
+    let f_w: Vec<f32> = (0..6)
+        .flat_map(|m| (0..25).map(move |t| (m, t)))
+        .map(|(m, t)| w.signed(m, t) as f32)
+        .collect();
+    let f_b: Vec<f32> = w.bias.iter().map(|&b| b as f32).collect();
+    let out = rt.lenet_head(&f_imgs, &f_w, &f_b).unwrap();
+    assert_eq!(out.len(), PE_BATCH);
+    for (i, img) in imgs.iter().enumerate() {
+        let want = lenet::pool_reference(&lenet::conv_reference(img, &w));
+        for m in 0..6 {
+            for y in 0..12 {
+                for x in 0..12 {
+                    let xv = out[i][m * 144 + y * 12 + x] as f64;
+                    let pe = want[m][y][x] as f64;
+                    // PE floors (>>2); XLA averages: gap < 1
+                    assert!(
+                        (xv - pe).abs() <= 0.7500001,
+                        "img {i} map {m} ({y},{x}): xla {xv} vs pe {pe}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sort_service_batches_and_answers_correctly() {
+    use repro::coordinator::SortService;
+    use std::time::Duration;
+    if !std::path::Path::new("artifacts/psu_sort.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let svc = SortService::spawn("artifacts".into(), Duration::from_millis(2)).unwrap();
+    let mut rng = Rng::new(9);
+    let packets: Vec<[u8; PACKET_ELEMS]> = (0..300)
+        .map(|_| {
+            let mut p = [0u8; PACKET_ELEMS];
+            p.iter_mut().for_each(|b| *b = rng.next_u8());
+            p
+        })
+        .collect();
+    let responses = svc.sort_many(&packets).unwrap();
+    assert_eq!(responses.len(), packets.len());
+    let hw = AccPsu::new(PACKET_ELEMS);
+    for (p, r) in packets.iter().zip(&responses) {
+        assert_eq!(hw.sort_indices(p), r.acc_indices);
+    }
+    // dynamic batching actually batched (300 requests ≤ a few dispatches)
+    let batches = svc.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches <= 30, "batches {batches} — batching broken?");
+    assert!(svc.metrics.mean_batch() > 5.0, "mean batch {}", svc.metrics.mean_batch());
+}

@@ -1,6 +1,7 @@
 //! Hot-path microbenchmarks (§Perf in EXPERIMENTS.md): the per-packet
 //! sort→frame→count pipeline that every experiment leans on, plus the
-//! PJRT-dispatched XLA twin for comparison when artifacts are present.
+//! batched execution-backend path the serving loop dispatches (and, with
+//! `--features pjrt`, its PJRT-dispatched XLA twin).
 
 use repro::benchutil::{bench, black_box};
 use repro::noc::{Link, Packet};
@@ -50,10 +51,33 @@ fn main() {
     });
     println!("  -> {:.2} Mpackets/s BT counting", m.per_second(1024) / 1e6);
 
-    // XLA twin through PJRT, when artifacts are present
+    // batched backend path — the serving loop's dispatch unit
+    {
+        use repro::runtime::{Backend, ReferenceBackend, BT_BATCH, PACKET_ELEMS};
+        let be = ReferenceBackend::new();
+        let xs: Vec<[u8; PACKET_ELEMS]> = packets
+            .iter()
+            .take(BT_BATCH)
+            .map(|p| {
+                let mut a = [0u8; PACKET_ELEMS];
+                a.copy_from_slice(p);
+                a
+            })
+            .collect();
+        let m = bench("ReferenceBackend psu_sort (256-packet batch)", 2, 10, || {
+            be.psu_sort(&xs).unwrap()
+        });
+        println!(
+            "  -> {:.2} Mpackets/s via backend",
+            m.per_second(BT_BATCH as u64) / 1e6
+        );
+    }
+
+    // XLA twin through PJRT, when compiled in and artifacts are present
+    #[cfg(feature = "pjrt")]
     if std::path::Path::new("artifacts/psu_sort.hlo.txt").exists() {
-        use repro::runtime::{Runtime, BT_BATCH, PACKET_ELEMS};
-        let rt = Runtime::load("artifacts").expect("artifacts");
+        use repro::runtime::{pjrt::PjrtBackend, Backend, BT_BATCH, PACKET_ELEMS};
+        let rt = PjrtBackend::load("artifacts").expect("artifacts");
         let xs: Vec<[u8; PACKET_ELEMS]> = packets
             .iter()
             .take(BT_BATCH)
@@ -67,7 +91,5 @@ fn main() {
             rt.psu_sort(&xs).unwrap()
         });
         println!("  -> {:.2} Mpackets/s via XLA", m.per_second(BT_BATCH as u64) / 1e6);
-    } else {
-        println!("(artifacts/ missing: skipping PJRT hot-path bench)");
     }
 }

@@ -3,12 +3,13 @@
 //!
 //! * generates 16 digit images + activation-statistics test vectors,
 //! * runs the simulated 16-PE platform under baseline/ACC/APP orderings,
-//! * loads the AOT JAX/Pallas artifacts through PJRT and cross-checks the
-//!   PE integers against XLA floats and the PSU hardware model against the
-//!   Pallas counting-sort kernel,
+//! * cross-checks the PE integers against the execution backend's floats
+//!   and the PSU hardware model against the backend's counting-sort kernel,
 //! * prints the paper's headline metrics.
 //!
-//! Requires `make artifacts` first.
+//! Runs fully offline on the pure-Rust reference backend; compile with
+//! `--features pjrt` (after `make artifacts`) to drive the AOT JAX/Pallas
+//! artifacts through PJRT instead.
 //!
 //! ```bash
 //! cargo run --release --example lenet_e2e
@@ -16,16 +17,16 @@
 
 use repro::experiments::e2e;
 use repro::hw::Tech;
-use repro::runtime::Runtime;
+use repro::runtime::{Backend, make_backend};
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
     let tech = Tech::default();
-    println!("loading artifacts from {dir}/ ...");
-    let rt = Runtime::load(&dir)?;
-    let result = e2e::run(&rt, 0xC0FFEE, &tech)?;
+    let backend = make_backend(&dir);
+    println!("execution backend: {}", backend.name());
+    let result = e2e::run(backend.as_ref(), 0xC0FFEE, &tech)?;
     println!("{}", result.render());
-    anyhow::ensure!(result.sort_mismatches == 0, "PSU vs Pallas mismatch");
+    anyhow::ensure!(result.sort_mismatches == 0, "PSU vs backend mismatch");
     anyhow::ensure!(result.max_numeric_gap <= 0.7500001, "numeric gap too large");
     anyhow::ensure!(result.acc_bt_reduction_pct > 10.0, "ACC BT reduction too small");
     println!("e2e OK");

@@ -2,11 +2,18 @@
 //!
 //! The paper's contribution is the sorting unit itself, so the coordinator
 //! is the thin-but-real driver the reproduction needs: a threaded service
-//! that accepts sort requests, batches them to the AOT artifact's fixed
-//! batch shape, dispatches one XLA `psu_sort` execution per batch, and
+//! that accepts sort requests, batches them to the backend's fixed batch
+//! shape, dispatches one [`Backend::psu_sort`] execution per batch, and
 //! returns per-request sorted indices. It is the serving-path twin of the
 //! hardware allocation unit: same algorithm, same batch geometry, Python
 //! nowhere in sight.
+//!
+//! The service is generic over the execution [`Backend`]: the default
+//! [`ReferenceBackend`] runs fully offline; the `pjrt` feature adds the
+//! XLA-artifact path. Because PJRT handles are `!Send` (Rc + raw
+//! pointers), the worker thread *constructs* its backend itself via the
+//! factory passed to [`SortService::spawn_with`] and owns it for its whole
+//! life; clients talk to it over channels only.
 //!
 //! Batching policy: collect up to [`crate::runtime::BT_BATCH`] requests or
 //! until `max_wait` elapses since the first queued request, whichever
@@ -19,11 +26,7 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::runtime::{Runtime, BT_BATCH, PACKET_ELEMS};
-
-// NOTE: the xla crate's PJRT handles are !Send (Rc + raw pointers), so the
-// worker thread *constructs* the Runtime itself from the artifact directory
-// and owns it for its whole life; clients talk to it over channels only.
+use crate::runtime::{Backend, ReferenceBackend, BT_BATCH, PACKET_ELEMS};
 
 /// One sort request: a 64-byte packet plus its reply channel.
 struct SortRequest {
@@ -47,7 +50,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
-    /// Mean requests per XLA dispatch (batching efficiency).
+    /// Mean requests per backend dispatch (batching efficiency).
     pub fn mean_batch(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -66,29 +69,49 @@ pub struct SortService {
 }
 
 impl SortService {
-    /// Spawn the batching worker; it loads + compiles the artifacts from
-    /// `artifacts_dir` on its own thread. Dropping every handle stops it.
-    pub fn spawn(artifacts_dir: String, max_wait: Duration) -> anyhow::Result<Self> {
+    /// Spawn the batching worker around a backend built by `make` **on the
+    /// worker thread** (backends need not be `Send`). Construction errors
+    /// are reported back synchronously; dropping every handle stops the
+    /// worker.
+    pub fn spawn_with<B, F>(make: F, max_wait: Duration) -> anyhow::Result<Self>
+    where
+        B: Backend + 'static,
+        F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+    {
         let (tx, rx) = mpsc::sync_channel::<SortRequest>(4 * BT_BATCH);
         let metrics = Arc::new(Metrics::default());
         let m = metrics.clone();
-        // report load errors back synchronously
         let (ready_tx, ready_rx) = mpsc::sync_channel::<anyhow::Result<()>>(1);
         std::thread::spawn(move || {
-            let runtime = match Runtime::load(&artifacts_dir) {
-                Ok(rt) => {
+            let backend = match make() {
+                Ok(b) => {
                     let _ = ready_tx.send(Ok(()));
-                    rt
+                    b
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
                     return;
                 }
             };
-            batch_loop(&runtime, rx, max_wait, m);
+            batch_loop(&backend, rx, max_wait, m);
         });
         ready_rx.recv().map_err(|_| anyhow::anyhow!("worker died"))??;
         Ok(Self { tx, metrics })
+    }
+
+    /// Spawn over the pure-Rust [`ReferenceBackend`] (fully offline).
+    pub fn spawn_reference(max_wait: Duration) -> anyhow::Result<Self> {
+        Self::spawn_with(|| Ok(ReferenceBackend::new()), max_wait)
+    }
+
+    /// Spawn over the PJRT backend; the worker loads + compiles the AOT
+    /// artifacts from `artifacts_dir` on its own thread.
+    #[cfg(feature = "pjrt")]
+    pub fn spawn_pjrt(artifacts_dir: String, max_wait: Duration) -> anyhow::Result<Self> {
+        Self::spawn_with(
+            move || crate::runtime::pjrt::PjrtBackend::load(&artifacts_dir),
+            max_wait,
+        )
     }
 
     /// Submit one packet and block until its sorted indices arrive.
@@ -120,7 +143,7 @@ impl SortService {
 }
 
 fn batch_loop(
-    runtime: &Runtime,
+    backend: &dyn Backend,
     rx: Receiver<SortRequest>,
     max_wait: Duration,
     metrics: Arc<Metrics>,
@@ -149,8 +172,8 @@ fn batch_loop(
         metrics.max_batch.fetch_max(batch.len() as u64, Ordering::Relaxed);
 
         let packets: Vec<[u8; PACKET_ELEMS]> = batch.iter().map(|r| r.packet).collect();
-        // one XLA execution per batch — the artifact's fixed shape pads
-        match runtime.psu_sort(&packets) {
+        // one backend execution per batch — the fixed batch shape pads
+        match backend.psu_sort(&packets) {
             Ok((acc, app)) => {
                 for (i, req) in batch.into_iter().enumerate() {
                     let _ = req.reply.send(Ok(SortResponse {
@@ -179,5 +202,16 @@ mod tests {
         m.requests.store(10, Ordering::Relaxed);
         m.batches.store(4, Ordering::Relaxed);
         assert!((m.mean_batch() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reference_service_round_trip() {
+        let svc = SortService::spawn_reference(Duration::from_millis(1)).unwrap();
+        let mut packet = [0u8; PACKET_ELEMS];
+        packet[0] = 0xFF; // the densest byte must be transmitted last
+        let resp = svc.sort(packet).unwrap();
+        assert_eq!(resp.acc_indices.len(), PACKET_ELEMS);
+        assert_eq!(*resp.acc_indices.last().unwrap(), 0);
+        assert_eq!(*resp.app_indices.last().unwrap(), 0);
     }
 }

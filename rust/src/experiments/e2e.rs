@@ -4,12 +4,13 @@
 //! 2. Run them through the simulated Fig. 3 platform under baseline / ACC /
 //!    APP orderings, collecting the paper's headline metrics (BT and link
 //!    power reduction).
-//! 3. Execute the AOT-compiled JAX/Pallas `lenet_head` artifact through the
-//!    PJRT runtime on the *same* tensors and cross-check the platform's
-//!    integer PE outputs against the XLA float outputs (exact up to the
-//!    pool divider: the PE floors, XLA averages — max gap 0.75).
-//! 4. Cross-check the PSU hardware model against the `psu_sort` artifact
-//!    (the Pallas counting-sort kernel) index-for-index.
+//! 3. Execute the `lenet_head` entry point of an execution [`Backend`]
+//!    (reference by default; the PJRT artifact path with `--features pjrt`)
+//!    on the *same* tensors and cross-check the platform's integer PE
+//!    outputs against the backend's float outputs (exact up to the pool
+//!    divider: the PE floors, the backend averages — max gap 0.75).
+//! 4. Cross-check the PSU hardware model against the backend's `psu_sort`
+//!    entry point (the counting-sort kernel) index-for-index.
 
 use anyhow::Result;
 
@@ -17,7 +18,7 @@ use crate::hw::Tech;
 use crate::platform::{Platform, PlatformOrdering};
 use crate::power::compare;
 use crate::psu::{AccPsu, AppPsu, BucketMap, SorterUnit};
-use crate::runtime::{Runtime, PACKET_ELEMS, PE_BATCH};
+use crate::runtime::{Backend, PACKET_ELEMS, PE_BATCH};
 use crate::workload::digits::{self, IMG};
 use crate::workload::lenet::{K, QuantWeights};
 use crate::workload::Rng;
@@ -30,16 +31,16 @@ pub struct E2e {
     pub app_bt_reduction_pct: f64,
     pub acc_link_power_reduction_pct: f64,
     pub app_link_power_reduction_pct: f64,
-    /// max |PE integer output − XLA float output| across all pooled pixels.
+    /// max |PE integer output − backend float output| across pooled pixels.
     pub max_numeric_gap: f64,
-    /// PSU-vs-Pallas sorted-index mismatches (must be 0).
+    /// PSU-vs-backend sorted-index mismatches (must be 0).
     pub sort_mismatches: usize,
     /// images processed.
     pub images: usize,
 }
 
-/// Run the end-to-end experiment. `runtime` is loaded from artifacts/.
-pub fn run(runtime: &Runtime, seed: u64, tech: &Tech) -> Result<E2e> {
+/// Run the end-to-end experiment against any execution backend.
+pub fn run(backend: &dyn Backend, seed: u64, tech: &Tech) -> Result<E2e> {
     // --- workload: one image per PE, shared quantized weights -------------
     let imgs = digits::batch(PE_BATCH, seed);
     let weights = QuantWeights::random(seed);
@@ -61,7 +62,7 @@ pub fn run(runtime: &Runtime, seed: u64, tech: &Tech) -> Result<E2e> {
     let acc_cmp = compare(tech, &rb, &ra);
     let app_cmp = compare(tech, &rb, &rp);
 
-    // --- XLA cross-check: lenet_head ---------------------------------------
+    // --- backend cross-check: lenet_head -----------------------------------
     let f_imgs: Vec<Vec<f32>> = imgs
         .iter()
         .map(|img| img.iter().flatten().map(|&v| v as f32).collect())
@@ -71,11 +72,11 @@ pub fn run(runtime: &Runtime, seed: u64, tech: &Tech) -> Result<E2e> {
         .map(|(m, t)| weights.signed(m, t) as f32)
         .collect();
     let f_b: Vec<f32> = weights.bias.iter().map(|&b| b as f32).collect();
-    let xla_out = runtime.lenet_head(&f_imgs, &f_w, &f_b)?;
+    let be_out = backend.lenet_head(&f_imgs, &f_w, &f_b)?;
 
     let mut max_gap = 0f64;
     for (i, pooled) in rb.pooled.iter().enumerate() {
-        let x = &xla_out[i];
+        let x = &be_out[i];
         for m in 0..6 {
             for y in 0..12 {
                 for xx in 0..12 {
@@ -87,7 +88,11 @@ pub fn run(runtime: &Runtime, seed: u64, tech: &Tech) -> Result<E2e> {
         }
     }
 
-    // --- XLA cross-check: psu_sort vs hardware PSU -------------------------
+    // --- backend cross-check: psu_sort vs hardware PSU ---------------------
+    // (On the reference backend this leg is definitionally zero-mismatch —
+    // it delegates to the same PSU models; it earns its keep under `pjrt`,
+    // where the oracle is the AOT Pallas kernel. The independent stable-sort
+    // oracle lives in rust/tests/runtime_integration.rs.)
     let mut rng = Rng::new(seed ^ 0xE2E);
     let packets: Vec<[u8; PACKET_ELEMS]> = (0..64)
         .map(|_| {
@@ -98,7 +103,7 @@ pub fn run(runtime: &Runtime, seed: u64, tech: &Tech) -> Result<E2e> {
             p
         })
         .collect();
-    let (acc_idx, app_idx) = runtime.psu_sort(&packets)?;
+    let (acc_idx, app_idx) = backend.psu_sort(&packets)?;
     let hw_acc = AccPsu::new(PACKET_ELEMS);
     let hw_app = AppPsu::new(PACKET_ELEMS, BucketMap::paper_k4());
     let mut mismatches = 0;
@@ -128,8 +133,8 @@ impl E2e {
             "== End-to-end: LeNet conv1+pool on {} digit images, 16 PEs ==\n\
              link BT reduction:    ACC {:.2}%  APP {:.2}%   (paper: 20.42 / 19.50)\n\
              link power reduction: ACC {:.2}%  APP {:.2}%   (paper: 18.27 / 16.48)\n\
-             PE-vs-XLA max numeric gap: {:.3} (pool divider rounding bound 0.75)\n\
-             PSU-vs-Pallas sorted-index mismatches: {}\n",
+             PE-vs-backend max numeric gap: {:.3} (pool divider rounding bound 0.75)\n\
+             PSU-vs-backend sorted-index mismatches: {}\n",
             self.images,
             self.acc_bt_reduction_pct,
             self.app_bt_reduction_pct,

@@ -20,9 +20,14 @@
 //! * [`pe`] / [`platform`] — the paper's Fig. 3 platform: an allocation
 //!   unit (PSU + transmitting units) feeding 16 LeNet conv/pool PEs.
 //! * [`workload`] — traffic and tensor generators for every experiment.
-//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas artifacts
+//! * [`runtime`] — pluggable execution backends behind the
+//!   [`runtime::Backend`] trait: the pure-Rust [`runtime::ReferenceBackend`]
+//!   (default, fully offline, bit-accurate against
+//!   `python/compile/kernels/ref.py`) and, behind the off-by-default `pjrt`
+//!   feature, a PJRT executor for the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); Python never runs at request time.
-//! * [`coordinator`] — experiment orchestration and the async serving loop.
+//! * [`coordinator`] — the dynamic-batching serving loop, generic over the
+//!   execution backend.
 //! * [`experiments`] — one module per paper table/figure.
 
 pub mod area;

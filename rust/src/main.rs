@@ -15,8 +15,8 @@
 //!   fig6|fig7 [--vectors N] DNN-workload power experiment
 //!   ablate-k [--packets N] [--ks 2,3,4,6,9]
 //!   multihop                multi-hop NoC scaling
-//!   e2e                     end-to-end three-layer driver (needs artifacts)
-//!   serve [--requests N]    threaded sort-service demo over the artifact
+//!   e2e                     end-to-end three-layer driver (offline backend)
+//!   serve [--requests N]    threaded sort-service demo over the backend
 //!   all                     everything above, in paper order
 //! ```
 
@@ -25,7 +25,7 @@ use anyhow::{bail, Result};
 use repro::config::Config;
 use repro::experiments::{ablate, e2e, fig2, fig4, fig5, fig67, layers, multihop, table1};
 use repro::hw::Tech;
-use repro::runtime::Runtime;
+use repro::runtime::make_backend;
 use repro::workload::TrafficModel;
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
@@ -93,7 +93,8 @@ commands:
   ablate-k [--ks 2,3,4,6,9] [--packets N]  bucket-count frontier
   multihop                  §IV-C3: multi-hop link-energy scaling
   layers                    §IV-C4 future work: ResNet/Transformer layer sweep
-  e2e                       end-to-end 3-layer driver (needs `make artifacts`)
+  e2e                       end-to-end 3-layer driver (reference backend by
+                            default; compile --features pjrt for artifacts)
   serve [--requests N]      dynamic-batching sort service demo
   all                       everything, in paper order
 ";
@@ -140,8 +141,8 @@ fn main() -> Result<()> {
             println!("{}", layers::render(&rows));
         }
         "e2e" => {
-            let rt = Runtime::load(&cfg.artifacts_dir)?;
-            println!("{}", e2e::run(&rt, cfg.seed, &tech)?.render());
+            let backend = make_backend(&cfg.artifacts_dir);
+            println!("{}", e2e::run(backend.as_ref(), cfg.seed, &tech)?.render());
         }
         "serve" => {
             let n = args.get_usize("requests")?.unwrap_or(1024);
@@ -162,10 +163,8 @@ fn main() -> Result<()> {
             println!("{}", multihop::render(&pts));
             let rows = layers::run(&layers::default_shapes(), 2048, cfg.seed, &tech);
             println!("{}", layers::render(&rows));
-            match Runtime::load(&cfg.artifacts_dir) {
-                Ok(rt) => println!("{}", e2e::run(&rt, cfg.seed, &tech)?.render()),
-                Err(e) => println!("(skipping e2e: {e})"),
-            }
+            let backend = make_backend(&cfg.artifacts_dir);
+            println!("{}", e2e::run(backend.as_ref(), cfg.seed, &tech)?.render());
         }
         "help" | "--help" | "-h" => print!("{HELP}"),
         other => bail!("unknown command {other:?}\n\n{HELP}"),
@@ -174,14 +173,18 @@ fn main() -> Result<()> {
 }
 
 /// Threaded sort-service demo: N concurrent clients, dynamic batching onto
-/// the AOT `psu_sort` artifact, throughput + batching-efficiency report.
+/// the backend's `psu_sort` entry point, throughput + batching report.
 fn serve_demo(cfg: &Config, n_requests: usize) -> Result<()> {
     use repro::coordinator::SortService;
     use repro::runtime::PACKET_ELEMS;
     use repro::workload::Rng;
     use std::time::{Duration, Instant};
 
-    let svc = SortService::spawn(cfg.artifacts_dir.clone(), Duration::from_millis(2))?;
+    let dir = cfg.artifacts_dir.clone();
+    let svc = SortService::spawn_with(
+        move || Ok(make_backend(&dir)),
+        Duration::from_millis(2),
+    )?;
     let mut rng = Rng::new(cfg.seed);
     let packets: Vec<[u8; PACKET_ELEMS]> = (0..n_requests)
         .map(|_| {
@@ -204,7 +207,7 @@ fn serve_demo(cfg: &Config, n_requests: usize) -> Result<()> {
     });
     let dt = start.elapsed();
     println!(
-        "served {} sort requests in {:.1} ms ({:.0} req/s), {} XLA batches, \
+        "served {} sort requests in {:.1} ms ({:.0} req/s), {} backend batches, \
          mean batch {:.1}, max batch {}",
         n_requests,
         dt.as_secs_f64() * 1e3,

@@ -1,19 +1,25 @@
-//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
-//! them from the Rust hot path. Python never runs at request time.
+//! Pluggable execution backends for the three L2 entry points.
 //!
-//! Interchange is HLO **text** (`artifacts/*.hlo.txt`): jax ≥ 0.5 emits
-//! serialized protos with 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
-//! and python/compile/aot.py).
+//! Every heavy kernel the serving loop and the experiments dispatch goes
+//! through the [`Backend`] trait:
 //!
-//! Three executables, one per L2 entry point:
-//! * `lenet_head`  — f32[16,28,28] × f32[6,5,5] × f32[6] → f32[16,6,12,12]
-//! * `psu_sort`    — i32[256,64] → (i32[256,64], i32[256,64])
-//! * `packet_bt`   — i32[256,4,16] → i32[256]
+//! * `lenet_head` — f32[16,28,28] × f32[6,5,5] × f32[6] → f32[16,6,12,12]
+//!   (LeNet conv1 + bias + ReLU + 2×2 average pool);
+//! * `psu_sort`   — i32[256,64] → (i32[256,64], i32[256,64]) (per-packet
+//!   sorted indices, ACC and APP k=4);
+//! * `packet_bt`  — i32[256,4,16] → i32[256] (per-packet bit transitions).
+//!
+//! Two implementations:
+//!
+//! * [`reference::ReferenceBackend`] (default) — pure Rust, bit-accurate
+//!   against the jnp oracles in `python/compile/kernels/ref.py`. No Python,
+//!   XLA, or network access; this is what CI and the offline build run.
+//! * [`pjrt::PjrtBackend`] (feature `pjrt`) — loads the AOT-compiled
+//!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and executes them through
+//!   a PJRT CPU client. Python never runs at request time. Requires the
+//!   unvendored `xla` crate, so the feature is off by default.
 
-use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow as eyre, Context, Result};
+use anyhow::Result;
 
 /// Shapes fixed at AOT time (must match python/compile/model.py).
 pub const PE_BATCH: usize = 16;
@@ -22,139 +28,96 @@ pub const PACKET_ELEMS: usize = 64;
 pub const PACKET_FLITS: usize = 4;
 pub const FLIT_LANES: usize = 16;
 
-/// A loaded, compiled artifact.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+pub mod reference;
 
-/// The runtime: a PJRT CPU client plus the compiled artifacts.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    pub lenet_head: Executable,
-    pub psu_sort: Executable,
-    pub packet_bt: Executable,
-}
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-fn load_one(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<Executable> {
-    let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
-    let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().ok_or_else(|| eyre!("bad path"))?,
-    )
-    .map_err(|e| eyre!("{e:?}"))
-    .with_context(|| format!("loading {path:?} (run `make artifacts` first)"))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    let exe = client.compile(&comp).map_err(|e| eyre!("compiling {name}: {e:?}"))?;
-    Ok(Executable { exe, name: name.to_string() })
-}
+pub use reference::ReferenceBackend;
 
-impl Runtime {
-    /// Load every artifact from `dir` and compile on the PJRT CPU client.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref();
-        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("pjrt cpu: {e:?}"))?;
-        Ok(Self {
-            lenet_head: load_one(&client, dir, "lenet_head")?,
-            psu_sort: load_one(&client, dir, "psu_sort")?,
-            packet_bt: load_one(&client, dir, "packet_bt")?,
-            client,
-        })
-    }
+/// An execution backend for the three L2 entry points.
+///
+/// Implementations are **not** required to be `Send`: the PJRT handles are
+/// `Rc` + raw pointers, so the serving loop constructs its backend on the
+/// worker thread (see [`crate::coordinator::SortService::spawn_with`]).
+pub trait Backend {
+    /// Backend name for logs and reports.
+    fn name(&self) -> &'static str;
 
     /// LeNet conv1+pool on a 16-image batch.
     ///
-    /// `imgs` is [16][28*28] normalized f32, `weights` is [6][25] f32,
+    /// `imgs` is [16][28*28] f32, `weights` is [6*5*5] f32 (map-major),
     /// `bias` is [6] f32; returns [16][6*12*12] f32.
-    pub fn lenet_head(
+    fn lenet_head(
+        &self,
+        imgs: &[Vec<f32>],
+        weights: &[f32],
+        bias: &[f32],
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// Sorted indices (ACC and APP k=4) for a batch of 64-byte packets.
+    ///
+    /// `out.0[p]` / `out.1[p]` hold, for slot order, the original index of
+    /// the element transmitted in that slot — a stable counting-sort
+    /// permutation keyed on the exact popcount (ACC) or the paper's k=4
+    /// bucket index (APP).
+    fn psu_sort(
+        &self,
+        packets: &[[u8; PACKET_ELEMS]],
+    ) -> Result<(Vec<Vec<u16>>, Vec<Vec<u16>>)>;
+
+    /// Per-packet bit-transition counts for a batch of [4][16]-byte packets
+    /// (sum over internal flit boundaries of popcount(flit_i ^ flit_{i+1})).
+    fn packet_bt(&self, packets: &[[[u8; FLIT_LANES]; PACKET_FLITS]]) -> Result<Vec<u32>>;
+}
+
+/// Pick the default execution backend for a binary: the PJRT artifact path
+/// when it is compiled in (`--features pjrt`) *and* its artifacts load, the
+/// pure-Rust [`ReferenceBackend`] otherwise.
+pub fn make_backend(artifacts_dir: &str) -> Box<dyn Backend> {
+    #[cfg(feature = "pjrt")]
+    {
+        match pjrt::PjrtBackend::load(artifacts_dir) {
+            Ok(b) => return Box::new(b),
+            Err(e) => eprintln!("(pjrt backend unavailable: {e:#}; using reference)"),
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    let _ = artifacts_dir;
+    Box::new(ReferenceBackend::new())
+}
+
+/// Boxed backends forward to their contents, so `Box<dyn Backend>` can be
+/// handed to anything generic over `B: Backend` (e.g. the sort service's
+/// worker-thread factory).
+impl<B: Backend + ?Sized> Backend for Box<B> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn lenet_head(
         &self,
         imgs: &[Vec<f32>],
         weights: &[f32],
         bias: &[f32],
     ) -> Result<Vec<Vec<f32>>> {
-        anyhow::ensure!(imgs.len() == PE_BATCH, "need {PE_BATCH} images");
-        let flat: Vec<f32> = imgs.iter().flatten().copied().collect();
-        let x = xla::Literal::vec1(&flat)
-            .reshape(&[PE_BATCH as i64, 28, 28])
-            .map_err(|e| eyre!("{e:?}"))?;
-        let w = xla::Literal::vec1(weights)
-            .reshape(&[6, 5, 5])
-            .map_err(|e| eyre!("{e:?}"))?;
-        let b = xla::Literal::vec1(bias);
-        let out = self
-            .lenet_head
-            .exe
-            .execute::<xla::Literal>(&[x, w, b])
-            .map_err(|e| eyre!("{e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| eyre!("{e:?}"))?;
-        let out = out.to_tuple1().map_err(|e| eyre!("{e:?}"))?;
-        let v = out.to_vec::<f32>().map_err(|e| eyre!("{e:?}"))?;
-        let per = 6 * 12 * 12;
-        Ok(v.chunks(per).map(|c| c.to_vec()).collect())
+        (**self).lenet_head(imgs, weights, bias)
     }
 
-    /// Sorted indices (ACC and APP k=4) for a batch of 64-byte packets.
-    pub fn psu_sort(&self, packets: &[[u8; PACKET_ELEMS]]) -> Result<(Vec<Vec<u16>>, Vec<Vec<u16>>)> {
-        anyhow::ensure!(packets.len() <= BT_BATCH, "batch too large");
-        let mut flat = vec![0i32; BT_BATCH * PACKET_ELEMS];
-        for (i, p) in packets.iter().enumerate() {
-            for (j, &b) in p.iter().enumerate() {
-                flat[i * PACKET_ELEMS + j] = b as i32;
-            }
-        }
-        let x = xla::Literal::vec1(&flat)
-            .reshape(&[BT_BATCH as i64, PACKET_ELEMS as i64])
-            .map_err(|e| eyre!("{e:?}"))?;
-        let out = self
-            .psu_sort
-            .exe
-            .execute::<xla::Literal>(&[x])
-            .map_err(|e| eyre!("{e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| eyre!("{e:?}"))?;
-        let (acc, app) = out.to_tuple2().map_err(|e| eyre!("{e:?}"))?;
-        let conv = |lit: xla::Literal| -> Result<Vec<Vec<u16>>> {
-            let v = lit.to_vec::<i32>().map_err(|e| eyre!("{e:?}"))?;
-            Ok(v.chunks(PACKET_ELEMS)
-                .take(packets.len())
-                .map(|c| c.iter().map(|&x| x as u16).collect())
-                .collect())
-        };
-        Ok((conv(acc)?, conv(app)?))
+    fn psu_sort(
+        &self,
+        packets: &[[u8; PACKET_ELEMS]],
+    ) -> Result<(Vec<Vec<u16>>, Vec<Vec<u16>>)> {
+        (**self).psu_sort(packets)
     }
 
-    /// Per-packet BT counts for a batch of [4][16]-byte packets.
-    pub fn packet_bt(&self, packets: &[[[u8; FLIT_LANES]; PACKET_FLITS]]) -> Result<Vec<u32>> {
-        anyhow::ensure!(packets.len() <= BT_BATCH, "batch too large");
-        let mut flat = vec![0i32; BT_BATCH * PACKET_FLITS * FLIT_LANES];
-        for (i, p) in packets.iter().enumerate() {
-            for (f, flit) in p.iter().enumerate() {
-                for (l, &b) in flit.iter().enumerate() {
-                    flat[(i * PACKET_FLITS + f) * FLIT_LANES + l] = b as i32;
-                }
-            }
-        }
-        let x = xla::Literal::vec1(&flat)
-            .reshape(&[BT_BATCH as i64, PACKET_FLITS as i64, FLIT_LANES as i64])
-            .map_err(|e| eyre!("{e:?}"))?;
-        let out = self
-            .packet_bt
-            .exe
-            .execute::<xla::Literal>(&[x])
-            .map_err(|e| eyre!("{e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| eyre!("{e:?}"))?;
-        let out = out.to_tuple1().map_err(|e| eyre!("{e:?}"))?;
-        let v = out.to_vec::<i32>().map_err(|e| eyre!("{e:?}"))?;
-        Ok(v.into_iter().take(packets.len()).map(|x| x as u32).collect())
+    fn packet_bt(&self, packets: &[[[u8; FLIT_LANES]; PACKET_FLITS]]) -> Result<Vec<u32>> {
+        (**self).packet_bt(packets)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // Integration tests that require built artifacts live in
-    // rust/tests/runtime_integration.rs; unit-level shape checks here.
     use super::*;
 
     #[test]

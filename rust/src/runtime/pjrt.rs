@@ -1,0 +1,149 @@
+//! PJRT backend: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from the Rust hot path. Python never runs at request time.
+//!
+//! Interchange is HLO **text** (`artifacts/*.hlo.txt`): jax ≥ 0.5 emits
+//! serialized protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+//! and python/compile/aot.py).
+//!
+//! Compiled only with `--features pjrt`: the `xla` PJRT bindings are not
+//! vendored in the offline build, so the default build uses
+//! [`super::reference::ReferenceBackend`] instead.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow as eyre, Context, Result};
+
+use super::{Backend, BT_BATCH, FLIT_LANES, PACKET_ELEMS, PACKET_FLITS, PE_BATCH};
+
+/// A loaded, compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The PJRT backend: a CPU client plus the compiled artifacts.
+pub struct PjrtBackend {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub lenet_head: Executable,
+    pub psu_sort: Executable,
+    pub packet_bt: Executable,
+}
+
+fn load_one(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<Executable> {
+    let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| eyre!("bad path"))?,
+    )
+    .map_err(|e| eyre!("{e:?}"))
+    .with_context(|| format!("loading {path:?} (run `make artifacts` first)"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| eyre!("compiling {name}: {e:?}"))?;
+    Ok(Executable { exe, name: name.to_string() })
+}
+
+impl PjrtBackend {
+    /// Load every artifact from `dir` and compile on the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("pjrt cpu: {e:?}"))?;
+        Ok(Self {
+            lenet_head: load_one(&client, dir, "lenet_head")?,
+            psu_sort: load_one(&client, dir, "psu_sort")?,
+            packet_bt: load_one(&client, dir, "packet_bt")?,
+            client,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn lenet_head(
+        &self,
+        imgs: &[Vec<f32>],
+        weights: &[f32],
+        bias: &[f32],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(imgs.len() == PE_BATCH, "need {PE_BATCH} images");
+        let flat: Vec<f32> = imgs.iter().flatten().copied().collect();
+        let x = xla::Literal::vec1(&flat)
+            .reshape(&[PE_BATCH as i64, 28, 28])
+            .map_err(|e| eyre!("{e:?}"))?;
+        let w = xla::Literal::vec1(weights)
+            .reshape(&[6, 5, 5])
+            .map_err(|e| eyre!("{e:?}"))?;
+        let b = xla::Literal::vec1(bias);
+        let out = self
+            .lenet_head
+            .exe
+            .execute::<xla::Literal>(&[x, w, b])
+            .map_err(|e| eyre!("{e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("{e:?}"))?;
+        let out = out.to_tuple1().map_err(|e| eyre!("{e:?}"))?;
+        let v = out.to_vec::<f32>().map_err(|e| eyre!("{e:?}"))?;
+        let per = 6 * 12 * 12;
+        Ok(v.chunks(per).map(|c| c.to_vec()).collect())
+    }
+
+    fn psu_sort(
+        &self,
+        packets: &[[u8; PACKET_ELEMS]],
+    ) -> Result<(Vec<Vec<u16>>, Vec<Vec<u16>>)> {
+        anyhow::ensure!(packets.len() <= BT_BATCH, "batch too large");
+        let mut flat = vec![0i32; BT_BATCH * PACKET_ELEMS];
+        for (i, p) in packets.iter().enumerate() {
+            for (j, &b) in p.iter().enumerate() {
+                flat[i * PACKET_ELEMS + j] = b as i32;
+            }
+        }
+        let x = xla::Literal::vec1(&flat)
+            .reshape(&[BT_BATCH as i64, PACKET_ELEMS as i64])
+            .map_err(|e| eyre!("{e:?}"))?;
+        let out = self
+            .psu_sort
+            .exe
+            .execute::<xla::Literal>(&[x])
+            .map_err(|e| eyre!("{e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("{e:?}"))?;
+        let (acc, app) = out.to_tuple2().map_err(|e| eyre!("{e:?}"))?;
+        let conv = |lit: xla::Literal| -> Result<Vec<Vec<u16>>> {
+            let v = lit.to_vec::<i32>().map_err(|e| eyre!("{e:?}"))?;
+            Ok(v.chunks(PACKET_ELEMS)
+                .take(packets.len())
+                .map(|c| c.iter().map(|&x| x as u16).collect())
+                .collect())
+        };
+        Ok((conv(acc)?, conv(app)?))
+    }
+
+    fn packet_bt(&self, packets: &[[[u8; FLIT_LANES]; PACKET_FLITS]]) -> Result<Vec<u32>> {
+        anyhow::ensure!(packets.len() <= BT_BATCH, "batch too large");
+        let mut flat = vec![0i32; BT_BATCH * PACKET_FLITS * FLIT_LANES];
+        for (i, p) in packets.iter().enumerate() {
+            for (f, flit) in p.iter().enumerate() {
+                for (l, &b) in flit.iter().enumerate() {
+                    flat[(i * PACKET_FLITS + f) * FLIT_LANES + l] = b as i32;
+                }
+            }
+        }
+        let x = xla::Literal::vec1(&flat)
+            .reshape(&[BT_BATCH as i64, PACKET_FLITS as i64, FLIT_LANES as i64])
+            .map_err(|e| eyre!("{e:?}"))?;
+        let out = self
+            .packet_bt
+            .exe
+            .execute::<xla::Literal>(&[x])
+            .map_err(|e| eyre!("{e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("{e:?}"))?;
+        let out = out.to_tuple1().map_err(|e| eyre!("{e:?}"))?;
+        let v = out.to_vec::<i32>().map_err(|e| eyre!("{e:?}"))?;
+        Ok(v.into_iter().take(packets.len()).map(|x| x as u32).collect())
+    }
+}

@@ -1,0 +1,252 @@
+//! The pure-Rust reference backend: bit-accurate against the jnp oracles in
+//! `python/compile/kernels/ref.py`, with no Python, XLA, or network access.
+//!
+//! * `psu_sort` is the hardware PSU model itself ([`crate::psu::AccPsu`] /
+//!   [`crate::psu::AppPsu`]): the same stable one-hot → histogram →
+//!   exclusive-prefix-sum → scatter dataflow `ref.py::sort_indices` writes
+//!   in jnp.
+//! * `packet_bt` mirrors `ref.py::packet_bt`: per packet, the sum over
+//!   consecutive flit pairs of popcount(flit_i XOR flit_{i+1}).
+//! * `lenet_head` mirrors `ref.py::lenet_head`: valid 5×5 convolution with
+//!   6 filters, bias, ReLU, then 2×2 average pooling, in f32.
+
+use anyhow::Result;
+
+use crate::psu::{AccPsu, AppPsu, BucketMap, SorterUnit};
+
+use super::{Backend, BT_BATCH, FLIT_LANES, PACKET_ELEMS, PACKET_FLITS, PE_BATCH};
+
+/// LeNet conv1 geometry fixed at AOT time (matches python/compile/model.py).
+const IMG: usize = 28;
+const KDIM: usize = 5;
+const MAPS: usize = 6;
+const CONV: usize = IMG - KDIM + 1; // 24
+const POOLED: usize = CONV / 2; // 12
+
+/// The default, dependency-free execution backend.
+pub struct ReferenceBackend {
+    acc: AccPsu,
+    app: AppPsu,
+}
+
+impl ReferenceBackend {
+    pub fn new() -> Self {
+        Self {
+            acc: AccPsu::new(PACKET_ELEMS),
+            app: AppPsu::new(PACKET_ELEMS, BucketMap::paper_k4()),
+        }
+    }
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn lenet_head(
+        &self,
+        imgs: &[Vec<f32>],
+        weights: &[f32],
+        bias: &[f32],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(imgs.len() == PE_BATCH, "need {PE_BATCH} images");
+        anyhow::ensure!(
+            weights.len() == MAPS * KDIM * KDIM,
+            "need {} weights",
+            MAPS * KDIM * KDIM
+        );
+        anyhow::ensure!(bias.len() == MAPS, "need {MAPS} biases");
+        let mut out = Vec::with_capacity(imgs.len());
+        for img in imgs {
+            anyhow::ensure!(img.len() == IMG * IMG, "image must be {IMG}x{IMG}");
+            // conv 5x5 valid + bias + ReLU
+            let mut conv = vec![0f32; MAPS * CONV * CONV];
+            for m in 0..MAPS {
+                for oy in 0..CONV {
+                    for ox in 0..CONV {
+                        let mut acc = bias[m];
+                        for dy in 0..KDIM {
+                            for dx in 0..KDIM {
+                                acc += img[(oy + dy) * IMG + ox + dx]
+                                    * weights[m * KDIM * KDIM + dy * KDIM + dx];
+                            }
+                        }
+                        conv[(m * CONV + oy) * CONV + ox] = acc.max(0.0);
+                    }
+                }
+            }
+            // 2x2 average pool, stride 2
+            let mut pooled = vec![0f32; MAPS * POOLED * POOLED];
+            for m in 0..MAPS {
+                for y in 0..POOLED {
+                    for x in 0..POOLED {
+                        let at = |dy: usize, dx: usize| {
+                            conv[(m * CONV + 2 * y + dy) * CONV + 2 * x + dx]
+                        };
+                        pooled[(m * POOLED + y) * POOLED + x] =
+                            (at(0, 0) + at(0, 1) + at(1, 0) + at(1, 1)) / 4.0;
+                    }
+                }
+            }
+            out.push(pooled);
+        }
+        Ok(out)
+    }
+
+    fn psu_sort(
+        &self,
+        packets: &[[u8; PACKET_ELEMS]],
+    ) -> Result<(Vec<Vec<u16>>, Vec<Vec<u16>>)> {
+        anyhow::ensure!(packets.len() <= BT_BATCH, "batch too large");
+        let acc = packets.iter().map(|p| self.acc.sort_indices(p)).collect();
+        let app = packets.iter().map(|p| self.app.sort_indices(p)).collect();
+        Ok((acc, app))
+    }
+
+    fn packet_bt(&self, packets: &[[[u8; FLIT_LANES]; PACKET_FLITS]]) -> Result<Vec<u32>> {
+        anyhow::ensure!(packets.len() <= BT_BATCH, "batch too large");
+        Ok(packets
+            .iter()
+            .map(|p| {
+                p.windows(2)
+                    .map(|w| {
+                        w[0].iter()
+                            .zip(&w[1])
+                            .map(|(&a, &b)| (a ^ b).count_ones())
+                            .sum::<u32>()
+                    })
+                    .sum()
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::popcount8;
+    use crate::workload::Rng;
+
+    #[test]
+    fn packet_bt_matches_hand_computed_counts() {
+        let be = ReferenceBackend::new();
+        // packet 0: 0 -> FF (128 flips) -> FF (0) -> 0F (64): total 192
+        let p0 = [[0x00u8; 16], [0xFF; 16], [0xFF; 16], [0x0F; 16]];
+        // packet 1: identical flits, zero transitions
+        let p1 = [[0xA5u8; 16]; 4];
+        // packet 2: single-lane edits — 0x01->0x03 (1 flip), hold (0),
+        // then lane 0 clears 0x03 (2) while lane 15 sets 0x80 (1): total 4
+        let mut p2 = [[0u8; 16]; 4];
+        p2[0][0] = 0x01;
+        p2[1][0] = 0x03;
+        p2[2][0] = 0x03;
+        p2[3][15] = 0x80;
+        let got = be.packet_bt(&[p0, p1, p2]).unwrap();
+        assert_eq!(got, vec![192, 0, 4]);
+    }
+
+    #[test]
+    fn packet_bt_matches_link_packet_model() {
+        use crate::noc::Packet;
+        let be = ReferenceBackend::new();
+        let mut rng = Rng::new(11);
+        let packets: Vec<[[u8; 16]; 4]> = (0..32)
+            .map(|_| {
+                let mut p = [[0u8; 16]; 4];
+                for f in p.iter_mut() {
+                    f.iter_mut().for_each(|b| *b = rng.next_u8());
+                }
+                p
+            })
+            .collect();
+        let got = be.packet_bt(&packets).unwrap();
+        for (i, p) in packets.iter().enumerate() {
+            let bytes: Vec<u8> = p.iter().flatten().copied().collect();
+            assert_eq!(got[i], Packet::standard(&bytes).internal_bt() as u32, "packet {i}");
+        }
+    }
+
+    #[test]
+    fn psu_sort_matches_stable_sort_oracle() {
+        let be = ReferenceBackend::new();
+        let mut rng = Rng::new(7);
+        let packets: Vec<[u8; PACKET_ELEMS]> = (0..16)
+            .map(|_| {
+                let mut p = [0u8; PACKET_ELEMS];
+                p.iter_mut().for_each(|b| *b = rng.next_u8());
+                p
+            })
+            .collect();
+        let (acc, app) = be.psu_sort(&packets).unwrap();
+        let map = BucketMap::paper_k4();
+        for (i, p) in packets.iter().enumerate() {
+            // Vec::sort_by_key is stable, like ref.py's counting sort.
+            let mut want: Vec<u16> = (0..PACKET_ELEMS as u16).collect();
+            want.sort_by_key(|&j| popcount8(p[j as usize]));
+            assert_eq!(acc[i], want, "ACC packet {i}");
+            let mut want: Vec<u16> = (0..PACKET_ELEMS as u16).collect();
+            want.sort_by_key(|&j| map.bucket_of(p[j as usize]));
+            assert_eq!(app[i], want, "APP packet {i}");
+        }
+    }
+
+    #[test]
+    fn psu_sort_rejects_oversized_batches() {
+        let be = ReferenceBackend::new();
+        let packets = vec![[0u8; PACKET_ELEMS]; BT_BATCH + 1];
+        assert!(be.psu_sort(&packets).is_err());
+    }
+
+    #[test]
+    fn lenet_head_shape_and_relu() {
+        let be = ReferenceBackend::new();
+        let imgs = vec![vec![1.0f32; IMG * IMG]; PE_BATCH];
+        let weights = vec![-1.0f32; MAPS * KDIM * KDIM]; // drives conv negative
+        let bias = vec![0.0f32; MAPS];
+        let out = be.lenet_head(&imgs, &weights, &bias).unwrap();
+        assert_eq!(out.len(), PE_BATCH);
+        assert_eq!(out[0].len(), MAPS * POOLED * POOLED);
+        assert!(out.iter().flatten().all(|&v| v == 0.0), "ReLU must clamp");
+    }
+
+    #[test]
+    fn lenet_head_matches_integer_reference() {
+        use crate::workload::lenet::{self, QuantWeights};
+        use crate::workload::digits;
+        let be = ReferenceBackend::new();
+        let imgs = digits::batch(PE_BATCH, 5);
+        let w = QuantWeights::random(5);
+        let f_imgs: Vec<Vec<f32>> = imgs
+            .iter()
+            .map(|img| img.iter().flatten().map(|&v| v as f32).collect())
+            .collect();
+        let f_w: Vec<f32> = (0..MAPS)
+            .flat_map(|m| (0..KDIM * KDIM).map(move |t| (m, t)))
+            .map(|(m, t)| w.signed(m, t) as f32)
+            .collect();
+        let f_b: Vec<f32> = w.bias.iter().map(|&b| b as f32).collect();
+        let out = be.lenet_head(&f_imgs, &f_w, &f_b).unwrap();
+        for (i, img) in imgs.iter().enumerate() {
+            let want = lenet::pool_reference(&lenet::conv_reference(img, &w));
+            for m in 0..MAPS {
+                for y in 0..POOLED {
+                    for x in 0..POOLED {
+                        let fv = out[i][(m * POOLED + y) * POOLED + x] as f64;
+                        let iv = want[m][y][x] as f64;
+                        // the PE floors (>>2); the float backend averages
+                        assert!(
+                            (fv - iv).abs() <= 0.7500001,
+                            "img {i} map {m} ({y},{x}): {fv} vs {iv}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Coordinator integration: the dynamic-batching sort service driven
+//! end-to-end on the pure-Rust reference backend — N concurrent clients,
+//! batching up to BT_BATCH, and every reply checked to be a valid
+//! permutation sorted by ('1'-bit count keyed) bucket.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use repro::coordinator::{SortResponse, SortService};
+use repro::popcount8;
+use repro::psu::BucketMap;
+use repro::runtime::{BT_BATCH, PACKET_ELEMS};
+use repro::workload::Rng;
+
+fn random_packets(n: usize, seed: u64) -> Vec<[u8; PACKET_ELEMS]> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut p = [0u8; PACKET_ELEMS];
+            p.iter_mut().for_each(|b| *b = rng.next_u8());
+            p
+        })
+        .collect()
+}
+
+/// Assert `idx` is a valid permutation of 0..64 whose keys under `key` are
+/// non-decreasing.
+fn check_sorted_permutation(
+    packet: &[u8; PACKET_ELEMS],
+    idx: &[u16],
+    key: impl Fn(u8) -> u8,
+    ctx: &str,
+) {
+    let mut seen = [false; PACKET_ELEMS];
+    for &i in idx {
+        assert!((i as usize) < PACKET_ELEMS, "{ctx}: index {i} out of range");
+        assert!(!seen[i as usize], "{ctx}: duplicate index {i}");
+        seen[i as usize] = true;
+    }
+    let keys: Vec<u8> = idx.iter().map(|&i| key(packet[i as usize])).collect();
+    assert!(
+        keys.windows(2).all(|w| w[0] <= w[1]),
+        "{ctx}: keys not sorted: {keys:?}"
+    );
+}
+
+/// Check both orderings of a reply: ACC keys are exact popcounts, APP keys
+/// the paper's k=4 buckets.
+fn check_response(packet: &[u8; PACKET_ELEMS], resp: &SortResponse, ctx: &str) {
+    let map = BucketMap::paper_k4();
+    check_sorted_permutation(packet, &resp.acc_indices, popcount8, &format!("{ctx}/acc"));
+    check_sorted_permutation(
+        packet,
+        &resp.app_indices,
+        |v| map.bucket_of(v),
+        &format!("{ctx}/app"),
+    );
+}
+
+#[test]
+fn concurrent_clients_get_correct_sorted_permutations() {
+    let svc = SortService::spawn_reference(Duration::from_millis(20)).unwrap();
+    let clients = 8;
+    let per_client = 300;
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let svc = svc.clone();
+            s.spawn(move || {
+                let packets = random_packets(per_client, 0xC0FFEE + c as u64);
+                let responses = svc.sort_many(&packets).expect("sort_many");
+                assert_eq!(responses.len(), packets.len());
+                for (i, (p, r)) in packets.iter().zip(&responses).enumerate() {
+                    check_response(p, r, &format!("client {c} packet {i}"));
+                }
+            });
+        }
+    });
+
+    let total = (clients * per_client) as u64;
+    let requests = svc.metrics.requests.load(Ordering::Relaxed);
+    let batches = svc.metrics.batches.load(Ordering::Relaxed);
+    let max_batch = svc.metrics.max_batch.load(Ordering::Relaxed);
+    assert_eq!(requests, total);
+    assert!(batches >= 1 && batches <= total);
+    assert!(max_batch <= BT_BATCH as u64, "batch overflow: {max_batch}");
+    // dynamic batching actually batched under concurrent load
+    assert!(
+        svc.metrics.mean_batch() > 1.0,
+        "mean batch {:.2} — batching broken?",
+        svc.metrics.mean_batch()
+    );
+}
+
+#[test]
+fn single_request_round_trip_and_determinism() {
+    let svc = SortService::spawn_reference(Duration::from_millis(1)).unwrap();
+    let packet = random_packets(1, 7)[0];
+    let a = svc.sort(packet).unwrap();
+    let b = svc.sort(packet).unwrap();
+    assert_eq!(a.acc_indices, b.acc_indices);
+    assert_eq!(a.app_indices, b.app_indices);
+    check_response(&packet, &a, "single");
+}
+
+#[test]
+fn oversubscribed_burst_respects_batch_cap() {
+    // flood more requests than one batch can hold; every reply must still
+    // arrive and be correct, across multiple dispatches.
+    let svc = SortService::spawn_reference(Duration::from_millis(5)).unwrap();
+    let packets = random_packets(BT_BATCH + 64, 21);
+    let responses = svc.sort_many(&packets).unwrap();
+    assert_eq!(responses.len(), packets.len());
+    for (i, (p, r)) in packets.iter().zip(&responses).enumerate() {
+        check_response(p, r, &format!("burst packet {i}"));
+    }
+    assert!(svc.metrics.batches.load(Ordering::Relaxed) >= 2);
+    assert!(svc.metrics.max_batch.load(Ordering::Relaxed) <= BT_BATCH as u64);
+}

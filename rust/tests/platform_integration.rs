@@ -75,10 +75,11 @@ fn config_failure_injection() {
     assert_eq!(Config::from_toml_str("").unwrap(), Config::default());
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
-fn runtime_load_fails_cleanly_without_artifacts() {
-    use repro::runtime::Runtime;
-    let Err(err) = Runtime::load("/nonexistent/artifacts") else {
+fn pjrt_load_fails_cleanly_without_artifacts() {
+    use repro::runtime::pjrt::PjrtBackend;
+    let Err(err) = PjrtBackend::load("/nonexistent/artifacts") else {
         panic!("expected load failure");
     };
     let msg = format!("{err:#}");

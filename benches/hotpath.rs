@@ -1,15 +1,24 @@
 //! Hot-path microbenchmarks (§Perf in EXPERIMENTS.md): the per-packet
-//! sort→frame→count pipeline that every experiment leans on, plus the
-//! batched execution-backend path the serving loop dispatches (and, with
-//! `--features pjrt`, its PJRT-dispatched XLA twin).
+//! sort→frame→count pipeline that every experiment leans on, the batched
+//! execution-backend path the serving engine dispatches (and, with
+//! `--features pjrt`, its PJRT-dispatched XLA twin), plus the
+//! `serve_throughput` scenario driving the public sharded `SortService`
+//! API end to end (1 shard vs N shards).
+//!
+//! Set `BENCHUTIL_JSON=path.json` to dump every measurement as JSON
+//! (uploaded as a CI artifact — the BENCH_* trajectory).
 
-use repro::benchutil::{bench, black_box};
+use std::time::Duration;
+
+use repro::benchutil::{self, bench, black_box, Measurement};
+use repro::coordinator::SortService;
 use repro::noc::{Link, Packet};
 use repro::psu::{AccPsu, AppPsu, BitonicSorter, BucketMap, CsnSorter, SorterUnit};
 use repro::workload::Rng;
 use repro::PACKET_BYTES;
 
 fn main() {
+    let mut all: Vec<Measurement> = Vec::new();
     let mut rng = Rng::new(3);
     let packets: Vec<Vec<u8>> = (0..1024)
         .map(|_| (0..PACKET_BYTES).map(|_| rng.next_u8()).collect())
@@ -30,6 +39,7 @@ fn main() {
             acc
         });
         println!("  -> {:.2} Mpackets/s", m.per_second(1024) / 1e6);
+        all.push(m);
     }
 
     // full per-packet pipeline: sort -> reorder -> frame -> count
@@ -43,6 +53,7 @@ fn main() {
         link.total_bt()
     });
     println!("  -> {:.2} Mpackets/s full pipeline", m.per_second(1024) / 1e6);
+    all.push(m);
 
     // BT counting alone
     let framed: Vec<Packet> = packets.iter().map(|p| Packet::standard(p)).collect();
@@ -50,8 +61,9 @@ fn main() {
         framed.iter().map(|p| black_box(p).internal_bt()).sum::<u64>()
     });
     println!("  -> {:.2} Mpackets/s BT counting", m.per_second(1024) / 1e6);
+    all.push(m);
 
-    // batched backend path — the serving loop's dispatch unit
+    // batched backend path — the serving engine's dispatch unit
     {
         use repro::runtime::{Backend, ReferenceBackend, BT_BATCH, PACKET_ELEMS};
         let be = ReferenceBackend::new();
@@ -71,6 +83,65 @@ fn main() {
             "  -> {:.2} Mpackets/s via backend",
             m.per_second(BT_BATCH as u64) / 1e6
         );
+        all.push(m);
+    }
+
+    // serve_throughput: the public sharded SortService API under concurrent
+    // clients, 1 shard vs 4 shards (acceptance: >= 2x req/s on a 4+ core
+    // host; per-request results stay popcount-sorted permutations).
+    {
+        use repro::runtime::PACKET_ELEMS;
+        let reqs: Vec<[u8; PACKET_ELEMS]> = (0..2048)
+            .map(|i| {
+                let mut a = [0u8; PACKET_ELEMS];
+                a.copy_from_slice(&packets[i % packets.len()]);
+                a
+            })
+            .collect();
+        let mut per_shard_rps = Vec::new();
+        for shards in [1usize, 4] {
+            let svc = SortService::spawn_reference_sharded(shards, Duration::from_micros(200))
+                .expect("spawn service");
+            let clients = 8;
+            let chunk = reqs.len().div_ceil(clients);
+            let m = bench(
+                &format!("serve_throughput ({shards} shard(s), 2048 reqs, 8 clients)"),
+                1,
+                5,
+                || {
+                    std::thread::scope(|s| {
+                        for c in reqs.chunks(chunk) {
+                            let svc = svc.clone();
+                            s.spawn(move || svc.sort_many(c).expect("sort"));
+                        }
+                    });
+                },
+            );
+            let rps = m.per_second(reqs.len() as u64);
+            println!(
+                "  -> {:.1} kreq/s over {} shard(s), mean batch {:.1}, p99 {:.1?}",
+                rps / 1e3,
+                shards,
+                svc.metrics.mean_batch(),
+                svc.metrics.latency.p99(),
+            );
+            per_shard_rps.push((shards, rps));
+            all.push(m);
+
+            // sanity: served results are still popcount-sorted permutations
+            let resp = svc.sort(reqs[0]).expect("sort");
+            let mut seen = [false; PACKET_ELEMS];
+            for &i in &resp.acc_indices {
+                seen[i as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "serve reply is not a permutation");
+            let keys: Vec<u32> =
+                resp.acc_indices.iter().map(|&i| reqs[0][i as usize].count_ones()).collect();
+            assert!(keys.windows(2).all(|w| w[0] <= w[1]), "serve reply not sorted");
+        }
+        if let [(_, one), (_, four)] = per_shard_rps[..] {
+            println!("  -> serve_throughput scaling: {:.2}x (4 shards vs 1)", four / one);
+        }
     }
 
     // XLA twin through PJRT, when compiled in and artifacts are present
@@ -91,5 +162,11 @@ fn main() {
             rt.psu_sort(&xs).unwrap()
         });
         println!("  -> {:.2} Mpackets/s via XLA", m.per_second(BT_BATCH as u64) / 1e6);
+        all.push(m);
+    }
+
+    if let Some(path) = benchutil::json_path_from_env() {
+        benchutil::write_json(&path, &all, &[]).expect("write benchutil JSON");
+        eprintln!("(benchutil JSON written to {path})");
     }
 }

@@ -1,6 +1,8 @@
 //! Minimal benchmarking harness (criterion isn't vendored in this offline
-//! build): warmup + timed iterations, median/mean/min reporting, and a
-//! `black_box` to defeat constant folding.
+//! build): warmup + timed iterations, median/mean/min reporting, a
+//! `black_box` to defeat constant folding, and a hand-rolled JSON dump
+//! (`BENCH_*` trajectory: CI uploads the file as a workflow artifact so
+//! throughput regressions are visible across PRs).
 
 use std::hint::black_box as bb;
 use std::time::{Duration, Instant};
@@ -32,6 +34,54 @@ impl Measurement {
     pub fn per_second(&self, items: u64) -> f64 {
         items as f64 / self.median.as_secs_f64()
     }
+
+    /// One JSON object (`{:?}` on the name handles quote escaping).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":{:?},\"iters\":{},\"median_ns\":{},\"mean_ns\":{},\"min_ns\":{}}}",
+            self.name,
+            self.iters,
+            self.median.as_nanos(),
+            self.mean.as_nanos(),
+            self.min.as_nanos()
+        )
+    }
+}
+
+/// JSON output path from the `BENCHUTIL_JSON` environment variable, if set
+/// and non-empty. Benches and the serve demo honor it.
+pub fn json_path_from_env() -> Option<String> {
+    std::env::var("BENCHUTIL_JSON").ok().filter(|p| !p.is_empty())
+}
+
+/// Write measurements plus free-form scalar metrics as one JSON document:
+/// `{"measurements": [...], "scalars": {...}}`. Non-finite scalars are
+/// serialized as `null` (JSON has no NaN/inf).
+pub fn write_json(
+    path: &str,
+    measurements: &[Measurement],
+    scalars: &[(&str, f64)],
+) -> std::io::Result<()> {
+    let mut s = String::from("{\"measurements\":[");
+    for (i, m) in measurements.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&m.to_json());
+    }
+    s.push_str("],\"scalars\":{");
+    for (i, (k, v)) in scalars.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        if v.is_finite() {
+            s.push_str(&format!("{k:?}:{v}"));
+        } else {
+            s.push_str(&format!("{k:?}:null"));
+        }
+    }
+    s.push_str("}}\n");
+    std::fs::write(path, s)
 }
 
 /// Time `f` over `iters` iterations after `warmup` untimed runs.
@@ -66,5 +116,29 @@ mod tests {
         assert!(m.min <= m.median);
         assert!(m.report().contains("noop"));
         assert!(m.per_second(100) > 0.0);
+    }
+
+    #[test]
+    fn json_round_trip_shape() {
+        let m = Measurement {
+            name: "sort \"fast\"".into(),
+            iters: 3,
+            median: Duration::from_nanos(1500),
+            mean: Duration::from_nanos(1600),
+            min: Duration::from_nanos(1400),
+        };
+        let j = m.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"median_ns\":1500"));
+        assert!(j.contains("\\\"fast\\\""), "quotes must be escaped: {j}");
+
+        let path = std::env::temp_dir().join("benchutil_json_test.json");
+        let path = path.to_str().unwrap();
+        write_json(path, &[m], &[("req_per_s", 1234.5), ("bad", f64::NAN)]).unwrap();
+        let body = std::fs::read_to_string(path).unwrap();
+        assert!(body.contains("\"measurements\":[{"));
+        assert!(body.contains("\"req_per_s\":1234.5"));
+        assert!(body.contains("\"bad\":null"));
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -1,55 +1,156 @@
-//! L3 coordinator: the serving loop of the allocation unit.
+//! L3 coordinator: the sharded, dynamically-batching serving engine of the
+//! allocation unit.
 //!
 //! The paper's contribution is the sorting unit itself, so the coordinator
-//! is the thin-but-real driver the reproduction needs: a threaded service
-//! that accepts sort requests, batches them to the backend's fixed batch
-//! shape, dispatches one [`Backend::psu_sort`] execution per batch, and
-//! returns per-request sorted indices. It is the serving-path twin of the
-//! hardware allocation unit: same algorithm, same batch geometry, Python
-//! nowhere in sight.
+//! is the scalable driver the reproduction needs: **N worker shards**, each
+//! owning one execution [`Backend`], accept sort requests over round-robin
+//! admission, batch them to the backend's fixed batch shape, dispatch one
+//! [`Backend::psu_sort`] execution per batch, and move the resulting index
+//! vectors straight into the replies (zero-copy: the backend's output
+//! buffers *are* the response payloads).
 //!
-//! The service is generic over the execution [`Backend`]: the default
+//! The engine is generic over the execution [`Backend`]: the default
 //! [`ReferenceBackend`] runs fully offline; the `pjrt` feature adds the
 //! XLA-artifact path. Because PJRT handles are `!Send` (Rc + raw
-//! pointers), the worker thread *constructs* its backend itself via the
-//! factory passed to [`SortService::spawn_with`] and owns it for its whole
-//! life; clients talk to it over channels only.
+//! pointers), every shard thread *constructs* its backend itself via the
+//! factory passed to [`SortService::spawn_sharded_with`] and owns it for
+//! its whole life; clients talk to shards over channels only.
 //!
-//! Batching policy: collect up to [`crate::runtime::BT_BATCH`] requests or
-//! until `max_wait` elapses since the first queued request, whichever
-//! comes first (the classic dynamic-batching rule). Implemented on std
+//! Batching policy, per shard: collect up to [`crate::runtime::BT_BATCH`]
+//! requests or until `max_wait` elapses since the first queued request,
+//! whichever comes first (the classic dynamic-batching rule). Admission is
+//! round-robin over shards, which keeps per-shard queues balanced under
+//! uniform load without any cross-shard locking. Implemented on std
 //! channels + threads (the build is offline; no async runtime is vendored
 //! — DESIGN.md §2).
+//!
+//! [`Metrics`] extends the request/batch counters with per-shard
+//! breakdowns and a fixed-bucket (power-of-two nanosecond) latency
+//! histogram: [`LatencyHistogram::p50`] / [`LatencyHistogram::p99`] come
+//! from 40 atomics, no extra dependencies and no allocation at record
+//! time.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::runtime::{Backend, ReferenceBackend, BT_BATCH, PACKET_ELEMS};
 
-/// One sort request: a 64-byte packet plus its reply channel.
+/// One sort request: a 64-byte packet, its admission timestamp, and its
+/// reply channel.
 struct SortRequest {
     packet: [u8; PACKET_ELEMS],
+    enqueued: Instant,
     reply: SyncSender<anyhow::Result<SortResponse>>,
 }
 
-/// The response: both orderings' indices.
+/// The response: both orderings' indices, moved out of the backend's batch
+/// output without copying.
 #[derive(Debug, Clone)]
 pub struct SortResponse {
     pub acc_indices: Vec<u16>,
     pub app_indices: Vec<u16>,
 }
 
-/// Service metrics.
-#[derive(Debug, Default)]
+/// Number of power-of-two latency buckets: bucket `i` counts requests with
+/// end-to-end latency in `[2^i, 2^(i+1))` nanoseconds, the last bucket
+/// absorbing everything ≥ 2^39 ns (~9 min).
+pub const LATENCY_BUCKETS: usize = 40;
+
+/// Fixed-bucket request-latency histogram (lock-free, allocation-free).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { counts: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one request's queue→reply latency.
+    pub fn record(&self, latency: Duration) {
+        let ns = latency.as_nanos().max(1) as u64;
+        let bucket = (63 - ns.leading_zeros() as usize).min(LATENCY_BUCKETS - 1);
+        self.counts[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total recorded samples.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate quantile (`q` in `[0, 1]`): the upper edge of the first
+    /// bucket at which the cumulative count reaches `q * total`.
+    /// [`Duration::ZERO`] when nothing has been recorded. The bucket edges
+    /// are powers of two, so the estimate is within 2× of the true value —
+    /// plenty for serving dashboards, and free of any sample buffer.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.total();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= target {
+                return Duration::from_nanos(1u64 << (i + 1).min(63));
+            }
+        }
+        Duration::from_nanos(u64::MAX)
+    }
+
+    /// Median latency (upper bucket edge).
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.50)
+    }
+
+    /// 99th-percentile latency (upper bucket edge).
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+}
+
+/// Service metrics: engine-wide counters, per-shard breakdowns, and the
+/// request-latency histogram.
+#[derive(Debug)]
 pub struct Metrics {
+    /// Total requests admitted to a backend batch.
     pub requests: AtomicU64,
+    /// Total backend dispatches.
     pub batches: AtomicU64,
+    /// Largest batch observed on any shard (compare-and-swap maintained).
     pub max_batch: AtomicU64,
+    /// Requests per shard (indexed by shard id).
+    pub shard_requests: Vec<AtomicU64>,
+    /// Backend dispatches per shard (indexed by shard id).
+    pub shard_batches: Vec<AtomicU64>,
+    /// Queue→reply latency of every successfully answered request.
+    pub latency: LatencyHistogram,
 }
 
 impl Metrics {
+    /// Metrics for an engine with `shards` workers.
+    pub fn new(shards: usize) -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            max_batch: AtomicU64::new(0),
+            shard_requests: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            shard_batches: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            latency: LatencyHistogram::default(),
+        }
+    }
+
+    /// Number of shards this metrics block tracks.
+    pub fn shards(&self) -> usize {
+        self.shard_requests.len()
+    }
+
     /// Mean requests per backend dispatch (batching efficiency).
     pub fn mean_batch(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
@@ -59,71 +160,165 @@ impl Metrics {
             self.requests.load(Ordering::Relaxed) as f64 / b as f64
         }
     }
+
+    /// Account one dispatched batch of `len` requests on `shard`.
+    ///
+    /// `max_batch` is maintained with an explicit compare-and-swap loop
+    /// (the classic atomic-max: only ever publish a strictly larger
+    /// value), so concurrent shard workers can never lose a larger
+    /// observed batch — a plain load+store pair would race. Shard ids are
+    /// engine-internal, so out-of-range indexing is a bug and panics.
+    pub fn record_batch(&self, shard: usize, len: u64) {
+        self.requests.fetch_add(len, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.shard_requests[shard].fetch_add(len, Ordering::Relaxed);
+        self.shard_batches[shard].fetch_add(1, Ordering::Relaxed);
+        let mut seen = self.max_batch.load(Ordering::Relaxed);
+        while len > seen {
+            match self.max_batch.compare_exchange_weak(
+                seen,
+                len,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => seen = now,
+            }
+        }
+    }
 }
 
-/// Handle for submitting requests; clone freely across threads.
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
+
+/// Handle for submitting requests; clone freely across threads. Dropping
+/// every handle disconnects the shard queues and stops the workers.
 #[derive(Clone)]
 pub struct SortService {
-    tx: SyncSender<SortRequest>,
+    shards: Arc<Vec<SyncSender<SortRequest>>>,
+    cursor: Arc<AtomicUsize>,
     pub metrics: Arc<Metrics>,
 }
 
 impl SortService {
-    /// Spawn the batching worker around a backend built by `make` **on the
-    /// worker thread** (backends need not be `Send`). Construction errors
-    /// are reported back synchronously; dropping every handle stops the
-    /// worker.
+    /// Spawn a single-shard engine around a backend built by `make` **on
+    /// the worker thread** (backends need not be `Send`, and the factory
+    /// is consumed). Construction errors are reported back synchronously.
     pub fn spawn_with<B, F>(make: F, max_wait: Duration) -> anyhow::Result<Self>
     where
         B: Backend + 'static,
         F: FnOnce() -> anyhow::Result<B> + Send + 'static,
     {
-        let (tx, rx) = mpsc::sync_channel::<SortRequest>(4 * BT_BATCH);
-        let metrics = Arc::new(Metrics::default());
-        let m = metrics.clone();
-        let (ready_tx, ready_rx) = mpsc::sync_channel::<anyhow::Result<()>>(1);
-        std::thread::spawn(move || {
-            let backend = match make() {
-                Ok(b) => {
-                    let _ = ready_tx.send(Ok(()));
-                    b
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            batch_loop(&backend, rx, max_wait, m);
-        });
-        ready_rx.recv().map_err(|_| anyhow::anyhow!("worker died"))??;
-        Ok(Self { tx, metrics })
+        let metrics = Arc::new(Metrics::new(1));
+        let (tx, ready) = spawn_shard(0, make, max_wait, metrics.clone());
+        ready.recv().map_err(|_| anyhow::anyhow!("worker died"))??;
+        Ok(Self {
+            shards: Arc::new(vec![tx]),
+            cursor: Arc::new(AtomicUsize::new(0)),
+            metrics,
+        })
     }
 
-    /// Spawn over the pure-Rust [`ReferenceBackend`] (fully offline).
+    /// Spawn the sharded engine: `shards` worker threads, each calling
+    /// `make(shard_id)` **on its own thread** to construct the backend it
+    /// will own (preserving the `!Send` PJRT constraint). Requests are
+    /// admitted round-robin; each shard batches independently up to
+    /// [`BT_BATCH`] or `max_wait`. Any shard's construction error fails
+    /// the spawn.
+    pub fn spawn_sharded_with<B, F>(
+        make: F,
+        shards: usize,
+        max_wait: Duration,
+    ) -> anyhow::Result<Self>
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> anyhow::Result<B> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(shards >= 1, "need at least one shard");
+        let make = Arc::new(make);
+        let metrics = Arc::new(Metrics::new(shards));
+        let mut txs = Vec::with_capacity(shards);
+        let mut readies = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let mk = make.clone();
+            let (tx, ready) =
+                spawn_shard(shard, move || (*mk)(shard), max_wait, metrics.clone());
+            txs.push(tx);
+            readies.push(ready);
+        }
+        for (shard, ready) in readies.into_iter().enumerate() {
+            ready
+                .recv()
+                .map_err(|_| anyhow::anyhow!("shard {shard} worker died"))??;
+        }
+        Ok(Self {
+            shards: Arc::new(txs),
+            cursor: Arc::new(AtomicUsize::new(0)),
+            metrics,
+        })
+    }
+
+    /// Spawn a single shard over the pure-Rust [`ReferenceBackend`].
     pub fn spawn_reference(max_wait: Duration) -> anyhow::Result<Self> {
-        Self::spawn_with(|| Ok(ReferenceBackend::new()), max_wait)
+        Self::spawn_reference_sharded(1, max_wait)
     }
 
-    /// Spawn over the PJRT backend; the worker loads + compiles the AOT
+    /// Spawn `shards` shards over the pure-Rust [`ReferenceBackend`]
+    /// (fully offline).
+    pub fn spawn_reference_sharded(shards: usize, max_wait: Duration) -> anyhow::Result<Self> {
+        Self::spawn_sharded_with(|_| Ok(ReferenceBackend::new()), shards, max_wait)
+    }
+
+    /// Spawn over the PJRT backend; each shard loads + compiles the AOT
     /// artifacts from `artifacts_dir` on its own thread.
     #[cfg(feature = "pjrt")]
     pub fn spawn_pjrt(artifacts_dir: String, max_wait: Duration) -> anyhow::Result<Self> {
-        Self::spawn_with(
-            move || crate::runtime::pjrt::PjrtBackend::load(&artifacts_dir),
+        Self::spawn_pjrt_sharded(artifacts_dir, 1, max_wait)
+    }
+
+    /// Sharded PJRT engine: one PJRT client + executable set per shard.
+    #[cfg(feature = "pjrt")]
+    pub fn spawn_pjrt_sharded(
+        artifacts_dir: String,
+        shards: usize,
+        max_wait: Duration,
+    ) -> anyhow::Result<Self> {
+        Self::spawn_sharded_with(
+            move |_| crate::runtime::pjrt::PjrtBackend::load(&artifacts_dir),
+            shards,
             max_wait,
         )
+    }
+
+    /// Number of worker shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Round-robin admission of one request.
+    fn submit(
+        &self,
+        packet: [u8; PACKET_ELEMS],
+        reply: SyncSender<anyhow::Result<SortResponse>>,
+    ) -> anyhow::Result<()> {
+        let shard = self.cursor.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.shards[shard]
+            .send(SortRequest { packet, enqueued: Instant::now(), reply })
+            .map_err(|_| anyhow::anyhow!("service stopped"))
     }
 
     /// Submit one packet and block until its sorted indices arrive.
     pub fn sort(&self, packet: [u8; PACKET_ELEMS]) -> anyhow::Result<SortResponse> {
         let (reply, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(SortRequest { packet, reply })
-            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+        self.submit(packet, reply)?;
         rx.recv().map_err(|_| anyhow::anyhow!("service dropped request"))?
     }
 
-    /// Submit a whole slice and collect responses (amortizes batching).
+    /// Submit a whole slice and collect responses (amortizes batching and
+    /// spreads the burst across every shard).
     pub fn sort_many(
         &self,
         packets: &[[u8; PACKET_ELEMS]],
@@ -131,9 +326,7 @@ impl SortService {
         let mut rxs = Vec::with_capacity(packets.len());
         for &p in packets {
             let (reply, rx) = mpsc::sync_channel(1);
-            self.tx
-                .send(SortRequest { packet: p, reply })
-                .map_err(|_| anyhow::anyhow!("service stopped"))?;
+            self.submit(p, reply)?;
             rxs.push(rx);
         }
         rxs.into_iter()
@@ -142,8 +335,39 @@ impl SortService {
     }
 }
 
+/// Spawn one shard worker: build the backend via `make` on the new thread,
+/// report readiness, then run the batch loop until every sender is gone.
+fn spawn_shard<B, F>(
+    shard: usize,
+    make: F,
+    max_wait: Duration,
+    metrics: Arc<Metrics>,
+) -> (SyncSender<SortRequest>, Receiver<anyhow::Result<()>>)
+where
+    B: Backend + 'static,
+    F: FnOnce() -> anyhow::Result<B> + Send + 'static,
+{
+    let (tx, rx) = mpsc::sync_channel::<SortRequest>(4 * BT_BATCH);
+    let (ready_tx, ready_rx) = mpsc::sync_channel::<anyhow::Result<()>>(1);
+    std::thread::spawn(move || {
+        let backend = match make() {
+            Ok(b) => {
+                let _ = ready_tx.send(Ok(()));
+                b
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+                return;
+            }
+        };
+        batch_loop(&backend, shard, rx, max_wait, metrics);
+    });
+    (tx, ready_rx)
+}
+
 fn batch_loop(
     backend: &dyn Backend,
+    shard: usize,
     rx: Receiver<SortRequest>,
     max_wait: Duration,
     metrics: Arc<Metrics>,
@@ -167,19 +391,26 @@ fn batch_loop(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        metrics.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics.max_batch.fetch_max(batch.len() as u64, Ordering::Relaxed);
+        metrics.record_batch(shard, batch.len() as u64);
 
         let packets: Vec<[u8; PACKET_ELEMS]> = batch.iter().map(|r| r.packet).collect();
         // one backend execution per batch — the fixed batch shape pads
         match backend.psu_sort(&packets) {
-            Ok((acc, app)) => {
-                for (i, req) in batch.into_iter().enumerate() {
-                    let _ = req.reply.send(Ok(SortResponse {
-                        acc_indices: acc[i].clone(),
-                        app_indices: app[i].clone(),
-                    }));
+            Ok((acc, app)) if acc.len() == batch.len() && app.len() == batch.len() => {
+                // move each index vector straight into its reply — the
+                // backend's outputs are the response payloads (zero-copy)
+                for ((req, acc_indices), app_indices) in
+                    batch.into_iter().zip(acc).zip(app)
+                {
+                    metrics.latency.record(req.enqueued.elapsed());
+                    let _ = req.reply.send(Ok(SortResponse { acc_indices, app_indices }));
+                }
+            }
+            Ok(_) => {
+                for req in batch {
+                    let _ = req
+                        .reply
+                        .send(Err(anyhow::anyhow!("backend returned wrong batch size")));
                 }
             }
             Err(e) => {
@@ -198,10 +429,59 @@ mod tests {
     #[test]
     fn metrics_default_zero_and_mean() {
         let m = Metrics::default();
+        assert_eq!(m.shards(), 1);
         assert_eq!(m.mean_batch(), 0.0);
         m.requests.store(10, Ordering::Relaxed);
         m.batches.store(4, Ordering::Relaxed);
         assert!((m.mean_batch() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_batch_tracks_totals_shards_and_max() {
+        let m = Metrics::new(2);
+        m.record_batch(0, 3);
+        m.record_batch(1, 7);
+        m.record_batch(0, 5);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 15);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 3);
+        assert_eq!(m.shard_requests[0].load(Ordering::Relaxed), 8);
+        assert_eq!(m.shard_requests[1].load(Ordering::Relaxed), 7);
+        assert_eq!(m.shard_batches[0].load(Ordering::Relaxed), 2);
+        assert_eq!(m.shard_batches[1].load(Ordering::Relaxed), 1);
+        // CAS max: the later, smaller batch must not regress the maximum
+        assert_eq!(m.max_batch.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn max_batch_survives_concurrent_updates() {
+        let m = Arc::new(Metrics::new(4));
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let m = m.clone();
+                s.spawn(move || {
+                    for len in 1..=64u64 {
+                        m.record_batch(t, len);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.max_batch.load(Ordering::Relaxed), 64);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 4 * (64 * 65 / 2));
+    }
+
+    #[test]
+    fn latency_histogram_quantiles() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.p50(), Duration::ZERO);
+        for _ in 0..99 {
+            h.record(Duration::from_micros(3)); // bucket [2048, 4096) ns
+        }
+        h.record(Duration::from_millis(20));
+        assert_eq!(h.total(), 100);
+        // p50 upper edge of the 3 µs bucket; p99 still in the fast band
+        assert_eq!(h.p50(), Duration::from_nanos(4096));
+        assert_eq!(h.p99(), Duration::from_nanos(4096));
+        assert!(h.quantile(1.0) >= Duration::from_millis(16));
     }
 
     #[test]
@@ -213,5 +493,30 @@ mod tests {
         assert_eq!(resp.acc_indices.len(), PACKET_ELEMS);
         assert_eq!(*resp.acc_indices.last().unwrap(), 0);
         assert_eq!(*resp.app_indices.last().unwrap(), 0);
+        assert_eq!(svc.metrics.latency.total(), 1);
+    }
+
+    #[test]
+    fn sharded_service_round_robin_reaches_every_shard() {
+        let svc =
+            SortService::spawn_reference_sharded(3, Duration::from_micros(100)).unwrap();
+        assert_eq!(svc.shards(), 3);
+        let packets = [[0x5Au8; PACKET_ELEMS]; 9];
+        let responses = svc.sort_many(&packets).unwrap();
+        assert_eq!(responses.len(), 9);
+        // round-robin admission: every shard saw at least one request
+        for s in 0..3 {
+            assert!(
+                svc.metrics.shard_requests[s].load(Ordering::Relaxed) >= 1,
+                "shard {s} starved"
+            );
+        }
+        let total: u64 = svc
+            .metrics
+            .shard_requests
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(total, svc.metrics.requests.load(Ordering::Relaxed));
     }
 }

@@ -11,8 +11,16 @@
 //!    divider: the PE floors, the backend averages — max gap 0.75).
 //! 4. Cross-check the PSU hardware model against the backend's `psu_sort`
 //!    entry point (the counting-sort kernel) index-for-index.
+//! 5. Serve the same packets through a 2-shard
+//!    [`crate::coordinator::SortService`] and cross-check every reply
+//!    against the backend's direct `psu_sort` output — the serving engine
+//!    must be a transparent wrapper around the kernel.
+
+use std::time::Duration;
 
 use anyhow::Result;
+
+use crate::coordinator::SortService;
 
 use crate::hw::Tech;
 use crate::platform::{Platform, PlatformOrdering};
@@ -35,6 +43,8 @@ pub struct E2e {
     pub max_numeric_gap: f64,
     /// PSU-vs-backend sorted-index mismatches (must be 0).
     pub sort_mismatches: usize,
+    /// sharded-service-vs-backend sorted-index mismatches (must be 0).
+    pub service_mismatches: usize,
     /// images processed.
     pub images: usize,
 }
@@ -90,9 +100,9 @@ pub fn run(backend: &dyn Backend, seed: u64, tech: &Tech) -> Result<E2e> {
 
     // --- backend cross-check: psu_sort vs hardware PSU ---------------------
     // (On the reference backend this leg is definitionally zero-mismatch —
-    // it delegates to the same PSU models; it earns its keep under `pjrt`,
-    // where the oracle is the AOT Pallas kernel. The independent stable-sort
-    // oracle lives in rust/tests/runtime_integration.rs.)
+    // both routes are the one sortcore scatter; it earns its keep under
+    // `pjrt`, where the oracle is the AOT Pallas kernel. The independent
+    // stable-sort oracle lives in rust/tests/runtime_integration.rs.)
     let mut rng = Rng::new(seed ^ 0xE2E);
     let packets: Vec<[u8; PACKET_ELEMS]> = (0..64)
         .map(|_| {
@@ -116,6 +126,19 @@ pub fn run(backend: &dyn Backend, seed: u64, tech: &Tech) -> Result<E2e> {
         }
     }
 
+    // --- serving-engine cross-check: sharded service vs direct kernel ------
+    // (The service always runs the reference backend — it is the offline
+    // serving path — so under `pjrt` this leg also cross-checks the AOT
+    // kernel against the reference implementation, reply by reply.)
+    let svc = SortService::spawn_reference_sharded(2, Duration::from_micros(200))?;
+    let responses = svc.sort_many(&packets)?;
+    let mut service_mismatches = 0;
+    for (i, r) in responses.iter().enumerate() {
+        if r.acc_indices != acc_idx[i] || r.app_indices != app_idx[i] {
+            service_mismatches += 1;
+        }
+    }
+
     Ok(E2e {
         acc_bt_reduction_pct: acc_cmp.bt_reduction_pct,
         app_bt_reduction_pct: app_cmp.bt_reduction_pct,
@@ -123,6 +146,7 @@ pub fn run(backend: &dyn Backend, seed: u64, tech: &Tech) -> Result<E2e> {
         app_link_power_reduction_pct: app_cmp.link_power_reduction_pct,
         max_numeric_gap: max_gap,
         sort_mismatches: mismatches,
+        service_mismatches,
         images: PE_BATCH,
     })
 }
@@ -134,7 +158,8 @@ impl E2e {
              link BT reduction:    ACC {:.2}%  APP {:.2}%   (paper: 20.42 / 19.50)\n\
              link power reduction: ACC {:.2}%  APP {:.2}%   (paper: 18.27 / 16.48)\n\
              PE-vs-backend max numeric gap: {:.3} (pool divider rounding bound 0.75)\n\
-             PSU-vs-backend sorted-index mismatches: {}\n",
+             PSU-vs-backend sorted-index mismatches: {}\n\
+             serving-engine-vs-backend mismatches (2 shards): {}\n",
             self.images,
             self.acc_bt_reduction_pct,
             self.app_bt_reduction_pct,
@@ -142,6 +167,7 @@ impl E2e {
             self.app_link_power_reduction_pct,
             self.max_numeric_gap,
             self.sort_mismatches,
+            self.service_mismatches,
         )
     }
 }

@@ -13,8 +13,12 @@
 //!
 //! * [`hw`] — standard-cell area/capacitance models and toggle-counting
 //!   power accounting (the "commercial EDA tools" substitute).
+//! * [`sortcore`] — the single popcount → bucket map → stable counting
+//!   scatter implementation (allocation-free `sort_into` APIs); every
+//!   layer that orders bytes routes through it.
 //! * [`psu`] — the sorting units: ACC-PSU, APP-PSU, and the Bitonic / CSN
-//!   baselines, each with behavioural, area, and activity models.
+//!   baselines, each with behavioural (via [`sortcore`]), area, and
+//!   activity models.
 //! * [`noc`] — 128-bit link with flit framing and BT ledger; multi-hop
 //!   extension.
 //! * [`pe`] / [`platform`] — the paper's Fig. 3 platform: an allocation
@@ -26,8 +30,8 @@
 //!   `python/compile/kernels/ref.py`) and, behind the off-by-default `pjrt`
 //!   feature, a PJRT executor for the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); Python never runs at request time.
-//! * [`coordinator`] — the dynamic-batching serving loop, generic over the
-//!   execution backend.
+//! * [`coordinator`] — the sharded dynamic-batching serving engine,
+//!   generic over the execution backend.
 //! * [`experiments`] — one module per paper table/figure.
 
 pub mod area;
@@ -43,6 +47,7 @@ pub mod power;
 pub mod psu;
 pub mod report;
 pub mod runtime;
+pub mod sortcore;
 pub mod wave;
 pub mod workload;
 

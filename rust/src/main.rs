@@ -1,26 +1,16 @@
 //! `repro` CLI: regenerate every table and figure of the paper, run the
-//! ablations and the end-to-end driver, or start the sort service demo.
+//! ablations and the end-to-end driver, or start the sharded sort-service
+//! demo.
 //!
 //! Std-only argument parsing (the build is offline; no CLI crate is
-//! vendored). Usage:
+//! vendored). Flags accept both `--key value` and `--key=value`; unknown
+//! commands or flags print the usage to stderr and exit with status 2.
 //!
 //! ```text
 //! repro <command> [--config FILE] [--seed N] [command options]
-//!
-//! commands:
-//!   table1 [--packets N]    Table I: BT per flit, four ordering strategies
-//!   fig2                    ordered-flit snapshot after the APP-PSU
-//!   fig4 [--n K]            APP-PSU cycle-trace waveforms
-//!   fig5                    area breakdown of the four sorter designs
-//!   fig6|fig7 [--vectors N] DNN-workload power experiment
-//!   ablate-k [--packets N] [--ks 2,3,4,6,9]
-//!   multihop                multi-hop NoC scaling
-//!   e2e                     end-to-end three-layer driver (offline backend)
-//!   serve [--requests N]    threaded sort-service demo over the backend
-//!   all                     everything above, in paper order
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use repro::config::Config;
 use repro::experiments::{ablate, e2e, fig2, fig4, fig5, fig67, layers, multihop, table1};
@@ -28,7 +18,25 @@ use repro::hw::Tech;
 use repro::runtime::make_backend;
 use repro::workload::TrafficModel;
 
-/// Minimal flag parser: `--key value` pairs after the subcommand.
+/// Flags every command accepts.
+const GLOBAL_FLAGS: &[&str] = &["config", "seed"];
+
+/// Per-command flag whitelist; `None` marks an unknown command.
+fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
+    Some(match cmd {
+        "table1" => &["packets"],
+        "fig2" | "fig5" | "multihop" | "layers" | "e2e" | "all" => &[],
+        "fig4" => &["n"],
+        "fig6" | "fig7" => &["vectors"],
+        "ablate-k" => &["ks", "packets"],
+        "serve" => &["requests", "shards", "max-wait-us"],
+        "help" | "--help" | "-h" => &[],
+        _ => return None,
+    })
+}
+
+/// Minimal flag parser: `--key value` / `--key=value` pairs after the
+/// subcommand.
 struct Args {
     cmd: String,
     flags: Vec<(String, String)>,
@@ -36,22 +44,46 @@ struct Args {
 
 impl Args {
     fn parse() -> Result<Self> {
-        let mut argv = std::env::args().skip(1);
-        let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+        Self::parse_from(std::env::args().skip(1).collect())
+    }
+
+    fn parse_from(argv: Vec<String>) -> Result<Self> {
+        let mut it = argv.into_iter();
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let rest: Vec<String> = it.collect();
         let mut flags = Vec::new();
-        let rest: Vec<String> = argv.collect();
         let mut i = 0;
         while i < rest.len() {
             let k = rest[i]
                 .strip_prefix("--")
-                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {}", rest[i]))?;
-            let v = rest
-                .get(i + 1)
-                .ok_or_else(|| anyhow::anyhow!("--{k} needs a value"))?;
-            flags.push((k.to_string(), v.clone()));
-            i += 2;
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {:?}", rest[i]))?;
+            if let Some((key, value)) = k.split_once('=') {
+                anyhow::ensure!(!key.is_empty(), "malformed flag {:?}", rest[i]);
+                flags.push((key.to_string(), value.to_string()));
+                i += 1;
+            } else {
+                let v = rest
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--{k} needs a value"))?;
+                flags.push((k.to_string(), v.clone()));
+                i += 2;
+            }
         }
         Ok(Self { cmd, flags })
+    }
+
+    /// Reject unknown commands and unknown flags (satisfying: bad CLI input
+    /// must explain itself and exit nonzero, never fall through to `help`
+    /// with exit 0).
+    fn validate(&self) -> Result<()> {
+        let allowed = allowed_flags(&self.cmd)
+            .ok_or_else(|| anyhow::anyhow!("unknown command {:?}", self.cmd))?;
+        for (k, _) in &self.flags {
+            if !GLOBAL_FLAGS.contains(&k.as_str()) && !allowed.contains(&k.as_str()) {
+                anyhow::bail!("unknown flag --{k} for command {:?}", self.cmd);
+            }
+        }
+        Ok(())
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -83,6 +115,7 @@ const HELP: &str = "repro — reproduction of \"'1'-bit Count-based Sorting Unit
 Reduce Link Power in DNN Accelerators\"
 
 usage: repro <command> [--config FILE] [--seed N] [options]
+       (flags accept both `--key value` and `--key=value`)
 
 commands:
   table1 [--packets N]      Table I: BT/flit under four ordering strategies
@@ -95,12 +128,20 @@ commands:
   layers                    §IV-C4 future work: ResNet/Transformer layer sweep
   e2e                       end-to-end 3-layer driver (reference backend by
                             default; compile --features pjrt for artifacts)
-  serve [--requests N]      dynamic-batching sort service demo
+  serve [--requests N] [--shards S] [--max-wait-us U]
+                            sharded dynamic-batching sort-service demo
+                            (set BENCHUTIL_JSON=path to dump JSON metrics)
   all                       everything, in paper order
 ";
 
 fn main() -> Result<()> {
-    let args = Args::parse()?;
+    let args = match Args::parse().and_then(|a| a.validate().map(|()| a)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
     let mut cfg = match args.get("config") {
         Some(p) => Config::from_toml_file(p)?,
         None => Config::default(),
@@ -146,7 +187,9 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let n = args.get_usize("requests")?.unwrap_or(1024);
-            serve_demo(&cfg, n)?;
+            let shards = args.get_usize("shards")?.unwrap_or(1);
+            let wait_us = args.get_usize("max-wait-us")?.unwrap_or(2000);
+            serve_demo(&cfg, n, shards, wait_us)?;
         }
         "all" => {
             println!("{}", table1::run(&model, cfg.table1_packets, cfg.seed).render());
@@ -167,23 +210,33 @@ fn main() -> Result<()> {
             println!("{}", e2e::run(backend.as_ref(), cfg.seed, &tech)?.render());
         }
         "help" | "--help" | "-h" => print!("{HELP}"),
-        other => bail!("unknown command {other:?}\n\n{HELP}"),
+        // validate() rejects unknown commands; this arm only fires if the
+        // dispatch table and allowed_flags() drift apart — fail gracefully.
+        other => {
+            eprintln!("error: unknown command {other:?}\n\n{HELP}");
+            std::process::exit(2);
+        }
     }
     Ok(())
 }
 
-/// Threaded sort-service demo: N concurrent clients, dynamic batching onto
-/// the backend's `psu_sort` entry point, throughput + batching report.
-fn serve_demo(cfg: &Config, n_requests: usize) -> Result<()> {
+/// Sharded sort-service demo: N concurrent clients, round-robin admission,
+/// per-shard dynamic batching onto the backend's `psu_sort` entry point,
+/// throughput + batching + latency report (and a benchutil JSON dump when
+/// `BENCHUTIL_JSON` is set).
+fn serve_demo(cfg: &Config, n_requests: usize, shards: usize, wait_us: usize) -> Result<()> {
+    use repro::benchutil;
     use repro::coordinator::SortService;
     use repro::runtime::PACKET_ELEMS;
     use repro::workload::Rng;
+    use std::sync::atomic::Ordering;
     use std::time::{Duration, Instant};
 
     let dir = cfg.artifacts_dir.clone();
-    let svc = SortService::spawn_with(
-        move || Ok(make_backend(&dir)),
-        Duration::from_millis(2),
+    let svc = SortService::spawn_sharded_with(
+        move |_| Ok(make_backend(&dir)),
+        shards,
+        Duration::from_micros(wait_us as u64),
     )?;
     let mut rng = Rng::new(cfg.seed);
     let packets: Vec<[u8; PACKET_ELEMS]> = (0..n_requests)
@@ -206,15 +259,91 @@ fn serve_demo(cfg: &Config, n_requests: usize) -> Result<()> {
         }
     });
     let dt = start.elapsed();
+    let m = &svc.metrics;
+    let req_per_s = n_requests as f64 / dt.as_secs_f64();
     println!(
-        "served {} sort requests in {:.1} ms ({:.0} req/s), {} backend batches, \
-         mean batch {:.1}, max batch {}",
+        "served {} sort requests over {} shard(s) in {:.1} ms ({:.0} req/s)",
         n_requests,
+        shards,
         dt.as_secs_f64() * 1e3,
-        n_requests as f64 / dt.as_secs_f64(),
-        svc.metrics.batches.load(std::sync::atomic::Ordering::Relaxed),
-        svc.metrics.mean_batch(),
-        svc.metrics.max_batch.load(std::sync::atomic::Ordering::Relaxed),
+        req_per_s,
     );
+    println!(
+        "  {} backend batches, mean batch {:.1}, max batch {}",
+        m.batches.load(Ordering::Relaxed),
+        m.mean_batch(),
+        m.max_batch.load(Ordering::Relaxed),
+    );
+    for s in 0..m.shards() {
+        println!(
+            "  shard {s}: {} requests in {} batches",
+            m.shard_requests[s].load(Ordering::Relaxed),
+            m.shard_batches[s].load(Ordering::Relaxed),
+        );
+    }
+    let (p50, p99) = (m.latency.p50(), m.latency.p99());
+    println!("  latency p50 {:.1?} p99 {:.1?} (histogram upper edges)", p50, p99);
+
+    if let Some(path) = benchutil::json_path_from_env() {
+        benchutil::write_json(
+            &path,
+            &[],
+            &[
+                ("serve_requests", n_requests as f64),
+                ("serve_shards", shards as f64),
+                ("serve_req_per_s", req_per_s),
+                ("serve_batches", m.batches.load(Ordering::Relaxed) as f64),
+                ("serve_mean_batch", m.mean_batch()),
+                ("serve_max_batch", m.max_batch.load(Ordering::Relaxed) as f64),
+                ("serve_latency_p50_us", p50.as_secs_f64() * 1e6),
+                ("serve_latency_p99_us", p99.as_secs_f64() * 1e6),
+            ],
+        )?;
+        eprintln!("(benchutil JSON written to {path})");
+    }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()).collect()).unwrap()
+    }
+
+    #[test]
+    fn parses_space_and_equals_forms() {
+        let a = args(&["serve", "--requests", "100", "--shards=4", "--max-wait-us=50"]);
+        assert_eq!(a.cmd, "serve");
+        assert_eq!(a.get_usize("requests").unwrap(), Some(100));
+        assert_eq!(a.get_usize("shards").unwrap(), Some(4));
+        assert_eq!(a.get_usize("max-wait-us").unwrap(), Some(50));
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn equals_form_allows_empty_value_but_not_empty_key() {
+        let a = args(&["table1", "--packets="]);
+        assert_eq!(a.get("packets"), Some(""));
+        assert!(a.get_usize("packets").is_err(), "empty number must not parse");
+        assert!(
+            Args::parse_from(vec!["table1".into(), "--=5".into()]).is_err(),
+            "empty key must be rejected"
+        );
+    }
+
+    #[test]
+    fn rejects_unknown_command_and_flag() {
+        assert!(args(&["frobnicate"]).validate().is_err());
+        assert!(args(&["table1", "--shards", "2"]).validate().is_err());
+        // global flags stay valid everywhere
+        args(&["table1", "--seed", "7", "--packets=10"]).validate().unwrap();
+    }
+
+    #[test]
+    fn missing_value_and_bare_positional_error() {
+        assert!(Args::parse_from(vec!["serve".into(), "--requests".into()]).is_err());
+        assert!(Args::parse_from(vec!["serve".into(), "oops".into()]).is_err());
+    }
 }

@@ -46,7 +46,7 @@ impl SorterUnit for AccPsu {
     }
 
     fn sort_indices(&self, values: &[u8]) -> Vec<u16> {
-        // key computation fused into the counting sort (no key vector)
+        // key computation fused into the sortcore scatter (no key vector)
         self.core.sort_indices_by(values, |v| v.count_ones() as u8)
     }
 

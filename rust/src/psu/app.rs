@@ -9,7 +9,8 @@
 use crate::hw::pipeline::PipelineModel;
 use crate::hw::{Inventory, ToggleLedger};
 
-use super::bucket::BucketMap;
+use crate::sortcore::BucketMap;
+
 use super::counting::CountingCore;
 use super::popcount::BucketEncoder;
 use super::traits::SorterUnit;
@@ -58,7 +59,7 @@ impl SorterUnit for AppPsu {
     }
 
     fn sort_indices(&self, values: &[u8]) -> Vec<u16> {
-        // key computation (one LUT load) fused into the counting sort
+        // key computation (one LUT load) fused into the sortcore scatter
         let map = self.encoder.map();
         self.core.sort_indices_by(values, |v| map.bucket_of(v))
     }

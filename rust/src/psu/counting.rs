@@ -8,13 +8,17 @@
 //! 3. exclusive prefix sum → per-key starting addresses;
 //! 4. stable rank within key + scatter → sorted index vector.
 //!
-//! The behavioural model is bit-exact against the hardware (and against the
-//! Pallas kernel `python/compile/kernels/sortidx.py` through the AOT
-//! artifact). The structural model elaborates each of those four blocks to
-//! cells; everything except the scatter crossbar scales with the bucket
-//! count `b`, which is exactly the lever the APP approximation pulls.
+//! The *behavioural* model is the crate-wide [`crate::sortcore`]
+//! implementation — this module holds no sorting loop of its own, so the
+//! gate-level units can never drift from the serving path. It is bit-exact
+//! against the hardware (and against the Pallas kernel
+//! `python/compile/kernels/sortidx.py` through the AOT artifact). The
+//! *structural* model elaborates each of the four blocks to cells;
+//! everything except the scatter crossbar scales with the bucket count
+//! `b`, which is exactly the lever the APP approximation pulls.
 
 use crate::hw::{CellClass, Inventory, Stage};
+use crate::sortcore;
 
 /// ceil(log2(x)) for x >= 1.
 pub fn clog2(x: usize) -> usize {
@@ -52,24 +56,18 @@ impl CountingCore {
         clog2(self.b)
     }
 
-    /// Frequency histogram of `keys`.
+    /// Frequency histogram of `keys` (delegates to [`sortcore`]).
     pub fn histogram(&self, keys: &[u8]) -> Vec<u32> {
         debug_assert_eq!(keys.len(), self.n);
         let mut h = vec![0u32; self.b];
-        for &k in keys {
-            h[k as usize] += 1;
-        }
+        sortcore::histogram_into(keys, |k| k, &mut h);
         h
     }
 
     /// Exclusive prefix sum (per-bucket starting addresses).
     pub fn starts(&self, hist: &[u32]) -> Vec<u32> {
-        let mut s = Vec::with_capacity(self.b);
-        let mut acc = 0u32;
-        for &h in hist {
-            s.push(acc);
-            acc += h;
-        }
+        let mut s = hist.to_vec();
+        sortcore::exclusive_prefix_sum(&mut s);
         s
     }
 
@@ -80,43 +78,12 @@ impl CountingCore {
         self.sort_indices_by(keys, |k| k)
     }
 
-    /// Counting sort with the key function fused into the passes — no
-    /// intermediate key vector. For b ≤ 16 (always true at W = 8) the
-    /// histogram and running start addresses live in one stack array, so
-    /// the only heap allocation is the output permutation
-    /// (EXPERIMENTS.md §Perf).
+    /// Counting sort with the key function fused into the passes — the
+    /// crate-wide [`sortcore::sort_into_by`] kernel (allocation-free except
+    /// for the output permutation).
     pub fn sort_indices_by(&self, values: &[u8], key: impl Fn(u8) -> u8) -> Vec<u16> {
         debug_assert_eq!(values.len(), self.n);
-        let mut out = vec![0u16; self.n];
-        if self.b <= 16 {
-            let mut next = [0u32; 16];
-            for &v in values {
-                next[key(v) as usize] += 1;
-            }
-            // in-place exclusive scan: counts -> start addresses
-            let mut acc = 0u32;
-            for slot in next.iter_mut().take(self.b) {
-                let c = *slot;
-                *slot = acc;
-                acc += c;
-            }
-            for (i, &v) in values.iter().enumerate() {
-                let k = key(v) as usize;
-                let pos = next[k] as usize;
-                next[k] += 1;
-                out[pos] = i as u16;
-            }
-        } else {
-            let keys: Vec<u8> = values.iter().map(|&v| key(v)).collect();
-            let hist = self.histogram(&keys);
-            let mut next = self.starts(&hist);
-            for (i, &k) in keys.iter().enumerate() {
-                let pos = next[k as usize] as usize;
-                next[k as usize] += 1;
-                out[pos] = i as u16;
-            }
-        }
-        out
+        sortcore::sort_indices_by(values, self.b, key)
     }
 
     /// Structural inventory of the sorting stage (Fig. 5 "sorting unit").

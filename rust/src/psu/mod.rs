@@ -15,13 +15,14 @@
 //!
 //! Shared pieces: [`popcount::PopcountUnit`] (4-bit-LUT + adder-tree
 //! Hamming-weight unit and its approximate bucket-encoder variant) and
-//! [`counting::CountingCore`] (one-hot → histogram → prefix sum → stable
-//! scatter).
+//! [`counting::CountingCore`] (the *structural* model of the one-hot →
+//! histogram → prefix sum → stable scatter stage; the behavioural sort
+//! itself is the crate-wide [`crate::sortcore`] implementation, which this
+//! layer delegates to).
 
 pub mod acc;
 pub mod app;
 pub mod bitonic;
-pub mod bucket;
 pub mod counting;
 pub mod csn;
 pub mod popcount;
@@ -30,9 +31,12 @@ pub mod traits;
 pub use acc::AccPsu;
 pub use app::AppPsu;
 pub use bitonic::BitonicSorter;
-pub use bucket::BucketMap;
 pub use csn::CsnSorter;
 pub use traits::SorterUnit;
+
+/// The APP-PSU bucket mapping lives in [`crate::sortcore`] (it is part of
+/// the shared ordering core); re-exported here for the hardware layer.
+pub use crate::sortcore::BucketMap;
 
 /// Construct every design the paper synthesizes, for a given sort width
 /// (kernel size K = 25 or 49).

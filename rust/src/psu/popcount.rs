@@ -15,7 +15,7 @@
 use crate::hw::{CellClass, Inventory, Stage};
 use crate::WIDTH;
 
-use super::bucket::BucketMap;
+use crate::sortcore::BucketMap;
 
 /// Exact popcount unit for `n` parallel W-bit elements.
 #[derive(Debug, Clone)]

@@ -12,7 +12,8 @@
 //! Two implementations:
 //!
 //! * [`reference::ReferenceBackend`] (default) — pure Rust, bit-accurate
-//!   against the jnp oracles in `python/compile/kernels/ref.py`. No Python,
+//!   against the jnp oracles in `python/compile/kernels/ref.py`; its
+//!   `psu_sort` is the crate-wide [`crate::sortcore`] scatter. No Python,
 //!   XLA, or network access; this is what CI and the offline build run.
 //! * [`pjrt::PjrtBackend`] (feature `pjrt`) — loads the AOT-compiled
 //!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and executes them through
@@ -38,8 +39,9 @@ pub use reference::ReferenceBackend;
 /// An execution backend for the three L2 entry points.
 ///
 /// Implementations are **not** required to be `Send`: the PJRT handles are
-/// `Rc` + raw pointers, so the serving loop constructs its backend on the
-/// worker thread (see [`crate::coordinator::SortService::spawn_with`]).
+/// `Rc` + raw pointers, so every serving shard constructs its own backend
+/// on its worker thread (see
+/// [`crate::coordinator::SortService::spawn_sharded_with`]).
 pub trait Backend {
     /// Backend name for logs and reports.
     fn name(&self) -> &'static str;

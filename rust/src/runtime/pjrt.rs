@@ -9,6 +9,11 @@
 //! Compiled only with `--features pjrt`: the `xla` PJRT bindings are not
 //! vendored in the offline build, so the default build uses
 //! [`super::reference::ReferenceBackend`] instead.
+//!
+//! PJRT handles are `Rc` + raw pointers, hence `!Send`: under the sharded
+//! serving engine every shard loads and compiles its *own* client +
+//! executables on its worker thread
+//! ([`crate::coordinator::SortService::spawn_pjrt_sharded`]).
 
 use std::path::{Path, PathBuf};
 

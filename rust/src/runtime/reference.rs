@@ -1,10 +1,11 @@
 //! The pure-Rust reference backend: bit-accurate against the jnp oracles in
 //! `python/compile/kernels/ref.py`, with no Python, XLA, or network access.
 //!
-//! * `psu_sort` is the hardware PSU model itself ([`crate::psu::AccPsu`] /
-//!   [`crate::psu::AppPsu`]): the same stable one-hot → histogram →
-//!   exclusive-prefix-sum → scatter dataflow `ref.py::sort_indices` writes
-//!   in jnp.
+//! * `psu_sort` is the crate-wide [`crate::sortcore`] ordering core — the
+//!   same stable one-hot → histogram → exclusive-prefix-sum → scatter
+//!   dataflow `ref.py::sort_indices` writes in jnp, and the exact
+//!   implementation behind the hardware PSU models
+//!   ([`crate::psu::AccPsu`] / [`crate::psu::AppPsu`]).
 //! * `packet_bt` mirrors `ref.py::packet_bt`: per packet, the sum over
 //!   consecutive flit pairs of popcount(flit_i XOR flit_{i+1}).
 //! * `lenet_head` mirrors `ref.py::lenet_head`: valid 5×5 convolution with
@@ -12,7 +13,7 @@
 
 use anyhow::Result;
 
-use crate::psu::{AccPsu, AppPsu, BucketMap, SorterUnit};
+use crate::sortcore::{self, BucketMap};
 
 use super::{Backend, BT_BATCH, FLIT_LANES, PACKET_ELEMS, PACKET_FLITS, PE_BATCH};
 
@@ -25,16 +26,12 @@ const POOLED: usize = CONV / 2; // 12
 
 /// The default, dependency-free execution backend.
 pub struct ReferenceBackend {
-    acc: AccPsu,
-    app: AppPsu,
+    map: BucketMap,
 }
 
 impl ReferenceBackend {
     pub fn new() -> Self {
-        Self {
-            acc: AccPsu::new(PACKET_ELEMS),
-            app: AppPsu::new(PACKET_ELEMS, BucketMap::paper_k4()),
-        }
+        Self { map: BucketMap::paper_k4() }
     }
 }
 
@@ -104,8 +101,19 @@ impl Backend for ReferenceBackend {
         packets: &[[u8; PACKET_ELEMS]],
     ) -> Result<(Vec<Vec<u16>>, Vec<Vec<u16>>)> {
         anyhow::ensure!(packets.len() <= BT_BATCH, "batch too large");
-        let acc = packets.iter().map(|p| self.acc.sort_indices(p)).collect();
-        let app = packets.iter().map(|p| self.app.sort_indices(p)).collect();
+        // Both orderings through the one sortcore scatter; the output
+        // vectors are the response payloads (moved, never copied, by the
+        // serving engine).
+        let mut acc = Vec::with_capacity(packets.len());
+        let mut app = Vec::with_capacity(packets.len());
+        for p in packets {
+            let mut a = vec![0u16; PACKET_ELEMS];
+            sortcore::popcount_sort_into(p, &mut a);
+            acc.push(a);
+            let mut b = vec![0u16; PACKET_ELEMS];
+            sortcore::bucket_sort_into(p, &self.map, &mut b);
+            app.push(b);
+        }
         Ok((acc, app))
     }
 

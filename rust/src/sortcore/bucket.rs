@@ -1,9 +1,12 @@
-//! Popcount bucket mappings (the APP-PSU approximation, paper §III-B2).
+//! Popcount bucket mappings (the APP-PSU approximation, paper §III-B2) —
+//! the "bucket map" stage of the [`crate::sortcore`] pipeline.
 //!
 //! A mapping assigns each exact '1'-bit count `p ∈ [0, W]` to one of `k`
 //! coarse buckets via increment thresholds: `bucket(p) = #{t : p >= t}`.
 //! The paper's k=4 mapping for W=8 is {0,1,2}→0, {3,4}→1, {5,6}→2,
 //! {7,8}→3, i.e. thresholds (3, 5, 7).
+//!
+//! (Re-exported as `psu::BucketMap` for the hardware-model layer.)
 
 use crate::WIDTH;
 

@@ -1,0 +1,240 @@
+//! The **single** popcount-ordering core of the crate: popcount → bucket
+//! map → stable counting scatter.
+//!
+//! Every consumer of the paper's ordering routes through this module:
+//!
+//! * the gate-level units [`crate::psu::AccPsu`] / [`crate::psu::AppPsu`]
+//!   (via [`crate::psu::counting::CountingCore`], which keeps the
+//!   *structural* inventory model and delegates the *behavioural* sort
+//!   here);
+//! * the batch-level [`crate::runtime::ReferenceBackend::psu_sort`] entry
+//!   point the serving engine dispatches;
+//! * the stream-level Table-I traffic generator
+//!   ([`crate::workload::Trace::packets`]).
+//!
+//! The scatter itself lives in exactly one place ([`sort_into_by`]'s
+//! private kernel), so the three layers can never drift apart again.
+//!
+//! ## Allocation discipline
+//!
+//! The hot path is allocation-free: histogram and running start addresses
+//! live in a stack array (16 slots for the b ≤ 16 case that covers every
+//! paper configuration at W = 8, 256 slots otherwise — keys are bytes, so
+//! 256 buckets always suffice), and [`sort_into_by`] writes the permutation
+//! into a caller-owned buffer. [`SortScratch`] packages the buffer-reuse
+//! pattern for streaming callers that sort millions of packets.
+
+pub mod bucket;
+
+pub use bucket::BucketMap;
+
+use crate::{popcount8, WIDTH};
+
+/// Bucket count of the exact (ACC) keying: one bucket per possible
+/// '1'-bit count of a W-bit element.
+pub const ACC_BUCKETS: usize = WIDTH + 1;
+
+/// Hard cap on the bucket count (keys are bytes).
+pub const MAX_BUCKETS: usize = 256;
+
+/// Frequency histogram of `key(v)` over `values`, written into `hist`
+/// (cleared first; `hist.len()` is the bucket count).
+#[inline]
+pub fn histogram_into(values: &[u8], key: impl Fn(u8) -> u8, hist: &mut [u32]) {
+    hist.fill(0);
+    for &v in values {
+        hist[key(v) as usize] += 1;
+    }
+}
+
+/// In-place exclusive prefix sum: per-bucket counts become per-bucket
+/// starting addresses. Returns the total count.
+#[inline]
+pub fn exclusive_prefix_sum(counts: &mut [u32]) -> u32 {
+    let mut acc = 0u32;
+    for c in counts.iter_mut() {
+        let v = *c;
+        *c = acc;
+        acc += v;
+    }
+    acc
+}
+
+/// The one stable counting scatter (stages 2–3 of the paper's Fig. 1):
+/// histogram → exclusive scan → stable rank + scatter, all over the
+/// caller-provided `next` slice (`next.len()` = bucket count, pre-zeroed).
+#[inline]
+fn counting_scatter(values: &[u8], key: &impl Fn(u8) -> u8, next: &mut [u32], out: &mut [u16]) {
+    for &v in values {
+        next[key(v) as usize] += 1;
+    }
+    exclusive_prefix_sum(next);
+    for (i, &v) in values.iter().enumerate() {
+        let k = key(v) as usize;
+        let pos = next[k] as usize;
+        next[k] += 1;
+        out[pos] = i as u16;
+    }
+}
+
+/// Stable counting-sort permutation of `values` under `key` (keys in
+/// `[0, b)`), written into `out`: `out[p]` is the original index of the
+/// element transmitted in slot `p`; keys are non-decreasing along `p`.
+///
+/// Allocation-free: the histogram / start addresses live on the stack.
+///
+/// # Panics
+/// If `out.len() != values.len()`, `b` is out of `[1, MAX_BUCKETS]`, or a
+/// key falls outside `[0, b)`.
+pub fn sort_into_by(values: &[u8], b: usize, key: impl Fn(u8) -> u8, out: &mut [u16]) {
+    assert!((1..=MAX_BUCKETS).contains(&b), "bucket count {b} out of range");
+    assert_eq!(values.len(), out.len(), "output buffer length mismatch");
+    debug_assert!(values.len() <= u16::MAX as usize + 1, "indices are u16");
+    if b <= 16 {
+        let mut next = [0u32; 16];
+        counting_scatter(values, &key, &mut next[..b], out);
+    } else {
+        let mut next = [0u32; MAX_BUCKETS];
+        counting_scatter(values, &key, &mut next[..b], out);
+    }
+}
+
+/// Allocating convenience wrapper around [`sort_into_by`].
+pub fn sort_indices_by(values: &[u8], b: usize, key: impl Fn(u8) -> u8) -> Vec<u16> {
+    let mut out = vec![0u16; values.len()];
+    sort_into_by(values, b, key, &mut out);
+    out
+}
+
+/// ACC ordering: stable sort by exact '1'-bit count, into `out`.
+#[inline]
+pub fn popcount_sort_into(values: &[u8], out: &mut [u16]) {
+    sort_into_by(values, ACC_BUCKETS, popcount8, out);
+}
+
+/// APP ordering: stable sort by `map`'s coarse popcount bucket, into `out`.
+#[inline]
+pub fn bucket_sort_into(values: &[u8], map: &BucketMap, out: &mut [u16]) {
+    sort_into_by(values, map.k(), |v| map.bucket_of(v), out);
+}
+
+/// Apply a permutation: returns `values` in transmission order
+/// (`out[p] = values[perm[p]]`).
+pub fn apply_perm(perm: &[u16], values: &[u8]) -> Vec<u8> {
+    perm.iter().map(|&i| values[i as usize]).collect()
+}
+
+/// Reusable permutation buffer for streaming callers: one heap allocation
+/// on first use (growth only afterwards), then every packet sorts through
+/// [`sort_into_by`] with zero per-packet allocation.
+#[derive(Debug, Clone, Default)]
+pub struct SortScratch {
+    perm: Vec<u16>,
+}
+
+impl SortScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sort under an arbitrary keying; returns the permutation (valid
+    /// until the next sort on this scratch).
+    pub fn sort_by(&mut self, values: &[u8], b: usize, key: impl Fn(u8) -> u8) -> &[u16] {
+        self.perm.resize(values.len(), 0);
+        sort_into_by(values, b, key, &mut self.perm);
+        &self.perm
+    }
+
+    /// ACC ordering (exact popcount keys).
+    pub fn popcount_sort(&mut self, values: &[u8]) -> &[u16] {
+        self.sort_by(values, ACC_BUCKETS, popcount8)
+    }
+
+    /// APP ordering (`map`'s coarse bucket keys).
+    pub fn bucket_sort(&mut self, values: &[u8], map: &BucketMap) -> &[u16] {
+        self.sort_by(values, map.k(), |v| map.bucket_of(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Rng;
+
+    #[test]
+    fn matches_stable_sort_oracle_acc_and_app() {
+        let mut rng = Rng::new(17);
+        let map = BucketMap::paper_k4();
+        for len in [1usize, 6, 25, 64, 200] {
+            let v: Vec<u8> = (0..len).map(|_| rng.next_u8()).collect();
+            let mut want: Vec<u16> = (0..len as u16).collect();
+            want.sort_by_key(|&i| popcount8(v[i as usize]));
+            assert_eq!(sort_indices_by(&v, ACC_BUCKETS, popcount8), want, "ACC len {len}");
+            let mut want: Vec<u16> = (0..len as u16).collect();
+            want.sort_by_key(|&i| map.bucket_of(v[i as usize]));
+            assert_eq!(
+                sort_indices_by(&v, map.k(), |x| map.bucket_of(x)),
+                want,
+                "APP len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_and_large_bucket_paths_agree() {
+        // b = 16 takes the stack-16 path, b = 17 the 256-slot path; an
+        // identical keying must produce identical permutations.
+        let mut rng = Rng::new(23);
+        let v: Vec<u8> = (0..128).map(|_| rng.next_u8()).collect();
+        let key = |x: u8| x % 13;
+        assert_eq!(sort_indices_by(&v, 16, key), sort_indices_by(&v, 17, key));
+    }
+
+    #[test]
+    fn paper_bucket_example() {
+        // popcounts {4,1,7,5,3,5} -> k=4 buckets {1,0,3,2,1,2} (§III-B2)
+        let v = [0x0Fu8, 0x01, 0x7F, 0x1F, 0x07, 0xF8];
+        let map = BucketMap::paper_k4();
+        let mut out = [0u16; 6];
+        bucket_sort_into(&v, &map, &mut out);
+        assert_eq!(out, [1, 0, 4, 3, 5, 2]);
+    }
+
+    #[test]
+    fn histogram_and_prefix_sum_laws() {
+        let v = [1u8, 0, 3, 2, 1, 2];
+        let mut h = [9u32; 4]; // pre-dirtied: histogram_into must clear
+        histogram_into(&v, |k| k, &mut h);
+        assert_eq!(h, [1, 2, 2, 1]);
+        let total = exclusive_prefix_sum(&mut h);
+        assert_eq!(h, [0, 1, 3, 5]);
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn scratch_reuse_across_lengths() {
+        let mut s = SortScratch::new();
+        let a = s.popcount_sort(&[0xFF, 0x00, 0x0F]).to_vec();
+        assert_eq!(a, vec![1, 2, 0]);
+        // shrinking then growing the packet keeps results exact
+        assert_eq!(s.popcount_sort(&[0x80, 0x00]), &[1, 0]);
+        let map = BucketMap::paper_k4();
+        let v = [0x0Fu8, 0x01, 0x7F, 0x1F, 0x07, 0xF8];
+        assert_eq!(s.bucket_sort(&v, &map), &[1, 0, 4, 3, 5, 2]);
+    }
+
+    #[test]
+    fn apply_perm_reorders() {
+        let v = [0xFFu8, 0x00, 0x03, 0x07];
+        let mut out = [0u16; 4];
+        popcount_sort_into(&v, &mut out);
+        assert_eq!(apply_perm(&out, &v), vec![0x00, 0x03, 0x07, 0xFF]);
+    }
+
+    #[test]
+    #[should_panic(expected = "output buffer length mismatch")]
+    fn rejects_mismatched_output() {
+        let mut out = [0u16; 3];
+        popcount_sort_into(&[0u8; 4], &mut out);
+    }
+}

@@ -22,8 +22,12 @@
 //!   stably sorted by the **input** element's (bucketed) popcount, with
 //!   the paired weight byte following its input (the paper sorts on the
 //!   input '1'-bit count only, §IV-A).
+//!
+//! The ordering itself is the crate-wide [`crate::sortcore`] scatter,
+//! driven through a reused [`SortScratch`] so streaming a whole field is
+//! allocation-free on the permutation path.
 
-use crate::psu::{AccPsu, AppPsu, BucketMap, SorterUnit};
+use crate::sortcore::{self, BucketMap, SortScratch};
 use crate::PACKET_BYTES;
 
 use super::rng::Rng;
@@ -221,6 +225,10 @@ fn stream_col_major(field: &[Vec<u8>]) -> Vec<u8> {
 
 impl Trace {
     /// Stream the trace under a strategy into paired 64-byte packets.
+    ///
+    /// ACC/APP packets are permuted by the [`sortcore`] scatter keyed on
+    /// the input byte, the paired weight byte following its input; one
+    /// scratch buffer is reused across every packet of the trace.
     pub fn packets(&self, strategy: OrderStrategy) -> Vec<PacketPair> {
         let (istream, wstream) = match strategy {
             OrderStrategy::NonOptimized => (
@@ -232,24 +240,27 @@ impl Trace {
                 stream_col_major(&self.weight_field),
             ),
         };
-        let sorter: Option<Box<dyn SorterUnit>> = match strategy {
-            OrderStrategy::Acc => Some(Box::new(AccPsu::new(PACKET_BYTES))),
-            OrderStrategy::App => {
-                Some(Box::new(AppPsu::new(PACKET_BYTES, BucketMap::paper_k4())))
-            }
-            _ => None,
-        };
-        istream
+        let map = BucketMap::paper_k4();
+        let mut scratch = SortScratch::new();
+        let mut out = Vec::with_capacity(istream.len() / PACKET_BYTES);
+        for (i, w) in istream
             .chunks_exact(PACKET_BYTES)
             .zip(wstream.chunks_exact(PACKET_BYTES))
-            .map(|(i, w)| match &sorter {
-                None => PacketPair { input: i.to_vec(), weight: w.to_vec() },
-                Some(s) => {
-                    let (si, sw) = s.reorder_pair(i, w);
-                    PacketPair { input: si, weight: sw }
+        {
+            let perm = match strategy {
+                OrderStrategy::NonOptimized | OrderStrategy::ColumnMajor => {
+                    out.push(PacketPair { input: i.to_vec(), weight: w.to_vec() });
+                    continue;
                 }
-            })
-            .collect()
+                OrderStrategy::Acc => scratch.popcount_sort(i),
+                OrderStrategy::App => scratch.bucket_sort(i, &map),
+            };
+            out.push(PacketPair {
+                input: sortcore::apply_perm(perm, i),
+                weight: sortcore::apply_perm(perm, w),
+            });
+        }
+        out
     }
 }
 

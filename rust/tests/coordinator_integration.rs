@@ -1,7 +1,9 @@
-//! Coordinator integration: the dynamic-batching sort service driven
-//! end-to-end on the pure-Rust reference backend — N concurrent clients,
-//! batching up to BT_BATCH, and every reply checked to be a valid
-//! permutation sorted by ('1'-bit count keyed) bucket.
+//! Coordinator integration: the sharded dynamic-batching serving engine
+//! driven end-to-end on the pure-Rust reference backend — N concurrent
+//! clients, per-shard batching up to BT_BATCH, every reply checked to be a
+//! valid permutation sorted by ('1'-bit count keyed) bucket, and the
+//! sharded engine held byte-identical to a direct single-threaded
+//! `ReferenceBackend::psu_sort` oracle across shard counts.
 
 use std::sync::atomic::Ordering;
 use std::time::Duration;
@@ -9,7 +11,7 @@ use std::time::Duration;
 use repro::coordinator::{SortResponse, SortService};
 use repro::popcount8;
 use repro::psu::BucketMap;
-use repro::runtime::{BT_BATCH, PACKET_ELEMS};
+use repro::runtime::{Backend, ReferenceBackend, BT_BATCH, PACKET_ELEMS};
 use repro::workload::Rng;
 
 fn random_packets(n: usize, seed: u64) -> Vec<[u8; PACKET_ELEMS]> {
@@ -100,6 +102,73 @@ fn single_request_round_trip_and_determinism() {
     assert_eq!(a.acc_indices, b.acc_indices);
     assert_eq!(a.app_indices, b.app_indices);
     check_response(&packet, &a, "single");
+}
+
+/// Randomized oracle: across shard counts {1, 2, 8}, the sharded engine
+/// must return byte-identical `acc_indices`/`app_indices` to a direct
+/// single-threaded `ReferenceBackend::psu_sort` call for every request —
+/// sharding and batching must be completely invisible in the results.
+#[test]
+fn sharded_engine_is_byte_identical_to_reference_oracle() {
+    let oracle = ReferenceBackend::new();
+    for &shards in &[1usize, 2, 8] {
+        let svc =
+            SortService::spawn_reference_sharded(shards, Duration::from_millis(2)).unwrap();
+        // enough to cross batch boundaries and wrap round-robin admission
+        let packets = random_packets(BT_BATCH + 17, 0xBEEF ^ shards as u64);
+        let responses = svc.sort_many(&packets).unwrap();
+        assert_eq!(responses.len(), packets.len());
+        for (i, (p, r)) in packets.iter().zip(&responses).enumerate() {
+            let (acc, app) = oracle.psu_sort(std::slice::from_ref(p)).unwrap();
+            assert_eq!(r.acc_indices, acc[0], "{shards} shard(s), packet {i}: ACC diverged");
+            assert_eq!(r.app_indices, app[0], "{shards} shard(s), packet {i}: APP diverged");
+        }
+    }
+}
+
+#[test]
+fn sharded_engine_under_concurrent_clients_tracks_per_shard_metrics() {
+    let shards = 4;
+    let svc =
+        SortService::spawn_reference_sharded(shards, Duration::from_millis(10)).unwrap();
+    let clients = 8;
+    let per_client = 200;
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let svc = svc.clone();
+            s.spawn(move || {
+                let packets = random_packets(per_client, 0xFACADE + c as u64);
+                let responses = svc.sort_many(&packets).expect("sort_many");
+                for (i, (p, r)) in packets.iter().zip(&responses).enumerate() {
+                    check_response(p, r, &format!("client {c} packet {i}"));
+                }
+            });
+        }
+    });
+    let m = &svc.metrics;
+    let total = (clients * per_client) as u64;
+    assert_eq!(m.requests.load(Ordering::Relaxed), total);
+    // per-shard counters partition the totals exactly
+    assert_eq!(
+        m.shard_requests.iter().map(|c| c.load(Ordering::Relaxed)).sum::<u64>(),
+        total
+    );
+    assert_eq!(
+        m.shard_batches.iter().map(|c| c.load(Ordering::Relaxed)).sum::<u64>(),
+        m.batches.load(Ordering::Relaxed)
+    );
+    // round-robin admission feeds every shard
+    for s in 0..shards {
+        assert!(
+            m.shard_requests[s].load(Ordering::Relaxed) > 0,
+            "shard {s} starved"
+        );
+    }
+    // every successful reply recorded a latency sample; quantiles are sane
+    assert_eq!(m.latency.total(), total);
+    assert!(m.latency.p50() <= m.latency.p99());
+    assert!(m.latency.p99() > Duration::ZERO);
+    assert!(m.max_batch.load(Ordering::Relaxed) <= BT_BATCH as u64);
 }
 
 #[test]

@@ -115,6 +115,7 @@ fn e2e_experiment_runs_offline_on_reference_backend() {
     let result =
         repro::experiments::e2e::run(&be, 0xC0FFEE, &repro::hw::Tech::default()).unwrap();
     assert_eq!(result.sort_mismatches, 0);
+    assert_eq!(result.service_mismatches, 0, "sharded serving engine diverged");
     assert!(result.max_numeric_gap <= 0.7500001, "gap {}", result.max_numeric_gap);
     assert!(
         result.acc_bt_reduction_pct > 10.0,

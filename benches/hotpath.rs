@@ -1,12 +1,16 @@
 //! Hot-path microbenchmarks (§Perf in EXPERIMENTS.md): the per-packet
 //! sort→frame→count pipeline that every experiment leans on, the batched
 //! execution-backend path the serving engine dispatches (and, with
-//! `--features pjrt`, its PJRT-dispatched XLA twin), plus the
+//! `--features pjrt`, its PJRT-dispatched XLA twin), the
 //! `serve_throughput` scenario driving the public sharded `SortService`
-//! API end to end (1 shard vs N shards).
+//! API end to end (1 shard vs N shards), and the
+//! `serve_telemetry_overhead` scenario pricing the link-power probe +
+//! adaptive policy against the bare serving path.
 //!
 //! Set `BENCHUTIL_JSON=path.json` to dump every measurement as JSON
-//! (uploaded as a CI artifact — the BENCH_* trajectory).
+//! (uploaded as a CI artifact — the BENCH_* trajectory; the telemetry
+//! overhead also lands there as the `serve_telemetry_overhead_ratio`
+//! scalar, so probe cost on the hot path is tracked across PRs).
 
 use std::time::Duration;
 
@@ -19,6 +23,7 @@ use repro::PACKET_BYTES;
 
 fn main() {
     let mut all: Vec<Measurement> = Vec::new();
+    let mut scalars: Vec<(&str, f64)> = Vec::new();
     let mut rng = Rng::new(3);
     let packets: Vec<Vec<u8>> = (0..1024)
         .map(|_| (0..PACKET_BYTES).map(|_| rng.next_u8()).collect())
@@ -144,6 +149,59 @@ fn main() {
         }
     }
 
+    // serve_telemetry_overhead: the same concurrent-client load with the
+    // link-power probe + adaptive policy on every shard vs the bare
+    // engine. The ratio of the two medians is the hot-path price of
+    // telemetry, tracked across PRs via the benchutil JSON scalar.
+    {
+        use repro::linkpower::OrderPolicy;
+        use repro::runtime::PACKET_ELEMS;
+        let reqs: Vec<[u8; PACKET_ELEMS]> = (0..2048)
+            .map(|i| {
+                let mut a = [0u8; PACKET_ELEMS];
+                a.copy_from_slice(&packets[i % packets.len()]);
+                a
+            })
+            .collect();
+        let mut medians = Vec::new();
+        for (tag, policy) in [("off", None), ("on", Some(OrderPolicy::adaptive()))] {
+            let svc = SortService::spawn_reference_policy(2, Duration::from_micros(200), policy)
+                .expect("spawn service");
+            let clients = 8;
+            let chunk = reqs.len().div_ceil(clients);
+            let m = bench(
+                &format!("serve_telemetry_overhead (probe {tag}, 2 shards, 2048 reqs)"),
+                1,
+                5,
+                || {
+                    std::thread::scope(|s| {
+                        for c in reqs.chunks(chunk) {
+                            let svc = svc.clone();
+                            s.spawn(move || svc.sort_many(c).expect("sort"));
+                        }
+                    });
+                },
+            );
+            medians.push(m.median.as_secs_f64());
+            all.push(m);
+            if tag == "on" {
+                let (lp, switches) = svc.metrics.linkpower_totals();
+                assert!(lp.packets > 0, "probe observed nothing");
+                println!(
+                    "  -> telemetry: {} packets priced, window savings {:.2}%, {} switch(es)",
+                    lp.packets,
+                    lp.window_savings_ratio() * 100.0,
+                    switches
+                );
+            }
+        }
+        if let [off, on] = medians[..] {
+            let ratio = on / off;
+            println!("  -> serve_telemetry_overhead: {ratio:.3}x (probe on vs off)");
+            scalars.push(("serve_telemetry_overhead_ratio", ratio));
+        }
+    }
+
     // XLA twin through PJRT, when compiled in and artifacts are present
     #[cfg(feature = "pjrt")]
     if std::path::Path::new("artifacts/psu_sort.hlo.txt").exists() {
@@ -166,7 +224,7 @@ fn main() {
     }
 
     if let Some(path) = benchutil::json_path_from_env() {
-        benchutil::write_json(&path, &all, &[]).expect("write benchutil JSON");
+        benchutil::write_json(&path, &all, &scalars).expect("write benchutil JSON");
         eprintln!("(benchutil JSON written to {path})");
     }
 }

@@ -29,12 +29,27 @@
 //! histogram: [`LatencyHistogram::p50`] / [`LatencyHistogram::p99`] come
 //! from 40 atomics, no extra dependencies and no allocation at record
 //! time.
+//!
+//! ## Link-power telemetry on the serving path
+//!
+//! When the engine is spawned with an ordering policy
+//! ([`SortService::spawn_sharded_with_policy`]), every shard additionally
+//! owns a [`crate::linkpower::PolicyEngine`]: its probe prices each served
+//! packet under raw / ACC / APP orderings, the policy picks the
+//! transmitted ordering (the `Adaptive` variant re-evaluates on the
+//! sliding window online), each [`SortResponse`] is stamped with the
+//! strategy that ordered it, and the shard folds its telemetry into
+//! [`Metrics::linkpower`] after every dispatched batch.
+//! [`Metrics::render_prometheus`] serializes the whole metrics block —
+//! serving counters, latency quantiles, and the link-power telemetry — as
+//! Prometheus-style text lines (`repro serve --stats`).
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::linkpower::{OrderPolicy, PolicyEngine, ProbeSnapshot, StrategyKind, TelemetrySnapshot};
 use crate::runtime::{Backend, ReferenceBackend, BT_BATCH, PACKET_ELEMS};
 
 /// One sort request: a 64-byte packet, its admission timestamp, and its
@@ -51,6 +66,9 @@ struct SortRequest {
 pub struct SortResponse {
     pub acc_indices: Vec<u16>,
     pub app_indices: Vec<u16>,
+    /// Ordering the serving policy transmitted this packet under; `None`
+    /// when the engine was spawned without a policy (telemetry off).
+    pub strategy: Option<StrategyKind>,
 }
 
 /// Number of power-of-two latency buckets: bucket `i` counts requests with
@@ -88,20 +106,29 @@ impl LatencyHistogram {
     /// [`Duration::ZERO`] when nothing has been recorded. The bucket edges
     /// are powers of two, so the estimate is within 2× of the true value —
     /// plenty for serving dashboards, and free of any sample buffer.
+    ///
+    /// The counts are snapshotted once up front, so `total` and the scan
+    /// see the same state even while shard workers keep recording — the
+    /// old load-twice version could chase a moving total past the last
+    /// bucket and answer `u64::MAX` ns (≈ 584 years) on a dashboard.
     pub fn quantile(&self, q: f64) -> Duration {
-        let total = self.total();
+        let counts: [u64; LATENCY_BUCKETS] =
+            std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed));
+        let total: u64 = counts.iter().sum();
         if total == 0 {
             return Duration::ZERO;
         }
         let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
         let mut cum = 0u64;
-        for (i, c) in self.counts.iter().enumerate() {
-            cum += c.load(Ordering::Relaxed);
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
             if cum >= target {
                 return Duration::from_nanos(1u64 << (i + 1).min(63));
             }
         }
-        Duration::from_nanos(u64::MAX)
+        // cum == total >= target by construction; unreachable, but degrade
+        // to the top bucket edge rather than a nonsense sentinel.
+        Duration::from_nanos(1u64 << LATENCY_BUCKETS)
     }
 
     /// Median latency (upper bucket edge).
@@ -115,8 +142,75 @@ impl LatencyHistogram {
     }
 }
 
-/// Service metrics: engine-wide counters, per-shard breakdowns, and the
-/// request-latency histogram.
+/// Published link-power telemetry of one shard: the worker owns the
+/// mutable [`PolicyEngine`] and stores a fresh [`TelemetrySnapshot`] here
+/// after every dispatched batch, so readers never contend with the hot
+/// path. All fields are plain relaxed atomics; a reader may observe a
+/// snapshot mid-publish, which only ever mixes two adjacent batch states.
+#[derive(Debug, Default)]
+pub struct LinkPowerStats {
+    pub packets: AtomicU64,
+    pub flits: AtomicU64,
+    pub raw_bt: AtomicU64,
+    pub acc_bt: AtomicU64,
+    pub app_bt: AtomicU64,
+    pub served_bt: AtomicU64,
+    pub window_packets: AtomicU64,
+    pub window_flits: AtomicU64,
+    pub window_raw_bt: AtomicU64,
+    pub window_acc_bt: AtomicU64,
+    pub window_app_bt: AtomicU64,
+    pub window_served_bt: AtomicU64,
+    /// Active [`StrategyKind`], stored as its dense index.
+    pub active: AtomicUsize,
+    pub switches: AtomicU64,
+}
+
+impl LinkPowerStats {
+    /// Publish a shard engine's current telemetry.
+    pub fn publish(&self, t: &TelemetrySnapshot) {
+        let p = &t.probe;
+        self.packets.store(p.packets, Ordering::Relaxed);
+        self.flits.store(p.flits, Ordering::Relaxed);
+        self.raw_bt.store(p.raw_bt, Ordering::Relaxed);
+        self.acc_bt.store(p.acc_bt, Ordering::Relaxed);
+        self.app_bt.store(p.app_bt, Ordering::Relaxed);
+        self.served_bt.store(p.served_bt, Ordering::Relaxed);
+        self.window_packets.store(p.window_packets, Ordering::Relaxed);
+        self.window_flits.store(p.window_flits, Ordering::Relaxed);
+        self.window_raw_bt.store(p.window_raw_bt, Ordering::Relaxed);
+        self.window_acc_bt.store(p.window_acc_bt, Ordering::Relaxed);
+        self.window_app_bt.store(p.window_app_bt, Ordering::Relaxed);
+        self.window_served_bt.store(p.window_served_bt, Ordering::Relaxed);
+        self.active.store(t.active.index(), Ordering::Relaxed);
+        self.switches.store(t.switches, Ordering::Relaxed);
+    }
+
+    /// Read the last published telemetry back out.
+    pub fn load(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            probe: ProbeSnapshot {
+                packets: self.packets.load(Ordering::Relaxed),
+                flits: self.flits.load(Ordering::Relaxed),
+                raw_bt: self.raw_bt.load(Ordering::Relaxed),
+                acc_bt: self.acc_bt.load(Ordering::Relaxed),
+                app_bt: self.app_bt.load(Ordering::Relaxed),
+                served_bt: self.served_bt.load(Ordering::Relaxed),
+                window_packets: self.window_packets.load(Ordering::Relaxed),
+                window_flits: self.window_flits.load(Ordering::Relaxed),
+                window_raw_bt: self.window_raw_bt.load(Ordering::Relaxed),
+                window_acc_bt: self.window_acc_bt.load(Ordering::Relaxed),
+                window_app_bt: self.window_app_bt.load(Ordering::Relaxed),
+                window_served_bt: self.window_served_bt.load(Ordering::Relaxed),
+            },
+            active: StrategyKind::from_index(self.active.load(Ordering::Relaxed)),
+            switches: self.switches.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Service metrics: engine-wide counters, per-shard breakdowns, the
+/// request-latency histogram, and per-shard link-power telemetry.
 #[derive(Debug)]
 pub struct Metrics {
     /// Total requests admitted to a backend batch.
@@ -131,6 +225,9 @@ pub struct Metrics {
     pub shard_batches: Vec<AtomicU64>,
     /// Queue→reply latency of every successfully answered request.
     pub latency: LatencyHistogram,
+    /// Link-power telemetry per shard (all-zero while no policy engine has
+    /// published — e.g. the engine was spawned without a policy).
+    pub linkpower: Vec<LinkPowerStats>,
 }
 
 impl Metrics {
@@ -143,6 +240,7 @@ impl Metrics {
             shard_requests: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             shard_batches: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             latency: LatencyHistogram::default(),
+            linkpower: (0..shards).map(|_| LinkPowerStats::default()).collect(),
         }
     }
 
@@ -159,6 +257,102 @@ impl Metrics {
         } else {
             self.requests.load(Ordering::Relaxed) as f64 / b as f64
         }
+    }
+
+    /// Mean requests per dispatch on one shard (`0.0` before the shard has
+    /// dispatched anything — callers never have to guard the division).
+    pub fn shard_mean_batch(&self, shard: usize) -> f64 {
+        let b = self.shard_batches[shard].load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.shard_requests[shard].load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Aggregate link-power telemetry across every shard (probe fields
+    /// sum; per-shard `active`/`switches` stay per-shard) plus the total
+    /// switch count. All-zero when no policy engine has published.
+    pub fn linkpower_totals(&self) -> (ProbeSnapshot, u64) {
+        let mut total = ProbeSnapshot::default();
+        let mut switches = 0;
+        for lp in &self.linkpower {
+            let t = lp.load();
+            total.merge(&t.probe);
+            switches += t.switches;
+        }
+        (total, switches)
+    }
+
+    /// Render the whole metrics block as Prometheus-style text lines: the
+    /// `serve --stats` snapshot format (also what the CI smoke job uploads
+    /// as an artifact).
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let requests = self.requests.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let max_batch = self.max_batch.load(Ordering::Relaxed);
+        let p50 = self.latency.p50().as_secs_f64();
+        let p99 = self.latency.p99().as_secs_f64();
+        let _ = writeln!(out, "sortservice_shards {}", self.shards());
+        let _ = writeln!(out, "sortservice_requests_total {requests}");
+        let _ = writeln!(out, "sortservice_batches_total {batches}");
+        let _ = writeln!(out, "sortservice_mean_batch {}", self.mean_batch());
+        let _ = writeln!(out, "sortservice_max_batch {max_batch}");
+        let _ = writeln!(out, "sortservice_latency_p50_seconds {p50}");
+        let _ = writeln!(out, "sortservice_latency_p99_seconds {p99}");
+        for s in 0..self.shards() {
+            let sr = self.shard_requests[s].load(Ordering::Relaxed);
+            let sb = self.shard_batches[s].load(Ordering::Relaxed);
+            let _ = writeln!(out, "sortservice_shard_requests_total{{shard=\"{s}\"}} {sr}");
+            let _ = writeln!(out, "sortservice_shard_batches_total{{shard=\"{s}\"}} {sb}");
+        }
+        // load each shard once and derive both the per-shard lines and the
+        // aggregates from the same snapshots, so a worker publishing
+        // mid-render can't make the labeled lines disagree with the totals
+        let snaps: Vec<TelemetrySnapshot> = self.linkpower.iter().map(|lp| lp.load()).collect();
+        let mut total = ProbeSnapshot::default();
+        let mut switches = 0u64;
+        for t in &snaps {
+            total.merge(&t.probe);
+            switches += t.switches;
+        }
+        if total.packets > 0 {
+            for (s, t) in snaps.iter().enumerate() {
+                let p = &t.probe;
+                let _ = writeln!(out, "linkpower_packets_total{{shard=\"{s}\"}} {}", p.packets);
+                for (order, bt, wbt) in [
+                    ("raw", p.raw_bt, p.window_raw_bt),
+                    ("acc", p.acc_bt, p.window_acc_bt),
+                    ("app", p.app_bt, p.window_app_bt),
+                    ("served", p.served_bt, p.window_served_bt),
+                ] {
+                    let _ = writeln!(
+                        out,
+                        "linkpower_bt_total{{shard=\"{s}\",order=\"{order}\"}} {bt}"
+                    );
+                    let _ = writeln!(
+                        out,
+                        "linkpower_window_bt{{shard=\"{s}\",order=\"{order}\"}} {wbt}"
+                    );
+                }
+                let active = t.active.label();
+                let _ = writeln!(
+                    out,
+                    "linkpower_active_strategy{{shard=\"{s}\",strategy=\"{active}\"}} 1"
+                );
+                let _ = writeln!(out, "linkpower_switches_total{{shard=\"{s}\"}} {}", t.switches);
+            }
+            let _ = writeln!(out, "linkpower_savings_ratio {}", total.savings_ratio());
+            let window_savings = total.window_savings_ratio();
+            let _ = writeln!(out, "linkpower_window_savings_ratio {window_savings}");
+            // distinct name from the per-shard linkpower_switches_total
+            // family: mixing labeled and unlabeled samples in one family
+            // breaks Prometheus aggregation (sum() would double-count)
+            let _ = writeln!(out, "linkpower_switches_sum {switches}");
+        }
+        out
     }
 
     /// Account one dispatched batch of `len` requests on `shard`.
@@ -213,7 +407,7 @@ impl SortService {
         F: FnOnce() -> anyhow::Result<B> + Send + 'static,
     {
         let metrics = Arc::new(Metrics::new(1));
-        let (tx, ready) = spawn_shard(0, make, max_wait, metrics.clone());
+        let (tx, ready) = spawn_shard(0, make, max_wait, metrics.clone(), None);
         ready.recv().map_err(|_| anyhow::anyhow!("worker died"))??;
         Ok(Self {
             shards: Arc::new(vec![tx]),
@@ -237,15 +431,56 @@ impl SortService {
         B: Backend + 'static,
         F: Fn(usize) -> anyhow::Result<B> + Send + Sync + 'static,
     {
+        Self::spawn_sharded_with_policy(make, shards, max_wait, None)
+    }
+
+    /// [`SortService::spawn_sharded_with`] plus link-power telemetry:
+    /// with `Some(policy)` every shard owns a
+    /// [`crate::linkpower::PolicyEngine`] (cloned from `policy`) that
+    /// prices each served packet, picks its transmitted ordering, stamps
+    /// [`SortResponse::strategy`], and publishes telemetry into
+    /// [`Metrics::linkpower`] after every batch. `None` keeps the probe
+    /// off the hot path entirely (the `serve_telemetry_overhead` bench
+    /// tracks the difference).
+    ///
+    /// Policies whose APP arm uses a bucket map other than the backend's
+    /// fixed k = 4 `psu_sort` contract are rejected: the shards price
+    /// packets with the backend's permutations, so a custom map would be
+    /// silently ignored (use [`crate::linkpower::PolicyEngine`] directly
+    /// for custom maps).
+    pub fn spawn_sharded_with_policy<B, F>(
+        make: F,
+        shards: usize,
+        max_wait: Duration,
+        policy: Option<OrderPolicy>,
+    ) -> anyhow::Result<Self>
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> anyhow::Result<B> + Send + Sync + 'static,
+    {
         anyhow::ensure!(shards >= 1, "need at least one shard");
+        if let Some(p) = &policy {
+            anyhow::ensure!(
+                p.serving_compatible(),
+                "policy {:?} uses a bucket map outside the backend's k = 4 psu_sort \
+                 contract; the serving path would silently price the k = 4 ordering \
+                 instead — use linkpower::PolicyEngine directly for custom maps",
+                p.label(),
+            );
+        }
         let make = Arc::new(make);
         let metrics = Arc::new(Metrics::new(shards));
         let mut txs = Vec::with_capacity(shards);
         let mut readies = Vec::with_capacity(shards);
         for shard in 0..shards {
             let mk = make.clone();
-            let (tx, ready) =
-                spawn_shard(shard, move || (*mk)(shard), max_wait, metrics.clone());
+            let (tx, ready) = spawn_shard(
+                shard,
+                move || (*mk)(shard),
+                max_wait,
+                metrics.clone(),
+                policy.clone(),
+            );
             txs.push(tx);
             readies.push(ready);
         }
@@ -270,6 +505,17 @@ impl SortService {
     /// (fully offline).
     pub fn spawn_reference_sharded(shards: usize, max_wait: Duration) -> anyhow::Result<Self> {
         Self::spawn_sharded_with(|_| Ok(ReferenceBackend::new()), shards, max_wait)
+    }
+
+    /// Reference-backend shards with link-power telemetry and an ordering
+    /// policy (`None` = telemetry off, identical to
+    /// [`SortService::spawn_reference_sharded`]).
+    pub fn spawn_reference_policy(
+        shards: usize,
+        max_wait: Duration,
+        policy: Option<OrderPolicy>,
+    ) -> anyhow::Result<Self> {
+        Self::spawn_sharded_with_policy(|_| Ok(ReferenceBackend::new()), shards, max_wait, policy)
     }
 
     /// Spawn over the PJRT backend; each shard loads + compiles the AOT
@@ -335,13 +581,15 @@ impl SortService {
     }
 }
 
-/// Spawn one shard worker: build the backend via `make` on the new thread,
-/// report readiness, then run the batch loop until every sender is gone.
+/// Spawn one shard worker: build the backend via `make` on the new thread
+/// (plus its policy engine, when telemetry is on), report readiness, then
+/// run the batch loop until every sender is gone.
 fn spawn_shard<B, F>(
     shard: usize,
     make: F,
     max_wait: Duration,
     metrics: Arc<Metrics>,
+    policy: Option<OrderPolicy>,
 ) -> (SyncSender<SortRequest>, Receiver<anyhow::Result<()>>)
 where
     B: Backend + 'static,
@@ -360,7 +608,8 @@ where
                 return;
             }
         };
-        batch_loop(&backend, shard, rx, max_wait, metrics);
+        let engine = policy.map(PolicyEngine::new);
+        batch_loop(&backend, shard, rx, max_wait, metrics, engine);
     });
     (tx, ready_rx)
 }
@@ -371,6 +620,7 @@ fn batch_loop(
     rx: Receiver<SortRequest>,
     max_wait: Duration,
     metrics: Arc<Metrics>,
+    mut engine: Option<PolicyEngine>,
 ) {
     loop {
         // wait for the first request of the batch
@@ -397,13 +647,30 @@ fn batch_loop(
         // one backend execution per batch — the fixed batch shape pads
         match backend.psu_sort(&packets) {
             Ok((acc, app)) if acc.len() == batch.len() && app.len() == batch.len() => {
+                // price the whole batch with the backend's permutations and
+                // publish telemetry *before* any reply unblocks a client —
+                // a caller that reads Metrics right after its reply must
+                // already see this batch accounted for
+                let strategies: Option<Vec<StrategyKind>> = engine.as_mut().map(|e| {
+                    batch
+                        .iter()
+                        .zip(&acc)
+                        .zip(&app)
+                        .map(|((req, a), p)| e.observe_with_perms(&req.packet, a, p))
+                        .collect()
+                });
+                if let Some(e) = &engine {
+                    metrics.linkpower[shard].publish(&e.snapshot());
+                }
                 // move each index vector straight into its reply — the
                 // backend's outputs are the response payloads (zero-copy)
-                for ((req, acc_indices), app_indices) in
-                    batch.into_iter().zip(acc).zip(app)
+                for (i, ((req, acc_indices), app_indices)) in
+                    batch.into_iter().zip(acc).zip(app).enumerate()
                 {
                     metrics.latency.record(req.enqueued.elapsed());
-                    let _ = req.reply.send(Ok(SortResponse { acc_indices, app_indices }));
+                    let strategy = strategies.as_ref().map(|s| s[i]);
+                    let resp = SortResponse { acc_indices, app_indices, strategy };
+                    let _ = req.reply.send(Ok(resp));
                 }
             }
             Ok(_) => {
@@ -485,6 +752,116 @@ mod tests {
     }
 
     #[test]
+    fn empty_histogram_and_metrics_report_zeros() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.total(), 0);
+        assert_eq!(h.p50(), Duration::ZERO);
+        assert_eq!(h.p99(), Duration::ZERO);
+        assert_eq!(h.quantile(0.0), Duration::ZERO);
+        assert_eq!(h.quantile(1.0), Duration::ZERO);
+        let m = Metrics::new(3);
+        assert_eq!(m.mean_batch(), 0.0);
+        for s in 0..3 {
+            assert_eq!(m.shard_mean_batch(s), 0.0);
+        }
+        let (lp, switches) = m.linkpower_totals();
+        assert_eq!(lp, crate::linkpower::ProbeSnapshot::default());
+        assert_eq!(switches, 0);
+        assert_eq!(lp.savings_ratio(), 0.0);
+    }
+
+    #[test]
+    fn quantile_extremes_hit_first_and_last_occupied_bucket() {
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_nanos(1)); // bucket 0
+        h.record(Duration::from_secs(1)); // ~2^30 ns bucket
+        assert_eq!(h.quantile(0.0), Duration::from_nanos(2));
+        assert!(h.quantile(1.0) >= Duration::from_secs(1));
+        assert!(h.quantile(1.0) < Duration::from_secs(3));
+    }
+
+    #[test]
+    fn shard_mean_batch_partitions() {
+        let m = Metrics::new(2);
+        m.record_batch(0, 4);
+        m.record_batch(0, 6);
+        assert!((m.shard_mean_batch(0) - 5.0).abs() < 1e-12);
+        assert_eq!(m.shard_mean_batch(1), 0.0);
+    }
+
+    #[test]
+    fn linkpower_stats_publish_load_round_trip() {
+        use crate::linkpower::{ProbeSnapshot, StrategyKind, TelemetrySnapshot};
+        let stats = LinkPowerStats::default();
+        let t = TelemetrySnapshot {
+            probe: ProbeSnapshot {
+                packets: 7,
+                flits: 28,
+                raw_bt: 100,
+                acc_bt: 80,
+                app_bt: 85,
+                served_bt: 82,
+                window_packets: 4,
+                window_flits: 16,
+                window_raw_bt: 50,
+                window_acc_bt: 40,
+                window_app_bt: 42,
+                window_served_bt: 41,
+            },
+            active: StrategyKind::Approximate,
+            switches: 2,
+        };
+        stats.publish(&t);
+        assert_eq!(stats.load(), t);
+    }
+
+    #[test]
+    fn prometheus_render_covers_service_and_linkpower() {
+        use crate::linkpower::{ProbeSnapshot, StrategyKind, TelemetrySnapshot};
+        let m = Metrics::new(2);
+        m.record_batch(0, 3);
+        m.latency.record(Duration::from_micros(5));
+        // without telemetry, no linkpower lines are emitted
+        let text = m.render_prometheus();
+        assert!(text.contains("sortservice_shards 2"));
+        assert!(text.contains("sortservice_requests_total 3"));
+        assert!(text.contains("sortservice_shard_requests_total{shard=\"0\"} 3"));
+        assert!(text.contains("sortservice_latency_p50_seconds"));
+        assert!(!text.contains("linkpower_"), "telemetry lines leaked: {text}");
+        // publish one shard's telemetry and the linkpower block appears
+        m.linkpower[1].publish(&TelemetrySnapshot {
+            probe: ProbeSnapshot {
+                packets: 10,
+                flits: 40,
+                raw_bt: 400,
+                acc_bt: 300,
+                app_bt: 320,
+                served_bt: 300,
+                window_packets: 10,
+                window_flits: 40,
+                window_raw_bt: 400,
+                window_acc_bt: 300,
+                window_app_bt: 320,
+                window_served_bt: 300,
+            },
+            active: StrategyKind::Precise,
+            switches: 1,
+        });
+        let text = m.render_prometheus();
+        assert!(text.contains("linkpower_packets_total{shard=\"1\"} 10"));
+        assert!(text.contains("linkpower_bt_total{shard=\"1\",order=\"raw\"} 400"));
+        assert!(text.contains("linkpower_window_bt{shard=\"1\",order=\"acc\"} 300"));
+        assert!(text.contains("linkpower_active_strategy{shard=\"1\",strategy=\"precise\"} 1"));
+        assert!(text.contains("linkpower_savings_ratio 0.25"));
+        assert!(text.contains("linkpower_switches_total{shard=\"1\"} 1"));
+        assert!(text.contains("linkpower_switches_sum 1"));
+        // every line is a bare `name{labels} value` pair
+        for line in text.lines() {
+            assert_eq!(line.split_whitespace().count(), 2, "malformed line: {line}");
+        }
+    }
+
+    #[test]
     fn reference_service_round_trip() {
         let svc = SortService::spawn_reference(Duration::from_millis(1)).unwrap();
         let mut packet = [0u8; PACKET_ELEMS];
@@ -493,7 +870,41 @@ mod tests {
         assert_eq!(resp.acc_indices.len(), PACKET_ELEMS);
         assert_eq!(*resp.acc_indices.last().unwrap(), 0);
         assert_eq!(*resp.app_indices.last().unwrap(), 0);
+        assert_eq!(resp.strategy, None, "no policy: responses must not be stamped");
         assert_eq!(svc.metrics.latency.total(), 1);
+    }
+
+    #[test]
+    fn custom_bucket_map_policies_are_rejected_at_spawn() {
+        use crate::sortcore::BucketMap;
+        let err = SortService::spawn_reference_policy(
+            1,
+            Duration::from_millis(1),
+            Some(OrderPolicy::Approximate(BucketMap::uniform(3))),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("k = 4"), "unhelpful spawn error: {err}");
+    }
+
+    #[test]
+    fn policy_service_stamps_responses_and_publishes_telemetry() {
+        let svc = SortService::spawn_reference_policy(
+            2,
+            Duration::from_micros(200),
+            Some(OrderPolicy::Precise),
+        )
+        .unwrap();
+        let packets = [[0xA5u8; PACKET_ELEMS]; 8];
+        for resp in svc.sort_many(&packets).unwrap() {
+            assert_eq!(resp.strategy, Some(StrategyKind::Precise));
+        }
+        let (lp, switches) = svc.metrics.linkpower_totals();
+        assert_eq!(lp.packets, 8);
+        assert_eq!(lp.flits, 8 * 4);
+        assert_eq!(switches, 0, "static policy must never switch");
+        // Precise serves the ACC ordering: the served ledger equals ACC's
+        assert_eq!(lp.served_bt, lp.acc_bt);
     }
 
     #[test]

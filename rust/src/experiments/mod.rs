@@ -1,5 +1,6 @@
 //! One module per paper table/figure, plus the extensions (bucket-count
-//! ablation, multi-hop scaling) and the end-to-end driver. Each module
+//! ablation, multi-hop scaling, the ordering-policy convergence scenario)
+//! and the end-to-end driver. Each module
 //! exposes a `run(...)` returning structured results plus a rendered
 //! [`crate::report::Table`], so the CLI, the benches, and the integration
 //! tests all share one implementation.
@@ -12,4 +13,5 @@ pub mod fig5;
 pub mod fig67;
 pub mod layers;
 pub mod multihop;
+pub mod policy;
 pub mod table1;

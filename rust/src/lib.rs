@@ -32,6 +32,10 @@
 //!   (`artifacts/*.hlo.txt`); Python never runs at request time.
 //! * [`coordinator`] — the sharded dynamic-batching serving engine,
 //!   generic over the execution backend.
+//! * [`linkpower`] — streaming BT telemetry ([`linkpower::LinkProbe`])
+//!   and the runtime ordering-policy engine
+//!   ([`linkpower::OrderPolicy`], passthrough / precise / approximate /
+//!   adaptive) the serving shards run.
 //! * [`experiments`] — one module per paper table/figure.
 
 pub mod area;
@@ -40,6 +44,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod hw;
+pub mod linkpower;
 pub mod noc;
 pub mod pe;
 pub mod platform;

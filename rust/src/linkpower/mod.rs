@@ -1,0 +1,117 @@
+//! Link-power telemetry and adaptive ordering policies on the serving path.
+//!
+//! The paper's whole value claim is denominated in link power: approximate
+//! bucketed sorting keeps a 19.50 % BT reduction against 20.42 % for the
+//! precise sorter while cutting sorter area 35.4 % (Table I / Fig. 5). The
+//! serving engine therefore should not sort blindly — it should *measure*
+//! the bit transitions it is saving and make the precise/approximate
+//! trade-off a runtime decision. This module provides both halves:
+//!
+//! * [`probe::LinkProbe`] — a streaming BT accountant. One probe sits at a
+//!   shard's egress and replays every served packet through three
+//!   [`crate::noc::Link`] transmission registers (raw order, ACC order,
+//!   APP order), so the counterfactual cost of every ordering is known for
+//!   every packet, cumulatively and over a sliding window of recent
+//!   packets (a ring buffer with O(1) running sums).
+//! * [`policy::OrderPolicy`] / [`policy::PolicyEngine`] — the ordering
+//!   decision. Static policies pin the strategy (`Passthrough`, `Precise`,
+//!   `Approximate` with any [`crate::sortcore::BucketMap`]); `Adaptive`
+//!   periodically scores each strategy's observed window BT/flit against a
+//!   per-strategy hardware cost ([`policy::CostModel`], bucket count or
+//!   the [`crate::area`] model as the area/latency proxy) and switches the
+//!   shard's active strategy online.
+//!
+//! The serving integration lives in [`crate::coordinator`]: each shard
+//! owns a probe + policy engine, folds telemetry into the service
+//! [`crate::coordinator::Metrics`] (rendered as Prometheus-style text by
+//! `Metrics::render_prometheus`), and stamps each
+//! [`crate::coordinator::SortResponse`] with the strategy that ordered it.
+//! The offline twin is [`crate::experiments::policy`], which checks that
+//! `Adaptive` converges to the best static strategy on the Table-I traffic
+//! mix.
+
+pub mod policy;
+pub mod probe;
+
+pub use policy::{
+    AdaptiveConfig, ApproxCost, CostModel, OrderPolicy, PolicyEngine, TelemetrySnapshot,
+};
+pub use probe::{LinkProbe, PacketBt, ProbeSnapshot, DEFAULT_WINDOW_PACKETS};
+
+/// The ordering a packet was (or would be) transmitted under.
+///
+/// This is the *serving-path* strategy set: `Passthrough` ships bytes in
+/// arrival order (the paper's bypass path), `Precise` is the ACC-PSU exact
+/// popcount ordering, `Approximate` the APP-PSU bucketed ordering. The
+/// stream-level Table-I strategies (row- vs column-major rasters) live in
+/// [`crate::workload::OrderStrategy`]; a serving shard only ever sees
+/// already-framed packets, so raster choice is upstream of this enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    /// Transmit in arrival order (no sorter in the path).
+    Passthrough,
+    /// ACC ordering: exact '1'-bit-count keys (W+1 buckets).
+    Precise,
+    /// APP ordering: coarse popcount-bucket keys.
+    Approximate,
+}
+
+impl StrategyKind {
+    /// All strategies, cheapest hardware first (no sorter, then the
+    /// k-bucket sorter, then the full W+1-bucket sorter), so a strict
+    /// `<` score scan resolves ties toward the cheaper design.
+    pub fn all() -> [StrategyKind; 3] {
+        [
+            StrategyKind::Passthrough,
+            StrategyKind::Approximate,
+            StrategyKind::Precise,
+        ]
+    }
+
+    /// Stable label (used in Prometheus lines and reports).
+    pub fn label(self) -> &'static str {
+        match self {
+            StrategyKind::Passthrough => "passthrough",
+            StrategyKind::Precise => "precise",
+            StrategyKind::Approximate => "approximate",
+        }
+    }
+
+    /// Dense index for atomic storage.
+    pub fn index(self) -> usize {
+        match self {
+            StrategyKind::Passthrough => 0,
+            StrategyKind::Precise => 1,
+            StrategyKind::Approximate => 2,
+        }
+    }
+
+    /// Inverse of [`StrategyKind::index`]; out-of-range decodes to
+    /// `Passthrough` (the all-zero reset state of an atomic slot).
+    pub fn from_index(i: usize) -> StrategyKind {
+        match i {
+            1 => StrategyKind::Precise,
+            2 => StrategyKind::Approximate,
+            _ => StrategyKind::Passthrough,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_round_trips() {
+        for k in StrategyKind::all() {
+            assert_eq!(StrategyKind::from_index(k.index()), k);
+        }
+        assert_eq!(StrategyKind::from_index(99), StrategyKind::Passthrough);
+    }
+
+    #[test]
+    fn labels_are_distinct_and_cheapest_first() {
+        let labels: Vec<&str> = StrategyKind::all().iter().map(|k| k.label()).collect();
+        assert_eq!(labels, vec!["passthrough", "approximate", "precise"]);
+    }
+}

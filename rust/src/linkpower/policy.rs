@@ -1,0 +1,439 @@
+//! Ordering policies: how a serving shard decides which ordering each
+//! packet is transmitted under, including the online `Adaptive` mode.
+//!
+//! A [`PolicyEngine`] pairs an [`OrderPolicy`] with a
+//! [`super::LinkProbe`]. Static policies pin the strategy; `Adaptive`
+//! starts on the free `Passthrough` path and every
+//! [`AdaptiveConfig::evaluate_every`] packets re-scores the three
+//! strategies on the probe's sliding window:
+//!
+//! ```text
+//! score(s) = window BT per flit under s  +  cost.penalty(s, map.k())
+//! ```
+//!
+//! The penalty is the hardware price of keeping that sorter in the path,
+//! expressed in BT-per-flit units. [`CostModel::bucket_linear`] charges
+//! proportionally to the sortcore bucket count (9 for ACC, k for APP —
+//! the datapath-width proxy the paper's §IV-B3 area argument rests on);
+//! [`CostModel::from_area`] takes the exact ratio from the [`crate::area`]
+//! elaboration of the ACC/APP units instead. With the default weight the
+//! BT term dominates (matching the paper's Table-I regime, where the
+//! precise sorter wins by ~0.9 % absolute savings); raising the weight
+//! makes `Adaptive` trade savings for area, preferring the bucketed or
+//! bypass path on traffic where sorting pays little.
+
+use crate::hw::Tech;
+use crate::psu::{AccPsu, AppPsu, SorterUnit};
+use crate::sortcore::{BucketMap, ACC_BUCKETS};
+
+use super::probe::{LinkProbe, ProbeScratch, ProbeSnapshot, DEFAULT_WINDOW_PACKETS};
+use super::StrategyKind;
+
+/// How the approximate arm's penalty is derived from the active bucket
+/// map at scoring time — keeping the cost coupled to the map the engine
+/// actually runs, whatever `k` it has.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ApproxCost {
+    /// `per_bucket * k` for a k-bucket map (the bucket-count area proxy).
+    PerBucket(f64),
+    /// A fixed penalty (e.g. a precomputed area fraction).
+    Fixed(f64),
+}
+
+/// Per-strategy hardware cost, in window-BT-per-flit units.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    pub passthrough: f64,
+    pub precise: f64,
+    pub approximate: ApproxCost,
+}
+
+impl CostModel {
+    /// Charge proportional to sortcore bucket count: the full `weight` for
+    /// the ACC sorter (ACC_BUCKETS = W+1 buckets), `k/ACC_BUCKETS` of it
+    /// for a k-bucket APP sorter, nothing for the bypass path. The `k` is
+    /// taken from the engine's actual map when scoring, so the penalty
+    /// can never drift from the configured mapping.
+    pub fn bucket_linear(weight: f64) -> Self {
+        Self {
+            passthrough: 0.0,
+            precise: weight,
+            approximate: ApproxCost::PerBucket(weight / ACC_BUCKETS as f64),
+        }
+    }
+
+    /// Charge by the calibrated area model instead of the bucket-count
+    /// proxy: APP pays its actual post-layout area fraction of ACC at sort
+    /// width `n` (≈ 0.65 for the paper's k = 4 — the 35.4 % reduction).
+    pub fn from_area(tech: &Tech, n: usize, map: &BucketMap, weight: f64) -> Self {
+        let acc = AccPsu::new(n).area_um2(tech);
+        let app = AppPsu::new(n, map.clone()).area_um2(tech);
+        let frac = if acc > 0.0 { app / acc } else { 0.0 };
+        Self {
+            passthrough: 0.0,
+            precise: weight,
+            approximate: ApproxCost::Fixed(weight * frac),
+        }
+    }
+
+    /// The penalty of `kind`; `k` is the bucket count of the map the
+    /// engine scores the approximate arm with.
+    pub fn penalty(&self, kind: StrategyKind, k: usize) -> f64 {
+        match kind {
+            StrategyKind::Passthrough => self.passthrough,
+            StrategyKind::Precise => self.precise,
+            StrategyKind::Approximate => match self.approximate {
+                ApproxCost::PerBucket(w) => w * k as f64,
+                ApproxCost::Fixed(p) => p,
+            },
+        }
+    }
+}
+
+impl Default for CostModel {
+    /// Default weight 0.1 BT/flit for the full ACC sorter: small enough
+    /// that measured savings dominate (Table-I gaps are ≳ 0.5 BT/flit),
+    /// large enough to break near-ties toward the cheaper design.
+    fn default() -> Self {
+        Self::bucket_linear(0.1)
+    }
+}
+
+/// Configuration of the adaptive policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveConfig {
+    /// APP bucket mapping considered by the approximate arm.
+    pub map: BucketMap,
+    /// Re-evaluate the active strategy every this many packets (`0` is
+    /// treated as `1`: evaluate after every packet).
+    pub evaluate_every: u64,
+    /// Hardware cost charged per strategy when scoring.
+    pub cost: CostModel,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self {
+            map: BucketMap::paper_k4(),
+            evaluate_every: 256,
+            cost: CostModel::default(),
+        }
+    }
+}
+
+/// The ordering policy of one serving shard.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OrderPolicy {
+    /// Always transmit in arrival order (telemetry still measures what
+    /// sorting would have saved).
+    Passthrough,
+    /// Always use the ACC (exact popcount) ordering.
+    Precise,
+    /// Always use the APP ordering under the given bucket map.
+    Approximate(BucketMap),
+    /// Start on `Passthrough`, then follow the windowed score online.
+    Adaptive(AdaptiveConfig),
+}
+
+impl OrderPolicy {
+    /// The paper's APP configuration (k = 4).
+    pub fn approximate_paper() -> Self {
+        OrderPolicy::Approximate(BucketMap::paper_k4())
+    }
+
+    /// Adaptive with default window, cadence, and cost model.
+    pub fn adaptive() -> Self {
+        OrderPolicy::Adaptive(AdaptiveConfig::default())
+    }
+
+    /// Parse a CLI policy name.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "passthrough" => Ok(OrderPolicy::Passthrough),
+            "precise" => Ok(OrderPolicy::Precise),
+            "approx" | "approximate" => Ok(Self::approximate_paper()),
+            "adaptive" => Ok(Self::adaptive()),
+            _ => anyhow::bail!(
+                "unknown policy {s:?} (expected passthrough, precise, approx, or adaptive)"
+            ),
+        }
+    }
+
+    /// Whether this policy's APP arm matches the serving backend's fixed
+    /// k = 4 `psu_sort` contract — the permutations shard engines receive
+    /// ([`PolicyEngine::observe_with_perms`]). The coordinator rejects
+    /// incompatible policies at spawn; custom maps are a library-level
+    /// feature ([`PolicyEngine::observe`]).
+    pub fn serving_compatible(&self) -> bool {
+        match self {
+            OrderPolicy::Approximate(m) => *m == BucketMap::paper_k4(),
+            OrderPolicy::Adaptive(cfg) => cfg.map == BucketMap::paper_k4(),
+            _ => true,
+        }
+    }
+
+    /// Stable name (mirrors [`OrderPolicy::parse`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            OrderPolicy::Passthrough => "passthrough",
+            OrderPolicy::Precise => "precise",
+            OrderPolicy::Approximate(_) => "approx",
+            OrderPolicy::Adaptive(_) => "adaptive",
+        }
+    }
+
+    /// The strategy a fresh engine starts on.
+    fn initial_strategy(&self) -> StrategyKind {
+        match self {
+            OrderPolicy::Passthrough => StrategyKind::Passthrough,
+            OrderPolicy::Precise => StrategyKind::Precise,
+            OrderPolicy::Approximate(_) => StrategyKind::Approximate,
+            // no data yet: hold the free path until the first evaluation
+            OrderPolicy::Adaptive(_) => StrategyKind::Passthrough,
+        }
+    }
+
+    /// The APP bucket map this policy prices the approximate arm with.
+    fn bucket_map(&self) -> BucketMap {
+        match self {
+            OrderPolicy::Approximate(m) => m.clone(),
+            OrderPolicy::Adaptive(cfg) => cfg.map.clone(),
+            _ => BucketMap::paper_k4(),
+        }
+    }
+}
+
+/// Telemetry of one engine: the probe state plus the policy's decisions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub probe: ProbeSnapshot,
+    /// Strategy the next packet will be transmitted under.
+    pub active: StrategyKind,
+    /// Number of online strategy switches so far.
+    pub switches: u64,
+}
+
+impl Default for TelemetrySnapshot {
+    fn default() -> Self {
+        Self {
+            probe: ProbeSnapshot::default(),
+            active: StrategyKind::Passthrough,
+            switches: 0,
+        }
+    }
+}
+
+/// One shard's ordering decision-maker: policy + probe + sort scratch.
+#[derive(Debug, Clone)]
+pub struct PolicyEngine {
+    policy: OrderPolicy,
+    map: BucketMap,
+    probe: LinkProbe,
+    scratch: ProbeScratch,
+    active: StrategyKind,
+    switches: u64,
+}
+
+impl PolicyEngine {
+    /// Engine with the default probe window.
+    pub fn new(policy: OrderPolicy) -> Self {
+        Self::with_window(policy, DEFAULT_WINDOW_PACKETS)
+    }
+
+    /// Engine with an explicit sliding-window length.
+    pub fn with_window(policy: OrderPolicy, window_packets: usize) -> Self {
+        let active = policy.initial_strategy();
+        let map = policy.bucket_map();
+        Self {
+            policy,
+            map,
+            probe: LinkProbe::new(window_packets),
+            scratch: ProbeScratch::new(),
+            active,
+            switches: 0,
+        }
+    }
+
+    /// The policy this engine runs.
+    pub fn policy(&self) -> &OrderPolicy {
+        &self.policy
+    }
+
+    /// Strategy the next packet will be transmitted under.
+    pub fn active(&self) -> StrategyKind {
+        self.active
+    }
+
+    /// Serving-path entry point: the backend already computed the ACC and
+    /// APP permutations for this packet, so the engine only prices them
+    /// and decides. Returns the strategy this packet was transmitted
+    /// under. (The serving contract fixes APP at the paper's k = 4 — the
+    /// backend's `psu_sort` shape — so `app_perm` must come from that
+    /// mapping; custom maps go through [`PolicyEngine::observe`].)
+    pub fn observe_with_perms(
+        &mut self,
+        packet: &[u8],
+        acc_perm: &[u16],
+        app_perm: &[u16],
+    ) -> StrategyKind {
+        let used = self.active;
+        self.probe.observe(packet, acc_perm, app_perm, used);
+        self.maybe_reevaluate();
+        used
+    }
+
+    /// Library entry point: sorts the packet itself (APP under the
+    /// policy's own bucket map). Returns the strategy transmitted.
+    pub fn observe(&mut self, packet: &[u8]) -> StrategyKind {
+        let used = self.active;
+        self.probe.observe_sorting(packet, &self.map, &mut self.scratch, used);
+        self.maybe_reevaluate();
+        used
+    }
+
+    fn maybe_reevaluate(&mut self) {
+        let OrderPolicy::Adaptive(cfg) = &self.policy else {
+            return;
+        };
+        if self.probe.packets() % cfg.evaluate_every.max(1) != 0 {
+            return;
+        }
+        let s = self.probe.snapshot();
+        if s.window_flits == 0 {
+            return;
+        }
+        let k = cfg.map.k();
+        let mut best = self.active;
+        let mut best_score = f64::INFINITY;
+        for kind in StrategyKind::all() {
+            let score = s.window_bt_per_flit(kind) + cfg.cost.penalty(kind, k);
+            if score < best_score {
+                best_score = score;
+                best = kind;
+            }
+        }
+        if best != self.active {
+            self.active = best;
+            self.switches += 1;
+        }
+    }
+
+    /// Probe + decision state, cheap to copy out for publication.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            probe: self.probe.snapshot(),
+            active: self.active,
+            switches: self.switches,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Rng;
+    use crate::PACKET_BYTES;
+
+    fn random_packet(rng: &mut Rng) -> Vec<u8> {
+        (0..PACKET_BYTES).map(|_| rng.next_u8()).collect()
+    }
+
+    #[test]
+    fn parse_accepts_the_cli_names_and_rejects_junk() {
+        assert_eq!(OrderPolicy::parse("passthrough").unwrap().label(), "passthrough");
+        assert_eq!(OrderPolicy::parse("precise").unwrap().label(), "precise");
+        assert_eq!(OrderPolicy::parse("approx").unwrap().label(), "approx");
+        assert_eq!(OrderPolicy::parse("approximate").unwrap().label(), "approx");
+        assert_eq!(OrderPolicy::parse("adaptive").unwrap().label(), "adaptive");
+        assert!(OrderPolicy::parse("fastest").is_err());
+        assert!(OrderPolicy::parse("").is_err());
+    }
+
+    #[test]
+    fn static_policies_never_switch() {
+        let mut rng = Rng::new(5);
+        for (policy, want) in [
+            (OrderPolicy::Passthrough, StrategyKind::Passthrough),
+            (OrderPolicy::Precise, StrategyKind::Precise),
+            (OrderPolicy::approximate_paper(), StrategyKind::Approximate),
+        ] {
+            let mut e = PolicyEngine::with_window(policy, 64);
+            for _ in 0..100 {
+                let p = random_packet(&mut rng);
+                assert_eq!(e.observe(&p), want);
+            }
+            let t = e.snapshot();
+            assert_eq!(t.active, want);
+            assert_eq!(t.switches, 0);
+            assert_eq!(t.probe.packets, 100);
+        }
+    }
+
+    #[test]
+    fn adaptive_switches_off_passthrough_when_sorting_pays() {
+        // Bimodal packets (each byte 0x00 or 0xFF): raw order toggles whole
+        // lanes at ~half the flit boundaries, while popcount sorting packs
+        // the zeros then the ones — a guaranteed, large win, so Adaptive
+        // must leave the bypass path at its first evaluation.
+        let cfg = AdaptiveConfig { evaluate_every: 64, ..AdaptiveConfig::default() };
+        let mut e = PolicyEngine::with_window(OrderPolicy::Adaptive(cfg), 64);
+        let mut rng = Rng::new(6);
+        for _ in 0..512 {
+            let p: Vec<u8> = (0..PACKET_BYTES)
+                .map(|_| if rng.next_u64() & 1 == 1 { 0xFF } else { 0x00 })
+                .collect();
+            e.observe(&p);
+        }
+        let t = e.snapshot();
+        assert_ne!(t.active, StrategyKind::Passthrough, "adaptive never engaged a sorter");
+        assert!(t.switches >= 1);
+        // the transmitted ledger must now be saving BT vs raw order
+        assert!(t.probe.window_savings_ratio() > 0.0);
+    }
+
+    #[test]
+    fn adaptive_respects_a_dominant_cost_model() {
+        // an absurdly expensive sorter: the policy must stay on bypass
+        let cfg = AdaptiveConfig {
+            evaluate_every: 32,
+            cost: CostModel::bucket_linear(1e6),
+            ..AdaptiveConfig::default()
+        };
+        let mut e = PolicyEngine::with_window(OrderPolicy::Adaptive(cfg), 64);
+        let mut rng = Rng::new(7);
+        for _ in 0..256 {
+            let p = random_packet(&mut rng);
+            e.observe(&p);
+        }
+        let t = e.snapshot();
+        assert_eq!(t.active, StrategyKind::Passthrough);
+        assert_eq!(t.switches, 0);
+    }
+
+    #[test]
+    fn cost_models_order_sensibly() {
+        let m = CostModel::bucket_linear(0.9);
+        assert_eq!(m.penalty(StrategyKind::Passthrough, 4), 0.0);
+        assert!(m.penalty(StrategyKind::Approximate, 4) < m.penalty(StrategyKind::Precise, 4));
+        // the per-bucket rule follows the map's actual k: the identity
+        // mapping (k = W+1) prices APP exactly like ACC
+        let full = m.penalty(StrategyKind::Approximate, ACC_BUCKETS);
+        assert!((full - m.penalty(StrategyKind::Precise, ACC_BUCKETS)).abs() < 1e-12);
+        let a = CostModel::from_area(&Tech::default(), 64, &BucketMap::paper_k4(), 1.0);
+        assert_eq!(a.penalty(StrategyKind::Passthrough, 4), 0.0);
+        // the paper's headline: APP is ~35 % smaller than ACC
+        let frac = a.penalty(StrategyKind::Approximate, 4) / a.penalty(StrategyKind::Precise, 4);
+        assert!(frac > 0.4 && frac < 0.9, "APP/ACC area fraction {frac}");
+    }
+
+    #[test]
+    fn serving_compatibility_tracks_the_k4_contract() {
+        assert!(OrderPolicy::Passthrough.serving_compatible());
+        assert!(OrderPolicy::Precise.serving_compatible());
+        assert!(OrderPolicy::approximate_paper().serving_compatible());
+        assert!(OrderPolicy::adaptive().serving_compatible());
+        assert!(!OrderPolicy::Approximate(BucketMap::uniform(3)).serving_compatible());
+        let cfg = AdaptiveConfig { map: BucketMap::exact(), ..AdaptiveConfig::default() };
+        assert!(!OrderPolicy::Adaptive(cfg).serving_compatible());
+    }
+}

@@ -72,6 +72,34 @@ impl Link {
         self.send_packet(&Packet::from_bytes(bytes, self.lanes))
     }
 
+    /// [`Link::send_transfer`] semantics for a raw byte stream, framing
+    /// flits on the fly (tail zero-padded exactly like
+    /// [`Packet::from_bytes`]) without allocating the intermediate
+    /// [`Packet`] — the telemetry probe's per-packet hot path.
+    pub fn send_transfer_bytes(&mut self, bytes: &[u8]) -> u64 {
+        if self.lanes > FLIT_LANES {
+            // wide links are off the standard framing; take the slow path
+            return self.send_transfer(&Packet::from_bytes(bytes, self.lanes));
+        }
+        let mut flit = [0u8; FLIT_LANES];
+        let lanes = self.lanes;
+        let mut bt = 0;
+        for (i, chunk) in bytes.chunks(lanes).enumerate() {
+            flit[..chunk.len()].copy_from_slice(chunk);
+            flit[chunk.len()..lanes].fill(0);
+            if i == 0 {
+                // parallel load: overwrite state without counting
+                let before = self.tx_reg.toggles;
+                self.tx_reg.latch_bytes(&flit[..lanes]);
+                self.tx_reg.toggles = before;
+                self.flits_sent += 1;
+            } else {
+                bt += self.send_flit(&flit[..lanes]);
+            }
+        }
+        bt
+    }
+
     /// Total bit transitions so far.
     pub fn total_bt(&self) -> u64 {
         self.tx_reg.toggles
@@ -154,6 +182,25 @@ mod tests {
         link.send_flit(&[0x00; 16]);
         link.send_flit(&[0xFF; 16]);
         assert!((link.bt_per_flit() - 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn send_transfer_bytes_matches_packet_path() {
+        // identical byte streams through both entry points must leave
+        // identical ledgers, including tail zero-padding and line state
+        for len in [0usize, 5, 16, 20, 64] {
+            let bytes: Vec<u8> = (0..len).map(|i| (i as u8).wrapping_mul(37) ^ 0xA5).collect();
+            let mut a = Link::new("packet");
+            let mut b = Link::new("bytes");
+            // pre-charge both lines so the parallel load has state to hide
+            a.send_flit(&[0xFF; 16]);
+            b.send_flit(&[0xFF; 16]);
+            let via_packet = a.send_transfer(&Packet::from_bytes(&bytes, 16));
+            let via_bytes = b.send_transfer_bytes(&bytes);
+            assert_eq!(via_packet, via_bytes, "len {len}");
+            assert_eq!(a.total_bt(), b.total_bt(), "len {len}");
+            assert_eq!(a.flits_sent, b.flits_sent, "len {len}");
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@ use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 use repro::coordinator::{SortResponse, SortService};
+use repro::linkpower::{OrderPolicy, StrategyKind};
 use repro::popcount8;
 use repro::psu::BucketMap;
 use repro::runtime::{Backend, ReferenceBackend, BT_BATCH, PACKET_ELEMS};
@@ -169,6 +170,75 @@ fn sharded_engine_under_concurrent_clients_tracks_per_shard_metrics() {
     assert!(m.latency.p50() <= m.latency.p99());
     assert!(m.latency.p99() > Duration::ZERO);
     assert!(m.max_batch.load(Ordering::Relaxed) <= BT_BATCH as u64);
+}
+
+/// The adaptive policy end-to-end on the serving path: every reply is
+/// stamped with a strategy, sorted indices stay byte-identical to the
+/// policy-free oracle, telemetry partitions across shards, and the probe's
+/// accounting is self-consistent.
+#[test]
+fn adaptive_policy_serves_with_telemetry() {
+    let oracle = ReferenceBackend::new();
+    let shards = 2;
+    let svc = SortService::spawn_reference_policy(
+        shards,
+        Duration::from_millis(2),
+        Some(OrderPolicy::adaptive()),
+    )
+    .unwrap();
+    let packets = random_packets(600, 0xADA97);
+    let responses = svc.sort_many(&packets).unwrap();
+    assert_eq!(responses.len(), packets.len());
+    for (i, (p, r)) in packets.iter().zip(&responses).enumerate() {
+        check_response(p, r, &format!("adaptive packet {i}"));
+        // the policy decides transmission order, never the sorted indices
+        let (acc, app) = oracle.psu_sort(std::slice::from_ref(p)).unwrap();
+        assert_eq!(r.acc_indices, acc[0], "packet {i}: ACC diverged under policy");
+        assert_eq!(r.app_indices, app[0], "packet {i}: APP diverged under policy");
+        assert!(r.strategy.is_some(), "packet {i}: response not stamped");
+    }
+    // adaptive starts on the free path: the very first admitted packet
+    // (shard 0, first batch, before any evaluation) ships passthrough
+    assert_eq!(responses[0].strategy, Some(StrategyKind::Passthrough));
+    let (lp, _switches) = svc.metrics.linkpower_totals();
+    assert_eq!(lp.packets, 600, "every served packet must be priced");
+    assert_eq!(lp.flits, 600 * 4);
+    // per-shard telemetry partitions the totals
+    let per_shard: u64 = svc.metrics.linkpower.iter().map(|s| s.load().probe.packets).sum();
+    assert_eq!(per_shard, 600);
+    for s in 0..shards {
+        let t = svc.metrics.linkpower[s].load();
+        let p = &t.probe;
+        // sliding-window ledgers can never exceed the cumulative ones
+        assert!(p.window_raw_bt <= p.raw_bt, "shard {s}: window raw overshoot");
+        assert!(p.window_acc_bt <= p.acc_bt, "shard {s}: window acc overshoot");
+        assert!(p.window_served_bt <= p.served_bt, "shard {s}: window served overshoot");
+        assert_eq!(p.window_packets, p.packets.min(1024), "shard {s}: window size");
+        // on this traffic the adaptive mix (passthrough warmup, then a
+        // sorter) never costs more than shipping everything raw
+        assert!(p.served_bt <= p.raw_bt, "shard {s}: served {} > raw {}", p.served_bt, p.raw_bt);
+        assert!(p.raw_bt > 0 && p.served_bt > 0, "shard {s}: empty ledgers");
+    }
+    // the Prometheus snapshot reflects the run
+    let text = svc.metrics.render_prometheus();
+    assert!(text.contains("sortservice_requests_total 600"));
+    assert!(text.contains("linkpower_bt_total{shard=\"0\",order=\"raw\"}"));
+    assert!(text.contains("linkpower_window_savings_ratio"));
+}
+
+/// Without a policy, responses carry no strategy stamp and no telemetry is
+/// published — the probe stays entirely off the hot path.
+#[test]
+fn policy_free_engine_publishes_no_telemetry() {
+    let svc = SortService::spawn_reference_sharded(2, Duration::from_millis(1)).unwrap();
+    let packets = random_packets(16, 99);
+    for r in svc.sort_many(&packets).unwrap() {
+        assert_eq!(r.strategy, None);
+    }
+    let (lp, switches) = svc.metrics.linkpower_totals();
+    assert_eq!(lp.packets, 0);
+    assert_eq!(switches, 0);
+    assert!(!svc.metrics.render_prometheus().contains("linkpower_"));
 }
 
 #[test]

@@ -5,10 +5,13 @@
 //! property, with the failing seed printed on assert.
 
 use repro::hw::Tech;
-use repro::noc::Packet;
+use repro::linkpower::{LinkProbe, StrategyKind};
+use repro::noc::{Link, Packet};
 use repro::popcount8;
 use repro::psu::{all_designs, AccPsu, AppPsu, BucketMap, CsnSorter, SorterUnit};
+use repro::sortcore;
 use repro::workload::Rng;
+use repro::FLIT_LANES;
 
 const CASES: usize = 60;
 
@@ -221,6 +224,58 @@ fn reorder_preserves_multiset() {
             base.sort_unstable();
             assert_eq!(out, base, "{}", d.name());
         }
+    }
+}
+
+/// The linkpower probe is byte-identical to a standalone [`Link`] ledger
+/// fed the same flit sequence: for every ordering channel (raw / ACC /
+/// APP), cumulative BT and flit counts match a fresh `Link` replaying the
+/// identical transfers, across randomized packet streams and every served
+/// strategy.
+#[test]
+fn link_probe_matches_link_ledger() {
+    let mut rng = Rng::new(1212);
+    let map = BucketMap::paper_k4();
+    for case in 0..CASES {
+        let n_packets = 1 + rng.next_below(40);
+        let served = StrategyKind::all()[rng.next_below(3)];
+        let mut probe = LinkProbe::new(8);
+        let mut raw_link = Link::new("oracle.raw");
+        let mut acc_link = Link::new("oracle.acc");
+        let mut app_link = Link::new("oracle.app");
+        let mut served_bt = 0u64;
+        for _ in 0..n_packets {
+            let bytes = random_values(&mut rng, 64);
+            let acc_perm = sortcore::sort_indices_by(&bytes, sortcore::ACC_BUCKETS, popcount8);
+            let app_perm = sortcore::sort_indices_by(&bytes, map.k(), |v| map.bucket_of(v));
+            let obs = probe.observe(&bytes, &acc_perm, &app_perm, served);
+            // the oracle: three independent Link ledgers, same transfers
+            let raw = raw_link.send_transfer(&Packet::from_bytes(&bytes, FLIT_LANES));
+            let acc = acc_link.send_transfer(&Packet::from_bytes(
+                &sortcore::apply_perm(&acc_perm, &bytes),
+                FLIT_LANES,
+            ));
+            let app = app_link.send_transfer(&Packet::from_bytes(
+                &sortcore::apply_perm(&app_perm, &bytes),
+                FLIT_LANES,
+            ));
+            let ctx = format!("case {case} serving {served:?}");
+            assert_eq!((obs.raw, obs.acc, obs.app), (raw, acc, app), "{ctx}");
+            served_bt += match served {
+                StrategyKind::Passthrough => raw,
+                StrategyKind::Precise => acc,
+                StrategyKind::Approximate => app,
+            };
+        }
+        let s = probe.snapshot();
+        assert_eq!(s.packets, n_packets as u64);
+        assert_eq!(s.raw_bt, raw_link.total_bt(), "case {case}: raw ledger diverged");
+        assert_eq!(s.acc_bt, acc_link.total_bt(), "case {case}: acc ledger diverged");
+        assert_eq!(s.app_bt, app_link.total_bt(), "case {case}: app ledger diverged");
+        assert_eq!(s.served_bt, served_bt, "case {case}: served ledger diverged");
+        assert_eq!(s.flits, raw_link.flits_sent, "case {case}: flit count diverged");
+        // the window sums can never exceed the cumulative ledgers
+        assert!(s.window_raw_bt <= s.raw_bt && s.window_acc_bt <= s.acc_bt);
     }
 }
 

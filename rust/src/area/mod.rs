@@ -7,11 +7,17 @@ use crate::psu::SorterUnit;
 /// One row of the Fig. 5 chart.
 #[derive(Debug, Clone)]
 pub struct AreaRow {
+    /// Design name as in the paper's figures.
     pub design: &'static str,
+    /// Sort width (kernel size K).
     pub n: usize,
+    /// Popcount-stage area.
     pub popcount_um2: f64,
+    /// Sorting-stage area.
     pub sorting_um2: f64,
+    /// Pipeline-register area.
     pub pipeline_um2: f64,
+    /// Total calibrated post-layout area.
     pub total_um2: f64,
 }
 

@@ -15,14 +15,20 @@ pub fn black_box<T>(x: T) -> T {
 /// One measured result.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Scenario name.
     pub name: String,
+    /// Timed iterations.
     pub iters: u32,
+    /// Median per-iteration wall time.
     pub median: Duration,
+    /// Mean per-iteration wall time.
     pub mean: Duration,
+    /// Fastest iteration.
     pub min: Duration,
 }
 
 impl Measurement {
+    /// One human-readable summary line (name, median/mean/min, iters).
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10.3?} median {:>10.3?} mean {:>10.3?} min ({} iters)",
@@ -54,14 +60,12 @@ pub fn json_path_from_env() -> Option<String> {
     std::env::var("BENCHUTIL_JSON").ok().filter(|p| !p.is_empty())
 }
 
-/// Write measurements plus free-form scalar metrics as one JSON document:
-/// `{"measurements": [...], "scalars": {...}}`. Non-finite scalars are
-/// serialized as `null` (JSON has no NaN/inf).
-pub fn write_json(
-    path: &str,
-    measurements: &[Measurement],
-    scalars: &[(&str, f64)],
-) -> std::io::Result<()> {
+/// Serialize measurements plus free-form scalar metrics as one JSON
+/// document: `{"measurements": [...], "scalars": {...}}`. Non-finite
+/// scalars are serialized as `null` (JSON has no NaN/inf). This shape is
+/// shared by the benches, the serve demo, and the report pipeline's
+/// `results.json`, so one tool can read all three.
+pub fn json_document(measurements: &[Measurement], scalars: &[(&str, f64)]) -> String {
     let mut s = String::from("{\"measurements\":[");
     for (i, m) in measurements.iter().enumerate() {
         if i > 0 {
@@ -81,7 +85,16 @@ pub fn write_json(
         }
     }
     s.push_str("}}\n");
-    std::fs::write(path, s)
+    s
+}
+
+/// Write a [`json_document`] to `path`.
+pub fn write_json(
+    path: &str,
+    measurements: &[Measurement],
+    scalars: &[(&str, f64)],
+) -> std::io::Result<()> {
+    std::fs::write(path, json_document(measurements, scalars))
 }
 
 /// Time `f` over `iters` iterations after `warmup` untimed runs.

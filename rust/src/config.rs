@@ -21,6 +21,18 @@ pub struct Config {
     pub kernel_sizes: Vec<usize>,
     /// Hop counts for the multihop experiment.
     pub hops: Vec<usize>,
+    /// Sort width for the Fig. 4 waveform traces (paper: K = 25).
+    pub fig4_n: usize,
+    /// Bucket counts swept by the `ablate` experiment.
+    pub ablate_ks: Vec<usize>,
+    /// Packets per bucket-count point in the `ablate` experiment.
+    pub ablate_packets: usize,
+    /// Packets sent across each multihop path.
+    pub multihop_packets: usize,
+    /// Activation windows per shape in the layer sweep.
+    pub layers_windows: usize,
+    /// Packets streamed through each engine in the policy scenario.
+    pub policy_packets: usize,
     /// Artifact directory for the PJRT runtime.
     pub artifacts_dir: String,
 }
@@ -34,6 +46,12 @@ impl Default for Config {
             buckets: 4,
             kernel_sizes: vec![25, 49],
             hops: vec![1, 2, 4, 8],
+            fig4_n: 25,
+            ablate_ks: vec![2, 3, 4, 6, 9],
+            ablate_packets: 4096,
+            multihop_packets: 1024,
+            layers_windows: 2048,
+            policy_packets: 4096,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -71,6 +89,12 @@ impl Config {
                 "buckets" => c.buckets = val.parse().map_err(|_| bad())?,
                 "kernel_sizes" => c.kernel_sizes = parse_usize_list(val).ok_or_else(bad)?,
                 "hops" => c.hops = parse_usize_list(val).ok_or_else(bad)?,
+                "fig4_n" => c.fig4_n = val.parse().map_err(|_| bad())?,
+                "ablate_ks" => c.ablate_ks = parse_usize_list(val).ok_or_else(bad)?,
+                "ablate_packets" => c.ablate_packets = val.parse().map_err(|_| bad())?,
+                "multihop_packets" => c.multihop_packets = val.parse().map_err(|_| bad())?,
+                "layers_windows" => c.layers_windows = val.parse().map_err(|_| bad())?,
+                "policy_packets" => c.policy_packets = val.parse().map_err(|_| bad())?,
                 "artifacts_dir" => c.artifacts_dir = parse_string(val),
                 _ => anyhow::bail!("line {}: unknown key {key}", lineno + 1),
             }
@@ -95,6 +119,25 @@ mod tests {
         assert_eq!(c.test_vectors, 100);
         assert_eq!(c.buckets, 4);
         assert_eq!(c.kernel_sizes, vec![25, 49]);
+        assert_eq!(c.fig4_n, 25);
+        assert_eq!(c.ablate_ks, vec![2, 3, 4, 6, 9]);
+        assert_eq!(c.ablate_packets, 4096);
+        assert_eq!(c.policy_packets, 4096);
+    }
+
+    #[test]
+    fn experiment_knobs_parse() {
+        let c = Config::from_toml_str(
+            "fig4_n = 16\nablate_ks = [2, 4]\nablate_packets = 128\n\
+             multihop_packets = 64\nlayers_windows = 32\npolicy_packets = 256",
+        )
+        .unwrap();
+        assert_eq!(c.fig4_n, 16);
+        assert_eq!(c.ablate_ks, vec![2, 4]);
+        assert_eq!(c.ablate_packets, 128);
+        assert_eq!(c.multihop_packets, 64);
+        assert_eq!(c.layers_windows, 32);
+        assert_eq!(c.policy_packets, 256);
     }
 
     #[test]

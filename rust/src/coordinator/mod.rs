@@ -64,7 +64,9 @@ struct SortRequest {
 /// output without copying.
 #[derive(Debug, Clone)]
 pub struct SortResponse {
+    /// ACC (exact popcount) sorted-index permutation.
     pub acc_indices: Vec<u16>,
+    /// APP (k = 4 bucketed) sorted-index permutation.
     pub app_indices: Vec<u16>,
     /// Ordering the serving policy transmitted this packet under; `None`
     /// when the engine was spawned without a policy (telemetry off).
@@ -149,20 +151,33 @@ impl LatencyHistogram {
 /// snapshot mid-publish, which only ever mixes two adjacent batch states.
 #[derive(Debug, Default)]
 pub struct LinkPowerStats {
+    /// Packets observed (mirror of [`ProbeSnapshot::packets`]).
     pub packets: AtomicU64,
+    /// Flits observed.
     pub flits: AtomicU64,
+    /// Cumulative BT in raw order.
     pub raw_bt: AtomicU64,
+    /// Cumulative BT under the ACC ordering.
     pub acc_bt: AtomicU64,
+    /// Cumulative BT under the APP ordering.
     pub app_bt: AtomicU64,
+    /// Cumulative BT as transmitted.
     pub served_bt: AtomicU64,
+    /// Packets in the sliding window.
     pub window_packets: AtomicU64,
+    /// Flits in the sliding window.
     pub window_flits: AtomicU64,
+    /// Window BT in raw order.
     pub window_raw_bt: AtomicU64,
+    /// Window BT under the ACC ordering.
     pub window_acc_bt: AtomicU64,
+    /// Window BT under the APP ordering.
     pub window_app_bt: AtomicU64,
+    /// Window BT as transmitted.
     pub window_served_bt: AtomicU64,
     /// Active [`StrategyKind`], stored as its dense index.
     pub active: AtomicUsize,
+    /// Online strategy switches so far.
     pub switches: AtomicU64,
 }
 
@@ -394,6 +409,7 @@ impl Default for Metrics {
 pub struct SortService {
     shards: Arc<Vec<SyncSender<SortRequest>>>,
     cursor: Arc<AtomicUsize>,
+    /// Shared engine metrics (counters, latency histogram, telemetry).
     pub metrics: Arc<Metrics>,
 }
 

@@ -1,18 +1,24 @@
 //! Ablation: bucket count k ∈ {2,3,4,6,9} — the area-vs-BT-reduction
 //! frontier behind the paper's choice of k=4 (DESIGN.md experiment index).
 
+use crate::config::Config;
 use crate::hw::Tech;
 use crate::noc::{Link, Packet};
 use crate::psu::{AppPsu, BucketMap, SorterUnit};
-use crate::report::{self, Table};
+use crate::report::{self, ExperimentResult, Table};
 use crate::workload::{OrderStrategy, Rng, TrafficModel};
 use crate::PACKET_BYTES;
+
+use super::Experiment;
 
 /// One point on the frontier.
 #[derive(Debug, Clone)]
 pub struct KPoint {
+    /// Bucket count k.
     pub k: usize,
+    /// K=25 APP-PSU area at this bucket count.
     pub area_um2: f64,
+    /// Input-stream BT reduction vs column-major order, in percent.
     pub bt_reduction_pct: f64,
 }
 
@@ -56,7 +62,8 @@ pub fn run(ks: &[usize], model: &TrafficModel, n_packets: usize, seed: u64, tech
         .collect()
 }
 
-pub fn render(points: &[KPoint]) -> String {
+/// The frontier points as a [`Table`].
+pub fn table(points: &[KPoint]) -> Table {
     let mut t = Table::new(
         "Ablation: bucket count k vs area (K=25 unit) and input-BT reduction",
         &["k", "area um^2", "BT reduction vs col-major"],
@@ -68,7 +75,52 @@ pub fn render(points: &[KPoint]) -> String {
             report::pct(p.bt_reduction_pct),
         ]);
     }
-    t.render()
+    t
+}
+
+/// Aligned text rendering of [`table`].
+pub fn render(points: &[KPoint]) -> String {
+    table(points).render()
+}
+
+/// Registry entry: the bucket-count ablation.
+pub struct AblateExperiment;
+
+impl Experiment for AblateExperiment {
+    fn name(&self) -> &'static str {
+        "ablate"
+    }
+
+    fn description(&self) -> &'static str {
+        "Bucket-count frontier: APP-PSU area vs input-BT reduction across \
+         k, the trade behind the paper's k = 4 choice"
+    }
+
+    fn paper_anchor(&self) -> &'static str {
+        "§III-B2 / Fig. 5"
+    }
+
+    fn run(&self, cfg: &Config) -> anyhow::Result<ExperimentResult> {
+        let pts = run(
+            &cfg.ablate_ks,
+            &TrafficModel::default(),
+            cfg.ablate_packets,
+            cfg.seed,
+            &Tech::default(),
+        );
+        let t = table(&pts);
+        let mut res = ExperimentResult::new(t.render());
+        res.push_table(t);
+        for p in &pts {
+            res.push_scalar(format!("ablate.k{}_area_um2", p.k), p.area_um2, "um^2");
+            res.push_scalar(
+                format!("ablate.k{}_bt_reduction_pct", p.k),
+                p.bt_reduction_pct,
+                "%",
+            );
+        }
+        Ok(res)
+    }
 }
 
 #[cfg(test)]

@@ -20,24 +20,31 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::config::Config;
 use crate::coordinator::SortService;
 
 use crate::hw::Tech;
 use crate::platform::{Platform, PlatformOrdering};
 use crate::power::compare;
 use crate::psu::{AccPsu, AppPsu, BucketMap, SorterUnit};
+use crate::report::ExperimentResult;
 use crate::runtime::{Backend, PACKET_ELEMS, PE_BATCH};
 use crate::workload::digits::{self, IMG};
 use crate::workload::lenet::{K, QuantWeights};
 use crate::workload::Rng;
 
+use super::Experiment;
+
 /// E2E results.
 #[derive(Debug, Clone)]
 pub struct E2e {
-    /// Headline: overall link BT reduction, ACC and APP (paper: 20.4/19.5 %).
+    /// Headline: overall link BT reduction under ACC (paper: 20.42 %).
     pub acc_bt_reduction_pct: f64,
+    /// Link BT reduction under APP (paper: 19.50 %).
     pub app_bt_reduction_pct: f64,
+    /// Link power reduction under ACC (paper: 18.27 %).
     pub acc_link_power_reduction_pct: f64,
+    /// Link power reduction under APP (paper: 16.48 %).
     pub app_link_power_reduction_pct: f64,
     /// max |PE integer output − backend float output| across pooled pixels.
     pub max_numeric_gap: f64,
@@ -152,6 +159,7 @@ pub fn run(backend: &dyn Backend, seed: u64, tech: &Tech) -> Result<E2e> {
 }
 
 impl E2e {
+    /// Prose summary of the headline metrics and cross-checks.
     pub fn render(&self) -> String {
         format!(
             "== End-to-end: LeNet conv1+pool on {} digit images, 16 PEs ==\n\
@@ -169,5 +177,47 @@ impl E2e {
             self.sort_mismatches,
             self.service_mismatches,
         )
+    }
+}
+
+/// Registry entry: the end-to-end three-layer driver.
+pub struct E2eExperiment;
+
+impl Experiment for E2eExperiment {
+    fn name(&self) -> &'static str {
+        "e2e"
+    }
+
+    fn description(&self) -> &'static str {
+        "End-to-end driver: the platform, the execution backend, and the \
+         sharded serving engine on one digit-image workload, with \
+         cross-checks between all three layers"
+    }
+
+    fn paper_anchor(&self) -> &'static str {
+        "Fig. 3 + Fig. 7 (system level)"
+    }
+
+    fn run(&self, cfg: &Config) -> anyhow::Result<ExperimentResult> {
+        let backend = crate::runtime::make_backend(&cfg.artifacts_dir);
+        let e = run(backend.as_ref(), cfg.seed, &Tech::default())?;
+        let mut res = ExperimentResult::new(e.render());
+        res.push_scalar("e2e.images", e.images as f64, "");
+        res.push_scalar("e2e.acc_bt_reduction_pct", e.acc_bt_reduction_pct, "%");
+        res.push_scalar("e2e.app_bt_reduction_pct", e.app_bt_reduction_pct, "%");
+        res.push_scalar(
+            "e2e.acc_link_power_reduction_pct",
+            e.acc_link_power_reduction_pct,
+            "%",
+        );
+        res.push_scalar(
+            "e2e.app_link_power_reduction_pct",
+            e.app_link_power_reduction_pct,
+            "%",
+        );
+        res.push_scalar("e2e.max_numeric_gap", e.max_numeric_gap, "");
+        res.push_scalar("e2e.sort_mismatches", e.sort_mismatches as f64, "");
+        res.push_scalar("e2e.service_mismatches", e.service_mismatches as f64, "");
+        Ok(res)
     }
 }

@@ -2,19 +2,25 @@
 //! APP-PSU — per transmitted element, its '1'-bit count on the input side
 //! (generally decreasing/ordered trend) and on the weight side (random).
 
+use crate::config::Config;
 use crate::popcount8;
-use crate::report::Table;
+use crate::report::{ExperimentResult, Table};
 use crate::workload::{OrderStrategy, Rng, TrafficModel};
+
+use super::Experiment;
 
 /// The snapshot: per-slot popcounts of one ordered packet.
 #[derive(Debug, Clone)]
 pub struct Fig2 {
+    /// '1'-bit count of each transmitted input element, in slot order.
     pub input_popcounts: Vec<u8>,
+    /// '1'-bit count of each weight element (follows the input ordering).
     pub weight_popcounts: Vec<u8>,
 }
 
 impl Fig2 {
-    pub fn render(&self) -> String {
+    /// The per-slot popcounts as a [`Table`].
+    pub fn table(&self) -> Table {
         let mut t = Table::new(
             "Fig. 2: '1'-bit counts across one APP-ordered packet (64 slots, 4 flits)",
             &["slot", "input pc", "weight pc"],
@@ -24,10 +30,55 @@ impl Fig2 {
         {
             t.row(&[i.to_string(), ip.to_string(), wp.to_string()]);
         }
-        let mut s = t.render();
+        t
+    }
+
+    /// Text rendering of an already-built table plus the sparklines.
+    fn render_from(&self, table: &Table) -> String {
+        let mut s = table.render();
         s.push_str(&sparkline("input ", &self.input_popcounts));
         s.push_str(&sparkline("weight", &self.weight_popcounts));
         s
+    }
+
+    /// Aligned text table plus input/weight sparklines.
+    pub fn render(&self) -> String {
+        self.render_from(&self.table())
+    }
+}
+
+/// Registry entry: the ordered-flit snapshot.
+pub struct Fig2Experiment;
+
+impl Experiment for Fig2Experiment {
+    fn name(&self) -> &'static str {
+        "fig2"
+    }
+
+    fn description(&self) -> &'static str {
+        "One APP-ordered packet's per-slot '1'-bit counts: ordered on the \
+         input side, random on the weight side"
+    }
+
+    fn paper_anchor(&self) -> &'static str {
+        "Fig. 2"
+    }
+
+    fn run(&self, cfg: &Config) -> anyhow::Result<ExperimentResult> {
+        let f = run(&TrafficModel::default(), cfg.seed);
+        let table = f.table();
+        let mut res = ExperimentResult::new(f.render_from(&table));
+        res.push_table(table);
+        res.push_scalar("fig2.slots", f.input_popcounts.len() as f64, "");
+        // ordered-trend check the paper's figure shows visually: fraction
+        // of adjacent input slots with non-decreasing popcount buckets
+        let map = crate::psu::BucketMap::paper_k4();
+        let buckets: Vec<u8> =
+            f.input_popcounts.iter().map(|&p| map.bucket_of_popcount(p)).collect();
+        let pairs = (buckets.len() - 1).max(1);
+        let mono = buckets.windows(2).filter(|w| w[0] <= w[1]).count();
+        res.push_scalar("fig2.input_bucket_monotone_frac", mono as f64 / pairs as f64, "");
+        Ok(res)
     }
 }
 

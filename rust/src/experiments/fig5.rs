@@ -6,16 +6,21 @@
 //! sorting stage); APP-PSU the smallest of the four designs.
 
 use crate::area::{fig5_rows, AreaRow};
+use crate::config::Config;
 use crate::hw::Tech;
-use crate::report::{self, Table};
+use crate::report::{self, ExperimentResult, Table};
+
+use super::Experiment;
 
 /// Rows for each kernel size.
 #[derive(Debug, Clone)]
 pub struct Fig5 {
+    /// `(kernel size, per-design area rows)` pairs, in sweep order.
     pub per_kernel: Vec<(usize, Vec<AreaRow>)>,
 }
 
 impl Fig5 {
+    /// The area row of `design` at kernel size `n`.
     pub fn row(&self, n: usize, design: &str) -> &AreaRow {
         self.per_kernel
             .iter()
@@ -34,22 +39,33 @@ impl Fig5 {
         (1.0 - app / acc) * 100.0
     }
 
-    pub fn render(&self) -> String {
+    /// One area-breakdown [`Table`] per kernel size.
+    pub fn tables(&self) -> Vec<Table> {
+        self.per_kernel
+            .iter()
+            .map(|(n, rows)| {
+                let mut t = Table::new(
+                    &format!("Fig. 5: area breakdown, kernel size {n} (um^2, 22nm @ 500MHz)"),
+                    &["Design", "Popcount", "Sorting", "Pipeline", "Total"],
+                );
+                for r in rows {
+                    t.row(&[
+                        r.design.to_string(),
+                        report::f(r.popcount_um2, 1),
+                        report::f(r.sorting_um2, 1),
+                        report::f(r.pipeline_um2, 1),
+                        report::f(r.total_um2, 1),
+                    ]);
+                }
+                t
+            })
+            .collect()
+    }
+
+    /// Text rendering of already-built tables plus the footer lines.
+    fn render_from(&self, tables: &[Table]) -> String {
         let mut out = String::new();
-        for (n, rows) in &self.per_kernel {
-            let mut t = Table::new(
-                &format!("Fig. 5: area breakdown, kernel size {n} (um^2, 22nm @ 500MHz)"),
-                &["Design", "Popcount", "Sorting", "Pipeline", "Total"],
-            );
-            for r in rows {
-                t.row(&[
-                    r.design.to_string(),
-                    report::f(r.popcount_um2, 1),
-                    report::f(r.sorting_um2, 1),
-                    report::f(r.pipeline_um2, 1),
-                    report::f(r.total_um2, 1),
-                ]);
-            }
+        for ((n, _), t) in self.per_kernel.iter().zip(tables) {
             out.push_str(&t.render());
             out.push_str(&format!(
                 "APP-PSU vs ACC-PSU overall reduction: {:.1}%\n\n",
@@ -58,14 +74,60 @@ impl Fig5 {
         }
         out
     }
+
+    /// Aligned text rendering: the tables plus the APP-vs-ACC footer lines.
+    pub fn render(&self) -> String {
+        self.render_from(&self.tables())
+    }
 }
 
+/// Elaborate the four designs at each kernel size.
 pub fn run(kernel_sizes: &[usize], tech: &Tech) -> Fig5 {
     Fig5 {
         per_kernel: kernel_sizes
             .iter()
             .map(|&n| (n, fig5_rows(n, tech)))
             .collect(),
+    }
+}
+
+/// Registry entry: the area-breakdown comparison.
+pub struct Fig5Experiment;
+
+impl Experiment for Fig5Experiment {
+    fn name(&self) -> &'static str {
+        "fig5"
+    }
+
+    fn description(&self) -> &'static str {
+        "Area breakdown of the four sorting-unit designs at each kernel \
+         size (22 nm @ 500 MHz, shared pipeline depth)"
+    }
+
+    fn paper_anchor(&self) -> &'static str {
+        "Fig. 5"
+    }
+
+    fn run(&self, cfg: &Config) -> anyhow::Result<ExperimentResult> {
+        let fig = run(&cfg.kernel_sizes, &Tech::default());
+        let tables = fig.tables();
+        let mut res = ExperimentResult::new(fig.render_from(&tables));
+        for t in tables {
+            res.push_table(t);
+        }
+        for (n, rows) in &fig.per_kernel {
+            for r in rows {
+                // short scalar keys: "APP-PSU" -> app, "Bitonic" -> bitonic
+                let key = r.design.trim_end_matches("-PSU").to_lowercase();
+                res.push_scalar(format!("fig5.{key}_total_um2_k{n}"), r.total_um2, "um^2");
+            }
+            res.push_scalar(
+                format!("fig5.app_vs_acc_reduction_pct_k{n}"),
+                fig.app_vs_acc_reduction_pct(*n),
+                "%",
+            );
+        }
+        Ok(res)
     }
 }
 

@@ -11,20 +11,28 @@
 //!            PSU overhead: ACC 2.28 mW vs APP 1.43 mW (−37.3 %).
 //! * Fig. 6 — breakdown of the achieved reduction into link / non-link.
 
+use crate::config::Config;
 use crate::hw::Tech;
 use crate::platform::{Platform, PlatformOrdering, RunReport};
 use crate::power::{compare, PowerComparison};
 use crate::psu::{AccPsu, AppPsu, BucketMap, SorterUnit};
-use crate::report::{self, Table};
+use crate::report::{self, ExperimentResult, Table};
 use crate::workload::lenet::{self, K};
+
+use super::Experiment;
 
 /// Results of the three platform configurations.
 #[derive(Debug, Clone)]
 pub struct Fig67 {
+    /// Bypass (non-optimized) platform run.
     pub baseline: RunReport,
+    /// ACC-PSU-ordered platform run.
     pub acc: RunReport,
+    /// APP-PSU-ordered platform run.
     pub app: RunReport,
+    /// ACC vs baseline power comparison.
     pub acc_cmp: PowerComparison,
+    /// APP vs baseline power comparison.
     pub app_cmp: PowerComparison,
 }
 
@@ -53,7 +61,13 @@ pub fn run(n_vectors: usize, buckets: usize, seed: u64, tech: &Tech) -> Fig67 {
 }
 
 impl Fig67 {
-    pub fn render(&self, tech: &Tech) -> String {
+    /// PSU overhead reduction of APP vs ACC, in percent (paper: 37.3 %).
+    pub fn psu_overhead_reduction_pct(&self) -> f64 {
+        (1.0 - self.app_cmp.psu_overhead_w / self.acc_cmp.psu_overhead_w) * 100.0
+    }
+
+    /// The comparison rows as a [`Table`].
+    pub fn table(&self) -> Table {
         let mut t = Table::new(
             "Fig. 6/7 + §IV-B4: DNN-workload power (LeNet conv1+pool, 16 PEs)",
             &[
@@ -83,7 +97,12 @@ impl Fig67 {
                 report::f(c.psu_overhead_w * 1e3, 2),
             ]);
         }
-        let mut s = t.render();
+        t
+    }
+
+    /// Text rendering of an already-built table plus the Fig. 6 lines.
+    fn render_from(&self, table: &Table, tech: &Tech) -> String {
+        let mut s = table.render();
         s.push_str(&format!(
             "\nFig. 6 breakdown (baseline): link {:.2} mW, non-link {:.2} mW \
              ({:.1}% link share)\n",
@@ -94,9 +113,66 @@ impl Fig67 {
         ));
         s.push_str(&format!(
             "PSU overhead reduction APP vs ACC: {:.1}% (paper: 37.3%)\n",
-            (1.0 - self.app_cmp.psu_overhead_w / self.acc_cmp.psu_overhead_w) * 100.0
+            self.psu_overhead_reduction_pct()
         ));
         s
+    }
+
+    /// Aligned text rendering: the table plus the Fig. 6 breakdown lines.
+    pub fn render(&self, tech: &Tech) -> String {
+        self.render_from(&self.table(), tech)
+    }
+}
+
+/// Registry entry: the DNN-workload power experiment.
+pub struct Fig67Experiment;
+
+impl Experiment for Fig67Experiment {
+    fn name(&self) -> &'static str {
+        "fig67"
+    }
+
+    fn description(&self) -> &'static str {
+        "DNN-workload power: convolution test vectors through the 16-PE \
+         LeNet platform under bypass / ACC / APP orderings with \
+         back-annotated toggle counting"
+    }
+
+    fn paper_anchor(&self) -> &'static str {
+        "Fig. 6/7 + §IV-B4"
+    }
+
+    fn run(&self, cfg: &Config) -> anyhow::Result<ExperimentResult> {
+        let tech = Tech::default();
+        let fig = run(cfg.test_vectors, cfg.buckets, cfg.seed, &tech);
+        let table = fig.table();
+        let mut res = ExperimentResult::new(fig.render_from(&table, &tech));
+        res.push_table(table);
+        res.push_scalar("fig67.vectors", cfg.test_vectors as f64, "");
+        for (key, c) in [("acc", &fig.acc_cmp), ("app", &fig.app_cmp)] {
+            res.push_scalar(format!("fig67.{key}_bt_reduction_pct"), c.bt_reduction_pct, "%");
+            res.push_scalar(
+                format!("fig67.{key}_link_power_reduction_pct"),
+                c.link_power_reduction_pct,
+                "%",
+            );
+            res.push_scalar(
+                format!("fig67.{key}_pe_level_reduction_pct"),
+                c.pe_level_reduction_pct,
+                "%",
+            );
+            res.push_scalar(
+                format!("fig67.{key}_psu_overhead_mw"),
+                c.psu_overhead_w * 1e3,
+                "mW",
+            );
+        }
+        res.push_scalar(
+            "fig67.psu_overhead_reduction_pct",
+            fig.psu_overhead_reduction_pct(),
+            "%",
+        );
+        Ok(res)
     }
 }
 

@@ -9,16 +9,20 @@
 //! activation-statistics windows through a K-wide ACC/APP PSU and measure
 //! the transfer BT reduction plus the unit's area.
 
+use crate::config::Config;
 use crate::hw::Tech;
 use crate::noc::{Link, Packet};
 use crate::psu::{AccPsu, AppPsu, BucketMap, SorterUnit};
-use crate::report::{self, Table};
+use crate::report::{self, ExperimentResult, Table};
 use crate::workload::traffic::{gen_field, TrafficModel};
 use crate::workload::Rng;
+
+use super::Experiment;
 
 /// A layer shape in the sweep.
 #[derive(Debug, Clone)]
 pub struct LayerShape {
+    /// Human-readable layer name.
     pub name: &'static str,
     /// Accumulation-window length = PSU sort width.
     pub k: usize,
@@ -37,11 +41,17 @@ pub fn default_shapes() -> Vec<LayerShape> {
 /// One row of the sweep result.
 #[derive(Debug, Clone)]
 pub struct LayerRow {
+    /// Layer name from the sweep definition.
     pub name: &'static str,
+    /// Accumulation-window length (PSU sort width).
     pub k: usize,
+    /// Transfer BT reduction under ACC ordering, in percent.
     pub acc_bt_reduction_pct: f64,
+    /// Transfer BT reduction under APP ordering, in percent.
     pub app_bt_reduction_pct: f64,
+    /// K-wide ACC-PSU area.
     pub acc_area_um2: f64,
+    /// K-wide APP-PSU area.
     pub app_area_um2: f64,
 }
 
@@ -90,7 +100,8 @@ pub fn run(shapes: &[LayerShape], windows: usize, seed: u64, tech: &Tech) -> Vec
         .collect()
 }
 
-pub fn render(rows: &[LayerRow]) -> String {
+/// The sweep rows as a [`Table`].
+pub fn table(rows: &[LayerRow]) -> Table {
     let mut t = Table::new(
         "Layer-shape sweep (paper §IV-C4 future work): BT reduction and PSU area",
         &["layer", "K", "ACC BT red.", "APP BT red.", "ACC um^2", "APP um^2"],
@@ -105,7 +116,51 @@ pub fn render(rows: &[LayerRow]) -> String {
             report::f(r.app_area_um2, 0),
         ]);
     }
-    t.render()
+    t
+}
+
+/// Aligned text rendering of [`table`].
+pub fn render(rows: &[LayerRow]) -> String {
+    table(rows).render()
+}
+
+/// Registry entry: the layer-shape sweep.
+pub struct LayersExperiment;
+
+impl Experiment for LayersExperiment {
+    fn name(&self) -> &'static str {
+        "layers"
+    }
+
+    fn description(&self) -> &'static str {
+        "BT reduction and PSU area across layer shapes beyond LeNet conv1: \
+         ResNet 3x3, conv 7x7, and a Transformer GEMM tile"
+    }
+
+    fn paper_anchor(&self) -> &'static str {
+        "§IV-C4"
+    }
+
+    fn run(&self, cfg: &Config) -> anyhow::Result<ExperimentResult> {
+        let rows = run(&default_shapes(), cfg.layers_windows, cfg.seed, &Tech::default());
+        let t = table(&rows);
+        let mut res = ExperimentResult::new(t.render());
+        res.push_table(t);
+        for r in &rows {
+            res.push_scalar(
+                format!("layers.k{}_acc_bt_reduction_pct", r.k),
+                r.acc_bt_reduction_pct,
+                "%",
+            );
+            res.push_scalar(
+                format!("layers.k{}_app_bt_reduction_pct", r.k),
+                r.app_bt_reduction_pct,
+                "%",
+            );
+            res.push_scalar(format!("layers.k{}_app_area_um2", r.k), r.app_area_um2, "um^2");
+        }
+        Ok(res)
+    }
 }
 
 #[cfg(test)]

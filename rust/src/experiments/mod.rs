@@ -1,9 +1,14 @@
 //! One module per paper table/figure, plus the extensions (bucket-count
-//! ablation, multi-hop scaling, the ordering-policy convergence scenario)
-//! and the end-to-end driver. Each module
-//! exposes a `run(...)` returning structured results plus a rendered
-//! [`crate::report::Table`], so the CLI, the benches, and the integration
-//! tests all share one implementation.
+//! ablation, multi-hop scaling, layer-shape sweep, the ordering-policy
+//! convergence scenario) and the end-to-end driver.
+//!
+//! Every module implements the common [`Experiment`] trait — name,
+//! description, paper anchor, and a `run(&Config)` returning a typed
+//! [`ExperimentResult`] (scalars + tables + the classic text rendering)
+//! instead of printing — and is registered in [`registry`]. The CLI
+//! commands, the `repro report` paper-parity pipeline
+//! ([`crate::report::pipeline`]), the benches, and the integration tests
+//! all drive the same implementations.
 
 pub mod ablate;
 pub mod e2e;
@@ -15,3 +20,68 @@ pub mod layers;
 pub mod multihop;
 pub mod policy;
 pub mod table1;
+
+use crate::config::Config;
+use crate::report::ExperimentResult;
+
+/// A registered, self-describing experiment.
+///
+/// Implementations are zero-sized marker structs (e.g.
+/// [`table1::Table1Experiment`]); all run parameters come from the
+/// [`Config`], so the CLI, the report pipeline, and tests drive every
+/// experiment the same way.
+pub trait Experiment {
+    /// Stable registry name (also the CLI command): `table1`, `fig5`, ...
+    fn name(&self) -> &'static str;
+
+    /// One-line description (shown in `repro help` and `RESULTS.md`).
+    fn description(&self) -> &'static str;
+
+    /// The paper table/figure/section this experiment reproduces
+    /// (non-empty; e.g. `"Table I"`, `"Fig. 5"`, `"§IV-C3"`).
+    fn paper_anchor(&self) -> &'static str;
+
+    /// Run with every parameter taken from `cfg` and return the typed
+    /// result (measured scalars feed the paper-parity comparison).
+    fn run(&self, cfg: &Config) -> anyhow::Result<ExperimentResult>;
+}
+
+/// Every experiment, in paper order (the order `repro report` runs and
+/// `RESULTS.md` renders).
+pub fn registry() -> Vec<Box<dyn Experiment>> {
+    vec![
+        Box::new(table1::Table1Experiment),
+        Box::new(fig2::Fig2Experiment),
+        Box::new(fig4::Fig4Experiment),
+        Box::new(fig5::Fig5Experiment),
+        Box::new(fig67::Fig67Experiment),
+        Box::new(ablate::AblateExperiment),
+        Box::new(multihop::MultihopExperiment),
+        Box::new(layers::LayersExperiment),
+        Box::new(policy::PolicyExperiment),
+        Box::new(e2e::E2eExperiment),
+    ]
+}
+
+/// Look up a registry entry by its stable name.
+pub fn find<'a>(registry: &'a [Box<dyn Experiment>], name: &str) -> Option<&'a dyn Experiment> {
+    registry.iter().find(|e| e.name() == name).map(|e| e.as_ref())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // the full registry contract (unique names, non-empty anchors and
+    // descriptions, claim coupling) is pinned once, in
+    // rust/tests/report_renderer.rs — this only smoke-tests lookup
+    #[test]
+    fn find_resolves_registered_names_only() {
+        let reg = registry();
+        assert!(!reg.is_empty());
+        for e in &reg {
+            assert!(find(&reg, e.name()).is_some(), "{} not findable", e.name());
+        }
+        assert!(find(&reg, "nope").is_none());
+    }
+}

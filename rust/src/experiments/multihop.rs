@@ -2,16 +2,22 @@
 //! each router-to-router traversal, so absolute link-energy savings grow
 //! linearly with hop count while the relative reduction stays constant.
 
+use crate::config::Config;
 use crate::hw::Tech;
 use crate::noc::{MultiHopPath, Packet};
-use crate::report::{self, Table};
+use crate::report::{self, ExperimentResult, Table};
 use crate::workload::{OrderStrategy, Rng, TrafficModel};
+
+use super::Experiment;
 
 /// One hop-count measurement.
 #[derive(Debug, Clone)]
 pub struct HopPoint {
+    /// Number of router-to-router hops on the path.
     pub hops: usize,
+    /// Link energy of the non-optimized stream (J).
     pub base_energy_j: f64,
+    /// Link energy of the APP-ordered stream (J).
     pub app_energy_j: f64,
     /// Absolute energy saved (J).
     pub saved_j: f64,
@@ -19,6 +25,7 @@ pub struct HopPoint {
     pub reduction_pct: f64,
 }
 
+/// Measure base vs APP link energy at each hop count.
 pub fn run(
     hop_counts: &[usize],
     model: &TrafficModel,
@@ -56,7 +63,8 @@ pub fn run(
         .collect()
 }
 
-pub fn render(points: &[HopPoint]) -> String {
+/// The hop-count sweep as a [`Table`].
+pub fn table(points: &[HopPoint]) -> Table {
     let mut t = Table::new(
         "Multi-hop scaling: APP ordering link-energy savings vs hop count",
         &["hops", "base uJ", "APP uJ", "saved uJ", "reduction"],
@@ -70,7 +78,50 @@ pub fn render(points: &[HopPoint]) -> String {
             report::pct(p.reduction_pct),
         ]);
     }
-    t.render()
+    t
+}
+
+/// Aligned text rendering of [`table`].
+pub fn render(points: &[HopPoint]) -> String {
+    table(points).render()
+}
+
+/// Registry entry: the multi-hop scaling extension.
+pub struct MultihopExperiment;
+
+impl Experiment for MultihopExperiment {
+    fn name(&self) -> &'static str {
+        "multihop"
+    }
+
+    fn description(&self) -> &'static str {
+        "Multi-hop link-energy scaling: absolute APP savings grow linearly \
+         with hop count while the relative reduction stays constant"
+    }
+
+    fn paper_anchor(&self) -> &'static str {
+        "§IV-C3"
+    }
+
+    fn run(&self, cfg: &Config) -> anyhow::Result<ExperimentResult> {
+        let pts = run(
+            &cfg.hops,
+            &TrafficModel::default(),
+            cfg.multihop_packets,
+            cfg.seed,
+            &Tech::default(),
+        );
+        let t = table(&pts);
+        let mut res = ExperimentResult::new(t.render());
+        res.push_table(t);
+        if let Some(first) = pts.first() {
+            res.push_scalar("multihop.reduction_pct", first.reduction_pct, "%");
+        }
+        for p in &pts {
+            res.push_scalar(format!("multihop.h{}_saved_uj", p.hops), p.saved_j * 1e6, "uJ");
+        }
+        Ok(res)
+    }
 }
 
 #[cfg(test)]

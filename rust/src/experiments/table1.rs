@@ -16,20 +16,28 @@
 //! (The continuous-stream semantics, where inter-packet boundaries also
 //! count, is what the Fig. 6/7 platform experiment uses.)
 
+use crate::config::Config;
 use crate::noc::Packet;
-use crate::report::{self, Table};
+use crate::report::{self, ExperimentResult, Table};
 use crate::workload::{OrderStrategy, Rng, TrafficModel};
+
+use super::Experiment;
 
 /// Result for one ordering strategy.
 #[derive(Debug, Clone)]
 pub struct StrategyResult {
+    /// The ordering strategy measured.
     pub strategy: OrderStrategy,
+    /// Packets streamed per side.
     pub packets: usize,
+    /// Input-link bit transitions per 128-bit flit.
     pub input_bt_per_flit: f64,
+    /// Weight-link bit transitions per 128-bit flit.
     pub weight_bt_per_flit: f64,
 }
 
 impl StrategyResult {
+    /// Input + weight BT per flit (the paper's "Overall" column).
     pub fn overall(&self) -> f64 {
         self.input_bt_per_flit + self.weight_bt_per_flit
     }
@@ -38,10 +46,12 @@ impl StrategyResult {
 /// Full Table-I output.
 #[derive(Debug, Clone)]
 pub struct Table1 {
+    /// One row per ordering strategy, in [`OrderStrategy::all`] order.
     pub results: Vec<StrategyResult>,
 }
 
 impl Table1 {
+    /// The row for strategy `s`.
     pub fn get(&self, s: OrderStrategy) -> &StrategyResult {
         self.results.iter().find(|r| r.strategy == s).unwrap()
     }
@@ -52,7 +62,8 @@ impl Table1 {
         (1.0 - self.get(s).overall() / base) * 100.0
     }
 
-    pub fn render(&self) -> String {
+    /// The Table-I rows as a [`Table`].
+    pub fn table(&self) -> Table {
         let mut t = Table::new(
             "Table I: Bit flip under different order strategy (BT per 128-bit flit)",
             &["Order strategy", "Input", "Weight", "Overall", "Reduction"],
@@ -71,7 +82,56 @@ impl Table1 {
                 red,
             ]);
         }
-        t.render()
+        t
+    }
+
+    /// Aligned text rendering of [`Table1::table`].
+    pub fn render(&self) -> String {
+        self.table().render()
+    }
+}
+
+/// Registry entry: the Table-I bit-transition comparison.
+pub struct Table1Experiment;
+
+impl Experiment for Table1Experiment {
+    fn name(&self) -> &'static str {
+        "table1"
+    }
+
+    fn description(&self) -> &'static str {
+        "BT per 128-bit flit under the four ordering strategies on paired \
+         input/weight packet streams"
+    }
+
+    fn paper_anchor(&self) -> &'static str {
+        "Table I"
+    }
+
+    fn run(&self, cfg: &Config) -> anyhow::Result<ExperimentResult> {
+        let t = run(&TrafficModel::default(), cfg.table1_packets, cfg.seed);
+        let table = t.table();
+        let mut res = ExperimentResult::new(table.render());
+        res.push_table(table);
+        res.push_scalar("table1.packets", cfg.table1_packets as f64, "");
+        res.push_scalar(
+            "table1.base_overall_bt_per_flit",
+            t.get(OrderStrategy::NonOptimized).overall(),
+            "BT/flit",
+        );
+        for (key, s) in [
+            ("col", OrderStrategy::ColumnMajor),
+            ("acc", OrderStrategy::Acc),
+            ("app", OrderStrategy::App),
+        ] {
+            res.push_scalar(
+                format!("table1.{key}_overall_bt_per_flit"),
+                t.get(s).overall(),
+                "BT/flit",
+            );
+            res.push_scalar(format!("table1.{key}_reduction_pct"), t.reduction_pct(s), "%");
+        }
+        Ok(res)
     }
 }
 

@@ -24,10 +24,12 @@ pub enum Stage {
 }
 
 impl Stage {
+    /// Every stage, in Fig. 5 breakdown order.
     pub fn all() -> &'static [Stage] {
         &[Stage::Popcount, Stage::Sorting, Stage::Pipeline, Stage::Control]
     }
 
+    /// Stable lowercase label (report/ledger group names).
     pub fn label(self) -> &'static str {
         match self {
             Stage::Popcount => "popcount",
@@ -45,6 +47,7 @@ pub struct Inventory {
 }
 
 impl Inventory {
+    /// An empty inventory.
     pub fn new() -> Self {
         Self::default()
     }

@@ -18,9 +18,13 @@ pub type Net = usize;
 pub enum Gate {
     /// Constant driver.
     Const(bool),
+    /// Inverter.
     Not(Net),
+    /// 2-input AND.
     And(Net, Net),
+    /// 2-input OR.
     Or(Net, Net),
+    /// 2-input XOR.
     Xor(Net, Net),
     /// Mux2: select ? a : b.
     Mux(Net, Net, Net),
@@ -48,17 +52,22 @@ impl Gate {
 /// primary inputs; every gate appends one net.
 #[derive(Debug, Clone, Default)]
 pub struct Netlist {
+    /// Number of primary inputs (nets `0..n_inputs`).
     pub n_inputs: usize,
+    /// Gate instances, in topological order.
     pub gates: Vec<Gate>,
+    /// Primary output nets.
     pub outputs: Vec<Net>,
     /// Last evaluated value per net (for toggle counting).
     state: Vec<bool>,
     /// Accumulated output toggles per gate net.
     pub toggles: Vec<u64>,
+    /// Number of evaluations performed.
     pub evals: u64,
 }
 
 impl Netlist {
+    /// An empty netlist with `n_inputs` primary inputs.
     pub fn new(n_inputs: usize) -> Self {
         Self {
             n_inputs,
@@ -88,6 +97,7 @@ impl Netlist {
         limit
     }
 
+    /// Declare the primary output nets.
     pub fn set_outputs(&mut self, outs: &[Net]) {
         self.outputs = outs.to_vec();
     }

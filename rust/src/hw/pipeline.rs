@@ -22,6 +22,7 @@ pub struct PipelineModel {
 }
 
 impl PipelineModel {
+    /// Model with the given bits latched at each stage boundary.
     pub fn new(cut_widths: Vec<u64>) -> Self {
         Self { cut_widths }
     }

@@ -81,6 +81,7 @@ pub struct ToggleLedger {
 }
 
 impl ToggleLedger {
+    /// An empty ledger.
     pub fn new() -> Self {
         Self::default()
     }

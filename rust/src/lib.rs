@@ -36,7 +36,19 @@
 //!   and the runtime ordering-policy engine
 //!   ([`linkpower::OrderPolicy`], passthrough / precise / approximate /
 //!   adaptive) the serving shards run.
-//! * [`experiments`] — one module per paper table/figure.
+//! * [`experiments`] — one module per paper table/figure, each
+//!   implementing the [`experiments::Experiment`] trait and registered in
+//!   [`experiments::registry`].
+//! * [`report`] — table emitters plus the paper-parity pipeline
+//!   ([`report::run_report`]): runs any registry subset, compares measured
+//!   scalars against the paper's claimed values, and writes `RESULTS.md`
+//!   + `results.json` (the `repro report` command and CI artifact).
+//!
+//! The module-level architecture (data flow of a served sort request, the
+//! paper-concept-to-module cross-reference) is documented in
+//! `docs/ARCHITECTURE.md`.
+
+#![warn(missing_docs)]
 
 pub mod area;
 pub mod benchutil;

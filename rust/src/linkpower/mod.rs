@@ -36,7 +36,7 @@ pub mod probe;
 pub use policy::{
     AdaptiveConfig, ApproxCost, CostModel, OrderPolicy, PolicyEngine, TelemetrySnapshot,
 };
-pub use probe::{LinkProbe, PacketBt, ProbeSnapshot, DEFAULT_WINDOW_PACKETS};
+pub use probe::{LinkProbe, PacketBt, ProbeScratch, ProbeSnapshot, DEFAULT_WINDOW_PACKETS};
 
 /// The ordering a packet was (or would be) transmitted under.
 ///

@@ -43,8 +43,11 @@ pub enum ApproxCost {
 /// Per-strategy hardware cost, in window-BT-per-flit units.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CostModel {
+    /// Penalty of the bypass (no-sorter) path.
     pub passthrough: f64,
+    /// Penalty of keeping the full ACC sorter in the path.
     pub precise: f64,
+    /// Penalty rule for the approximate (bucketed) sorter.
     pub approximate: ApproxCost,
 }
 
@@ -206,6 +209,7 @@ impl OrderPolicy {
 /// Telemetry of one engine: the probe state plus the policy's decisions.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TelemetrySnapshot {
+    /// The probe's cumulative + window ledgers.
     pub probe: ProbeSnapshot,
     /// Strategy the next packet will be transmitted under.
     pub active: StrategyKind,

@@ -108,18 +108,25 @@ pub struct ProbeSnapshot {
     pub packets: u64,
     /// Flits observed since construction.
     pub flits: u64,
-    /// Cumulative BT per ordering (and as transmitted).
+    /// Cumulative BT in arrival (raw) order.
     pub raw_bt: u64,
+    /// Cumulative BT under the ACC ordering.
     pub acc_bt: u64,
+    /// Cumulative BT under the APP ordering.
     pub app_bt: u64,
+    /// Cumulative BT of the orderings actually transmitted.
     pub served_bt: u64,
-    /// Packets / flits currently in the sliding window.
+    /// Packets currently in the sliding window.
     pub window_packets: u64,
+    /// Flits currently in the sliding window.
     pub window_flits: u64,
-    /// Window BT per ordering (and as transmitted).
+    /// Window BT in raw order.
     pub window_raw_bt: u64,
+    /// Window BT under the ACC ordering.
     pub window_acc_bt: u64,
+    /// Window BT under the APP ordering.
     pub window_app_bt: u64,
+    /// Window BT as transmitted.
     pub window_served_bt: u64,
 }
 
@@ -181,6 +188,25 @@ impl ProbeSnapshot {
 }
 
 /// Streaming BT accountant for one egress point.
+///
+/// # Example
+///
+/// ```
+/// use repro::linkpower::{LinkProbe, ProbeScratch, StrategyKind};
+/// use repro::sortcore::BucketMap;
+///
+/// let mut probe = LinkProbe::new(16);
+/// let mut scratch = ProbeScratch::new();
+/// let map = BucketMap::paper_k4();
+/// // a constant packet: every flit is identical, so no ordering toggles
+/// let packet = [0xFFu8; 64];
+/// let obs = probe.observe_sorting(&packet, &map, &mut scratch, StrategyKind::Precise);
+/// assert_eq!((obs.raw, obs.acc, obs.app), (0, 0, 0));
+/// assert_eq!(obs.flits, 4);
+/// let snap = probe.snapshot();
+/// assert_eq!(snap.packets, 1);
+/// assert_eq!(snap.savings_ratio(), 0.0);
+/// ```
 #[derive(Debug, Clone)]
 pub struct LinkProbe {
     raw: Link,
@@ -298,6 +324,7 @@ pub struct ProbeScratch {
 }
 
 impl ProbeScratch {
+    /// Empty buffers (sized on first use).
     pub fn new() -> Self {
         Self::default()
     }

@@ -1,10 +1,11 @@
-//! `repro` CLI: regenerate every table and figure of the paper, run the
-//! ablations and the end-to-end driver, or start the sharded sort-service
-//! demo.
+//! `repro` CLI: regenerate every table and figure of the paper through the
+//! experiment registry, run the paper-parity `report` pipeline, or start
+//! the sharded sort-service demo.
 //!
 //! Std-only argument parsing (the build is offline; no CLI crate is
 //! vendored). Flags accept both `--key value` and `--key=value`; unknown
-//! commands or flags print the usage to stderr and exit with status 2.
+//! commands or flags print the usage to stderr and exit with status 2;
+//! `repro help <command>` prints one command's flag whitelist.
 //!
 //! ```text
 //! repro <command> [--config FILE] [--seed N] [command options]
@@ -13,34 +14,66 @@
 use anyhow::Result;
 
 use repro::config::Config;
-use repro::experiments::{ablate, e2e, fig2, fig4, fig5, fig67, layers, multihop, policy, table1};
-use repro::hw::Tech;
+use repro::experiments::{self, Experiment};
 use repro::linkpower::OrderPolicy;
+use repro::report::run_report;
 use repro::runtime::make_backend;
-use repro::workload::TrafficModel;
 
 /// Flags every command accepts.
 const GLOBAL_FLAGS: &[&str] = &["config", "seed"];
 
+/// Map CLI aliases onto registry names (`fig6`/`fig7` predate the merged
+/// `fig67` module; `ablate-k` predates the registry).
+fn canonical(cmd: &str) -> &str {
+    match cmd {
+        "fig6" | "fig7" => "fig67",
+        "ablate-k" => "ablate",
+        other => other,
+    }
+}
+
 /// Per-command flag whitelist; `None` marks an unknown command.
 fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
-    Some(match cmd {
+    Some(match canonical(cmd) {
         "table1" => &["packets"],
-        "fig2" | "fig5" | "multihop" | "layers" | "e2e" | "all" => &[],
+        "fig2" | "fig5" | "multihop" | "layers" | "e2e" => &[],
         "fig4" => &["n"],
-        "fig6" | "fig7" => &["vectors"],
-        "ablate-k" => &["ks", "packets"],
+        "fig67" => &["vectors"],
+        "ablate" => &["ks", "packets"],
         "policy" => &["packets"],
+        "report" | "all" => &["only", "out"],
         "serve" => &["requests", "shards", "max-wait-us", "policy", "stats"],
         "help" | "--help" | "-h" => &[],
         _ => return None,
     })
 }
 
+/// One-line meaning of each flag, for `help <command>`.
+fn flag_doc(flag: &str) -> &'static str {
+    match flag {
+        "config" => "TOML-subset config file overriding the paper defaults",
+        "seed" => "PRNG seed for all workload generation",
+        "packets" => "number of packets to stream",
+        "n" => "sort width (elements per packet)",
+        "vectors" => "number of convolution test vectors",
+        "ks" => "comma-separated bucket counts to sweep",
+        "only" => "comma-separated subset of registry experiments to run",
+        "out" => "output directory for RESULTS.md and results.json",
+        "requests" => "total sort requests to issue",
+        "shards" => "worker shards (each owns its own backend)",
+        "max-wait-us" => "dynamic-batching wait budget in microseconds",
+        "policy" => "ordering policy: passthrough|precise|approx|adaptive",
+        "stats" => "write the Prometheus-style snapshot to FILE ('-' = stdout)",
+        _ => "",
+    }
+}
+
 /// Minimal flag parser: `--key value` / `--key=value` pairs after the
-/// subcommand.
+/// subcommand. `help` additionally accepts one bare positional topic.
 struct Args {
     cmd: String,
+    /// `help <command>` topic (only ever set for the help command).
+    topic: Option<String>,
     flags: Vec<(String, String)>,
 }
 
@@ -52,7 +85,13 @@ impl Args {
     fn parse_from(argv: Vec<String>) -> Result<Self> {
         let mut it = argv.into_iter();
         let cmd = it.next().unwrap_or_else(|| "help".to_string());
-        let rest: Vec<String> = it.collect();
+        let mut rest: Vec<String> = it.collect();
+        let mut topic = None;
+        if matches!(cmd.as_str(), "help" | "--help" | "-h")
+            && rest.first().is_some_and(|t| !t.starts_with("--"))
+        {
+            topic = Some(rest.remove(0));
+        }
         let mut flags = Vec::new();
         let mut i = 0;
         while i < rest.len() {
@@ -71,7 +110,7 @@ impl Args {
                 i += 2;
             }
         }
-        Ok(Self { cmd, flags })
+        Ok(Self { cmd, topic, flags })
     }
 
     /// Reject unknown commands and unknown flags (satisfying: bad CLI input
@@ -117,23 +156,36 @@ const HELP: &str = "repro — reproduction of \"'1'-bit Count-based Sorting Unit
 Reduce Link Power in DNN Accelerators\"
 
 usage: repro <command> [--config FILE] [--seed N] [options]
-       (flags accept both `--key value` and `--key=value`)
+       (flags accept both `--key value` and `--key=value`;
+        `repro help <command>` prints one command's flag whitelist)
 
-commands:
+experiments (all parameters also live in --config; every experiment is
+registered in the report pipeline):
   table1 [--packets N]      Table I: BT/flit under four ordering strategies
   fig2                      Fig. 2: ordered-flit snapshot (APP-PSU)
   fig4 [--n K]              Fig. 4: APP-PSU cycle-trace waveforms
   fig5                      Fig. 5: area breakdown, 4 designs x {25,49}
-  fig6 | fig7 [--vectors N] Fig. 6/7 + §IV-B4: DNN-workload power
-  ablate-k [--ks 2,3,4,6,9] [--packets N]  bucket-count frontier
+  fig67 [--vectors N]       Fig. 6/7 + §IV-B4: DNN-workload power
+                            (aliases: fig6, fig7)
+  ablate [--ks 2,3,4,6,9] [--packets N]
+                            bucket-count frontier (alias: ablate-k)
   multihop                  §IV-C3: multi-hop link-energy scaling
   layers                    §IV-C4 future work: ResNet/Transformer layer sweep
   policy [--packets N]      ordering-policy scenario: window BT savings of
                             passthrough/precise/approx/adaptive on the
-                            Table-I traffic mix (adaptive must converge to
-                            the best static strategy)
+                            Table-I traffic mix
   e2e                       end-to-end 3-layer driver (reference backend by
                             default; compile --features pjrt for artifacts)
+
+report & serving:
+  report [--only NAME,...] [--out DIR]
+                            run the registry (or the --only subset), compare
+                            measured scalars against the paper's claimed
+                            values, print the parity table, and write
+                            RESULTS.md + results.json into DIR (default .)
+  all [--only NAME,...] [--out DIR]
+                            `report` plus every experiment's full text
+                            rendering on stdout, in paper order
   serve [--requests N] [--shards S] [--max-wait-us U]
         [--policy passthrough|precise|approx|adaptive] [--stats FILE|-]
                             sharded dynamic-batching sort-service demo.
@@ -142,8 +194,32 @@ commands:
                             Prometheus-style telemetry snapshot to FILE
                             ('-' = stdout). (set BENCHUTIL_JSON=path to dump
                             JSON metrics)
-  all                       everything, in paper order
+  help [command]            this overview, or one command's flags
 ";
+
+/// Detailed help for one command: description (from the registry when it
+/// is an experiment) plus its full flag whitelist.
+fn command_help(cmd: &str) -> Option<String> {
+    use std::fmt::Write as _;
+    let allowed = allowed_flags(cmd)?;
+    let canon = canonical(cmd);
+    let mut out = String::new();
+    let reg = experiments::registry();
+    if let Some(exp) = experiments::find(&reg, canon) {
+        let _ = writeln!(out, "repro {cmd} — {} (paper: {})", exp.description(), exp.paper_anchor());
+    } else {
+        let _ = writeln!(out, "repro {cmd}");
+    }
+    if canon != cmd {
+        let _ = writeln!(out, "alias of: {canon}");
+    }
+    let _ = writeln!(out, "\nflags:");
+    for f in allowed.iter().chain(GLOBAL_FLAGS) {
+        let scope = if GLOBAL_FLAGS.contains(f) { " (global)" } else { "" };
+        let _ = writeln!(out, "  --{f:<12} {}{scope}", flag_doc(f));
+    }
+    Some(out)
+}
 
 fn main() -> Result<()> {
     let args = match Args::parse().and_then(|a| a.validate().map(|()| a)) {
@@ -160,45 +236,82 @@ fn main() -> Result<()> {
     if let Some(s) = args.get("seed") {
         cfg.seed = s.parse()?;
     }
-    let tech = Tech::default();
-    let model = TrafficModel::default();
 
-    match args.cmd.as_str() {
-        "table1" => {
-            let n = args.get_usize("packets")?.unwrap_or(cfg.table1_packets);
-            println!("{}", table1::run(&model, n, cfg.seed).render());
+    let canon = canonical(&args.cmd);
+    // fold the per-command flags into the one Config every experiment runs
+    // from (the registry only ever sees the Config)
+    if let Some(n) = args.get_usize("packets")? {
+        match canon {
+            "table1" => cfg.table1_packets = n,
+            "ablate" => cfg.ablate_packets = n,
+            "policy" => cfg.policy_packets = n,
+            _ => {}
         }
-        "fig2" => println!("{}", fig2::run(&model, cfg.seed).render()),
-        "fig4" => {
-            let n = args.get_usize("n")?.unwrap_or(25);
-            println!("{}", fig4::render(&fig4::run(n, cfg.seed)));
-        }
-        "fig5" => println!("{}", fig5::run(&cfg.kernel_sizes, &tech).render()),
-        "fig6" | "fig7" => {
-            let n = args.get_usize("vectors")?.unwrap_or(cfg.test_vectors);
-            println!("{}", fig67::run(n, cfg.buckets, cfg.seed, &tech).render(&tech));
-        }
-        "ablate-k" => {
-            let ks = args.get_usize_list("ks")?.unwrap_or(vec![2, 3, 4, 6, 9]);
-            let n = args.get_usize("packets")?.unwrap_or(4096);
-            let pts = ablate::run(&ks, &model, n, cfg.seed, &tech);
-            println!("{}", ablate::render(&pts));
-        }
-        "multihop" => {
-            let pts = multihop::run(&cfg.hops, &model, 1024, cfg.seed, &tech);
-            println!("{}", multihop::render(&pts));
-        }
-        "layers" => {
-            let rows = layers::run(&layers::default_shapes(), 2048, cfg.seed, &tech);
-            println!("{}", layers::render(&rows));
-        }
-        "e2e" => {
-            let backend = make_backend(&cfg.artifacts_dir);
-            println!("{}", e2e::run(backend.as_ref(), cfg.seed, &tech)?.render());
-        }
-        "policy" => {
-            let n = args.get_usize("packets")?.unwrap_or(4096);
-            println!("{}", policy::run(&model, n, cfg.seed).render());
+    }
+    if let Some(n) = args.get_usize("n")? {
+        cfg.fig4_n = n;
+    }
+    if let Some(n) = args.get_usize("vectors")? {
+        cfg.test_vectors = n;
+    }
+    if let Some(ks) = args.get_usize_list("ks")? {
+        cfg.ablate_ks = ks;
+    }
+
+    let registry = experiments::registry();
+    if let Some(exp) = experiments::find(&registry, canon) {
+        print!("{}", ensure_trailing_newline(exp.run(&cfg)?.text));
+        return Ok(());
+    }
+
+    match canon {
+        "report" | "all" => {
+            // bad --only values follow the bad-input contract (usage to
+            // stderr, exit 2); duplicate or alias-equivalent names run once
+            let selected: Vec<&dyn Experiment> = match args.get("only") {
+                Some(list) => {
+                    let mut sel: Vec<&dyn Experiment> = Vec::new();
+                    let mut seen: Vec<&str> = Vec::new();
+                    for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                        let canon_name = canonical(name);
+                        if seen.contains(&canon_name) {
+                            continue;
+                        }
+                        match experiments::find(&registry, canon_name) {
+                            Some(e) => {
+                                seen.push(canon_name);
+                                sel.push(e);
+                            }
+                            None => {
+                                let known: Vec<&str> =
+                                    registry.iter().map(|e| e.name()).collect();
+                                eprintln!(
+                                    "error: --only: unknown experiment {name:?} (known: {})\n\n{HELP}",
+                                    known.join(", ")
+                                );
+                                std::process::exit(2);
+                            }
+                        }
+                    }
+                    if sel.is_empty() {
+                        eprintln!("error: --only selected no experiments\n\n{HELP}");
+                        std::process::exit(2);
+                    }
+                    sel
+                }
+                None => registry.iter().map(|b| b.as_ref()).collect(),
+            };
+            let report = run_report(&selected, &cfg)?;
+            if canon == "all" {
+                for run in &report.runs {
+                    print!("{}", ensure_trailing_newline(run.result.text.clone()));
+                    println!();
+                }
+            }
+            print!("{}", report.parity_table().render());
+            let out_dir = args.get("out").unwrap_or(".");
+            let (md, json) = report.write_to(out_dir)?;
+            eprintln!("(wrote {md} and {json})");
         }
         "serve" => {
             let n = args.get_usize("requests")?.unwrap_or(1024);
@@ -215,26 +328,16 @@ fn main() -> Result<()> {
             };
             serve_demo(&cfg, n, shards, wait_us, order_policy, args.get("stats"))?;
         }
-        "all" => {
-            println!("{}", table1::run(&model, cfg.table1_packets, cfg.seed).render());
-            println!("{}", fig2::run(&model, cfg.seed).render());
-            println!("{}", fig4::render(&fig4::run(25, cfg.seed)));
-            println!("{}", fig5::run(&cfg.kernel_sizes, &tech).render());
-            println!(
-                "{}",
-                fig67::run(cfg.test_vectors, cfg.buckets, cfg.seed, &tech).render(&tech)
-            );
-            let pts = ablate::run(&[2, 3, 4, 6, 9], &model, 4096, cfg.seed, &tech);
-            println!("{}", ablate::render(&pts));
-            let pts = multihop::run(&cfg.hops, &model, 1024, cfg.seed, &tech);
-            println!("{}", multihop::render(&pts));
-            let rows = layers::run(&layers::default_shapes(), 2048, cfg.seed, &tech);
-            println!("{}", layers::render(&rows));
-            println!("{}", policy::run(&model, 2048, cfg.seed).render());
-            let backend = make_backend(&cfg.artifacts_dir);
-            println!("{}", e2e::run(backend.as_ref(), cfg.seed, &tech)?.render());
-        }
-        "help" | "--help" | "-h" => print!("{HELP}"),
+        "help" | "--help" | "-h" => match &args.topic {
+            None => print!("{HELP}"),
+            Some(topic) => match command_help(topic) {
+                Some(text) => print!("{text}"),
+                None => {
+                    eprintln!("error: unknown command {topic:?}\n\n{HELP}");
+                    std::process::exit(2);
+                }
+            },
+        },
         // validate() rejects unknown commands; this arm only fires if the
         // dispatch table and allowed_flags() drift apart — fail gracefully.
         other => {
@@ -243,6 +346,15 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Experiment text renderings end with a newline already; normalize the
+/// few that do not so `print!` never glues the shell prompt on.
+fn ensure_trailing_newline(mut s: String) -> String {
+    if !s.ends_with('\n') {
+        s.push('\n');
+    }
+    s
 }
 
 /// Sharded sort-service demo: N concurrent clients, round-robin admission,
@@ -432,5 +544,54 @@ mod tests {
         assert!(args(&["table1", "--policy", "adaptive"]).validate().is_err());
         assert!(args(&["policy", "--packets", "100"]).validate().is_ok());
         assert!(args(&["policy", "--stats", "-"]).validate().is_err());
+    }
+
+    #[test]
+    fn aliases_resolve_and_validate() {
+        assert_eq!(canonical("fig6"), "fig67");
+        assert_eq!(canonical("fig7"), "fig67");
+        assert_eq!(canonical("ablate-k"), "ablate");
+        args(&["fig6", "--vectors", "10"]).validate().unwrap();
+        args(&["ablate-k", "--ks", "2,4", "--packets", "64"]).validate().unwrap();
+        args(&["ablate", "--ks=2,4"]).validate().unwrap();
+    }
+
+    #[test]
+    fn report_flags_validate_and_all_is_an_alias() {
+        args(&["report", "--only", "table1,fig5", "--out", "/tmp/x"]).validate().unwrap();
+        args(&["all", "--only=table1"]).validate().unwrap();
+        assert!(args(&["report", "--packets", "10"]).validate().is_err());
+    }
+
+    #[test]
+    fn help_accepts_a_topic_and_lists_flags() {
+        let a = args(&["help", "report"]);
+        assert_eq!(a.cmd, "help");
+        assert_eq!(a.topic.as_deref(), Some("report"));
+        a.validate().unwrap();
+        let text = command_help("report").unwrap();
+        assert!(text.contains("--only"));
+        assert!(text.contains("--out"));
+        assert!(text.contains("--seed"));
+        assert!(text.contains("(global)"));
+        // experiment topics pull description + anchor from the registry
+        let t1 = command_help("table1").unwrap();
+        assert!(t1.contains("Table I"));
+        assert!(t1.contains("--packets"));
+        // aliases are explained
+        let f6 = command_help("fig6").unwrap();
+        assert!(f6.contains("alias of: fig67"));
+        assert!(command_help("frobnicate").is_none());
+    }
+
+    #[test]
+    fn every_registry_experiment_is_a_command() {
+        for e in experiments::registry() {
+            assert!(
+                allowed_flags(e.name()).is_some(),
+                "registry experiment {} has no CLI command",
+                e.name()
+            );
+        }
     }
 }

@@ -25,6 +25,7 @@ pub struct Link {
 }
 
 impl Link {
+    /// A fresh link named `name` (transmission register starts all-zero).
     pub fn new(name: impl Into<String>) -> Self {
         Self {
             name: name.into(),

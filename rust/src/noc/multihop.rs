@@ -17,10 +17,12 @@ use super::packet::Packet;
 /// A chain of `h` identical links between source and destination.
 #[derive(Debug, Clone)]
 pub struct MultiHopPath {
+    /// One [`Link`] per hop, traversed in order.
     pub hops: Vec<Link>,
 }
 
 impl MultiHopPath {
+    /// A path of `hops` identical links (at least one).
     pub fn new(name: &str, hops: usize) -> Self {
         assert!(hops >= 1);
         Self {
@@ -28,6 +30,7 @@ impl MultiHopPath {
         }
     }
 
+    /// Number of hops on the path.
     pub fn num_hops(&self) -> usize {
         self.hops.len()
     }

@@ -7,6 +7,7 @@ use crate::PACKET_FLITS;
 /// A packet: a fixed number of flits, each a byte-lane vector.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Packet {
+    /// The framed flits, in transmission order (each `lanes` bytes).
     pub flits: Vec<Vec<u8>>,
 }
 
@@ -48,6 +49,7 @@ impl Packet {
         Self { flits }
     }
 
+    /// Number of flits this packet frames into.
     pub fn num_flits(&self) -> usize {
         self.flits.len()
     }

@@ -46,6 +46,7 @@ pub const PE_FIXED_CAP_PER_CYCLE_FF: f64 = 254.0;
 /// (EXPERIMENTS.md §Perf).
 #[derive(Debug)]
 pub struct Pe {
+    /// PE index in the platform (0..NUM_PES).
     pub id: usize,
     /// Operand register bank (input byte || weight byte, 16 bits).
     pub operand: ToggleGroup,
@@ -63,6 +64,7 @@ pub struct Pe {
 }
 
 impl Pe {
+    /// A fresh PE with zeroed registers and counters.
     pub fn new(id: usize) -> Self {
         let comb_cap: f64 = mac_inventory()
             .iter()

@@ -41,14 +41,19 @@ pub enum PlatformOrdering {
 
 /// The simulated platform.
 pub struct Platform {
+    /// The ordering configuration (bypass or a sorting unit).
     pub ordering: PlatformOrdering,
+    /// The 16 processing elements.
     pub pes: Vec<Pe>,
+    /// One input link per PE.
     pub input_links: Vec<Link>,
+    /// One weight link per PE.
     pub weight_links: Vec<Link>,
     /// PSU architectural-register activity (overhead power).
     pub psu_ledger: ToggleLedger,
     /// Sort operations performed.
     pub sorts: u64,
+    /// Technology parameters for energy accounting.
     pub tech: Tech,
 }
 
@@ -57,19 +62,25 @@ pub struct Platform {
 pub struct RunReport {
     /// Pooled feature maps per image: [img][map][y][x].
     pub pooled: Vec<Vec<Vec<Vec<i32>>>>,
-    /// Total BT on input links / weight links.
+    /// Total BT on the input links.
     pub input_bt: u64,
+    /// Total BT on the weight links.
     pub weight_bt: u64,
-    /// Flits sent per link class.
+    /// Flits sent on the input links.
     pub input_flits: u64,
+    /// Flits sent on the weight links.
     pub weight_flits: u64,
     /// Total platform cycles (max over PEs; links run in parallel).
     pub cycles: u64,
-    /// Energies in joules.
+    /// Total link energy (input + weight), in joules.
     pub link_energy_j: f64,
+    /// Input-link energy, in joules.
     pub input_link_energy_j: f64,
+    /// Weight-link energy, in joules.
     pub weight_link_energy_j: f64,
+    /// PE (MAC datapath) energy, in joules.
     pub pe_energy_j: f64,
+    /// Sorting-unit overhead energy, in joules.
     pub psu_energy_j: f64,
 }
 
@@ -79,6 +90,7 @@ impl RunReport {
         self.input_bt as f64 / self.input_flits.max(1) as f64
     }
 
+    /// Mean BT per 128-bit flit, weight side.
     pub fn weight_bt_per_flit(&self) -> f64 {
         self.weight_bt as f64 / self.weight_flits.max(1) as f64
     }
@@ -110,6 +122,7 @@ impl RunReport {
 }
 
 impl Platform {
+    /// A fresh 16-PE platform under the given ordering configuration.
     pub fn new(ordering: PlatformOrdering) -> Self {
         Self {
             ordering,

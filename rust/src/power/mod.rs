@@ -29,11 +29,13 @@ pub struct PowerComparison {
     pub nonlink_power_reduction_pct: f64,
     /// Sorting-unit power overhead in watts (§IV-B4: 2.28 / 1.43 mW).
     pub psu_overhead_w: f64,
-    /// Absolute link power, baseline and ordered, in watts.
+    /// Absolute baseline link power, in watts.
     pub link_power_base_w: f64,
+    /// Absolute ordered-run link power, in watts.
     pub link_power_new_w: f64,
-    /// Absolute total PE-level power, baseline and ordered, in watts.
+    /// Absolute baseline total PE-level power, in watts.
     pub total_power_base_w: f64,
+    /// Absolute ordered-run total PE-level power, in watts.
     pub total_power_new_w: f64,
 }
 

@@ -20,6 +20,7 @@ pub struct AccPsu {
 }
 
 impl AccPsu {
+    /// An ACC-PSU for packets of `n` bytes (W+1 = 9 exact-count buckets).
     pub fn new(n: usize) -> Self {
         Self {
             popcount: PopcountUnit::new(n),
@@ -27,6 +28,7 @@ impl AccPsu {
         }
     }
 
+    /// The counting-sort core (structural inventory model).
     pub fn core(&self) -> &CountingCore {
         &self.core
     }

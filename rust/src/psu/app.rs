@@ -23,6 +23,7 @@ pub struct AppPsu {
 }
 
 impl AppPsu {
+    /// An APP-PSU for packets of `n` bytes under the given bucket map.
     pub fn new(n: usize, map: BucketMap) -> Self {
         let k = map.k();
         Self {
@@ -36,10 +37,12 @@ impl AppPsu {
         Self::new(n, BucketMap::paper_k4())
     }
 
+    /// The popcount bucket mapping this unit sorts by.
     pub fn bucket_map(&self) -> &BucketMap {
         self.encoder.map()
     }
 
+    /// The counting-sort core (structural inventory model).
     pub fn core(&self) -> &CountingCore {
         &self.core
     }

@@ -26,6 +26,7 @@ pub struct BitonicSorter {
 }
 
 impl BitonicSorter {
+    /// A bitonic sorting network for packets of `n` bytes.
     pub fn new(n: usize) -> Self {
         Self { n, popcount: PopcountUnit::new(n) }
     }

@@ -36,6 +36,7 @@ pub struct CountingCore {
 }
 
 impl CountingCore {
+    /// A core sorting `n` elements into `b` key buckets.
     pub fn new(n: usize, b: usize) -> Self {
         assert!(n >= 1 && b >= 2);
         Self { n, b }

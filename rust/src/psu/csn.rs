@@ -22,6 +22,7 @@ pub struct CsnSorter {
 }
 
 impl CsnSorter {
+    /// A comparison sorting network for packets of `n` bytes.
     pub fn new(n: usize) -> Self {
         Self { n, popcount: PopcountUnit::new(n) }
     }

@@ -24,10 +24,12 @@ pub struct PopcountUnit {
 }
 
 impl PopcountUnit {
+    /// A popcount unit for `n` parallel elements.
     pub fn new(n: usize) -> Self {
         Self { n }
     }
 
+    /// Elements processed per operation.
     pub fn n(&self) -> usize {
         self.n
     }
@@ -66,14 +68,17 @@ pub struct BucketEncoder {
 }
 
 impl BucketEncoder {
+    /// An encoder for `n` parallel elements under the given map.
     pub fn new(n: usize, map: BucketMap) -> Self {
         Self { n, map }
     }
 
+    /// Elements processed per operation.
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// The popcount bucket mapping.
     pub fn map(&self) -> &BucketMap {
         &self.map
     }

@@ -63,6 +63,7 @@ pub struct BypassUnit {
 }
 
 impl BypassUnit {
+    /// A bypass "sorter" for packets of `n` bytes.
     pub fn new(n: usize) -> Self {
         Self { n }
     }

@@ -1,18 +1,37 @@
-//! Table / figure emitters: aligned text tables, CSV, and JSON rows, so
-//! every experiment can print the same rows the paper reports and also
-//! dump machine-readable results.
+//! Table / figure emitters plus the paper-parity report pipeline.
+//!
+//! The building blocks: [`Table`] (aligned text / CSV / Markdown via
+//! [`pipeline::table_to_markdown`]) and the typed
+//! [`result::ExperimentResult`] every registry experiment returns. On top
+//! of them, [`pipeline::run_report`] runs any subset of
+//! [`crate::experiments::registry`], joins the measured scalars against
+//! the paper's claimed values ([`paper::CLAIMS`]), and emits `RESULTS.md`
+//! + `results.json` — the `repro report` command and the CI parity
+//! artifact.
+
+pub mod paper;
+pub mod pipeline;
+pub mod result;
+
+pub use paper::{parity_rows, PaperClaim, ParityRow, ParityStatus, CLAIMS};
+pub use pipeline::{run_report, ExperimentRun, Report};
+pub use result::{ExperimentResult, Scalar};
 
 use std::fmt::Write as _;
 
 /// A simple column-aligned table.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Table caption (the paper table/figure it mirrors).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows; every row has exactly `headers.len()` cells.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given caption and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -21,6 +40,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells.to_vec());

@@ -1,0 +1,262 @@
+//! The paper-claimed values every report run is compared against.
+//!
+//! Each [`PaperClaim`] names a measured scalar (see
+//! [`crate::report::result::Scalar`]), the value the paper reports for it,
+//! and a relative-delta tolerance. The report pipeline joins the claims
+//! against the scalars the selected experiments actually produced and
+//! renders a pass/warn parity table — `warn` never fails a build (the
+//! reproduction is a calibrated simulation, not the paper's silicon), it
+//! makes drift visible on every PR.
+//!
+//! Tolerances mirror the test-suite anchors: the calibrated APP-PSU K=25
+//! area must hold within 5 % (`rust/src/experiments/fig5.rs` pins the same
+//! bound), structural predictions (K=49 area) get 30 %, and the
+//! small-workload e2e headline gets 50 % (16 images vs the paper's full
+//! sweep).
+
+/// One paper-reported value, keyed by the scalar name an experiment emits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PaperClaim {
+    /// Scalar name this claim is compared against
+    /// (`<experiment>.<metric>`).
+    pub scalar: &'static str,
+    /// The value the paper reports.
+    pub paper: f64,
+    /// Unit label shared by the claim and the measurement.
+    pub unit: &'static str,
+    /// Where the paper states it (table / figure / section).
+    pub anchor: &'static str,
+    /// Relative delta (percent) beyond which the row is flagged `warn`.
+    pub warn_rel_pct: f64,
+}
+
+/// Every value the source paper claims that this reproduction measures.
+pub const CLAIMS: &[PaperClaim] = &[
+    PaperClaim {
+        scalar: "table1.base_overall_bt_per_flit",
+        paper: 63.072,
+        unit: "BT/flit",
+        anchor: "Table I",
+        warn_rel_pct: 10.0,
+    },
+    PaperClaim {
+        scalar: "table1.col_reduction_pct",
+        paper: 14.366,
+        unit: "%",
+        anchor: "Table I",
+        warn_rel_pct: 15.0,
+    },
+    PaperClaim {
+        scalar: "table1.acc_reduction_pct",
+        paper: 20.177,
+        unit: "%",
+        anchor: "Table I",
+        warn_rel_pct: 15.0,
+    },
+    PaperClaim {
+        scalar: "table1.app_reduction_pct",
+        paper: 19.305,
+        unit: "%",
+        anchor: "Table I",
+        warn_rel_pct: 15.0,
+    },
+    PaperClaim {
+        scalar: "fig5.app_total_um2_k25",
+        paper: 2193.0,
+        unit: "um^2",
+        anchor: "Fig. 5",
+        warn_rel_pct: 5.0,
+    },
+    PaperClaim {
+        scalar: "fig5.app_total_um2_k49",
+        paper: 6928.0,
+        unit: "um^2",
+        anchor: "Fig. 5",
+        warn_rel_pct: 30.0,
+    },
+    PaperClaim {
+        scalar: "fig5.app_vs_acc_reduction_pct_k25",
+        paper: 35.4,
+        unit: "%",
+        anchor: "Fig. 5 / §IV-B3",
+        warn_rel_pct: 21.0,
+    },
+    PaperClaim {
+        scalar: "fig67.acc_bt_reduction_pct",
+        paper: 20.42,
+        unit: "%",
+        anchor: "Fig. 7",
+        warn_rel_pct: 25.0,
+    },
+    PaperClaim {
+        scalar: "fig67.app_bt_reduction_pct",
+        paper: 19.5,
+        unit: "%",
+        anchor: "Fig. 7",
+        warn_rel_pct: 25.0,
+    },
+    PaperClaim {
+        scalar: "fig67.acc_link_power_reduction_pct",
+        paper: 18.27,
+        unit: "%",
+        anchor: "Fig. 7",
+        warn_rel_pct: 25.0,
+    },
+    PaperClaim {
+        scalar: "fig67.app_link_power_reduction_pct",
+        paper: 16.48,
+        unit: "%",
+        anchor: "Fig. 7",
+        warn_rel_pct: 25.0,
+    },
+    PaperClaim {
+        scalar: "fig67.acc_pe_level_reduction_pct",
+        paper: 4.98,
+        unit: "%",
+        anchor: "§IV-B4",
+        warn_rel_pct: 50.0,
+    },
+    PaperClaim {
+        scalar: "fig67.app_pe_level_reduction_pct",
+        paper: 4.58,
+        unit: "%",
+        anchor: "§IV-B4",
+        warn_rel_pct: 50.0,
+    },
+    PaperClaim {
+        scalar: "fig67.psu_overhead_reduction_pct",
+        paper: 37.3,
+        unit: "%",
+        anchor: "§IV-B4",
+        warn_rel_pct: 30.0,
+    },
+    PaperClaim {
+        scalar: "ablate.k4_area_um2",
+        paper: 2193.0,
+        unit: "um^2",
+        anchor: "Fig. 5 (k = 4 point)",
+        warn_rel_pct: 5.0,
+    },
+    PaperClaim {
+        scalar: "e2e.acc_bt_reduction_pct",
+        paper: 20.42,
+        unit: "%",
+        anchor: "Fig. 7 (16-image e2e)",
+        warn_rel_pct: 50.0,
+    },
+    PaperClaim {
+        scalar: "e2e.app_bt_reduction_pct",
+        paper: 19.5,
+        unit: "%",
+        anchor: "Fig. 7 (16-image e2e)",
+        warn_rel_pct: 50.0,
+    },
+];
+
+/// Parity verdict of one claim: inside or outside its tolerance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParityStatus {
+    /// The measured value is within `warn_rel_pct` of the paper's.
+    Pass,
+    /// Outside the tolerance — visible drift, never a build failure.
+    Warn,
+}
+
+impl ParityStatus {
+    /// Stable lowercase label (used in `RESULTS.md` and tests).
+    pub fn label(self) -> &'static str {
+        match self {
+            ParityStatus::Pass => "pass",
+            ParityStatus::Warn => "warn",
+        }
+    }
+}
+
+/// One joined row: a paper claim plus the value this run measured.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParityRow {
+    /// The paper-claimed value.
+    pub claim: PaperClaim,
+    /// The value the experiment measured in this run.
+    pub measured: f64,
+}
+
+impl ParityRow {
+    /// Relative delta of measured vs paper, in percent (signed; `0.0`
+    /// when the paper value is zero).
+    pub fn delta_rel_pct(&self) -> f64 {
+        if self.claim.paper == 0.0 {
+            0.0
+        } else {
+            (self.measured - self.claim.paper) / self.claim.paper * 100.0
+        }
+    }
+
+    /// Pass/warn verdict against the claim's tolerance.
+    pub fn status(&self) -> ParityStatus {
+        if self.delta_rel_pct().abs() <= self.claim.warn_rel_pct {
+            ParityStatus::Pass
+        } else {
+            ParityStatus::Warn
+        }
+    }
+}
+
+/// Join the claim table against the scalars a run produced: one row per
+/// claim whose scalar was measured, in [`CLAIMS`] order. Claims whose
+/// experiment was not selected simply produce no row.
+pub fn parity_rows(lookup: impl Fn(&str) -> Option<f64>) -> Vec<ParityRow> {
+    CLAIMS
+        .iter()
+        .filter_map(|claim| {
+            lookup(claim.scalar).map(|measured| ParityRow { claim: *claim, measured })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claims_have_unique_scalars_and_sane_fields() {
+        for (i, c) in CLAIMS.iter().enumerate() {
+            assert!(!c.scalar.is_empty() && c.scalar.contains('.'), "{}", c.scalar);
+            assert!(!c.anchor.is_empty(), "{}", c.scalar);
+            assert!(c.warn_rel_pct > 0.0, "{}", c.scalar);
+            assert!(c.paper.is_finite(), "{}", c.scalar);
+            for later in &CLAIMS[i + 1..] {
+                assert_ne!(c.scalar, later.scalar, "duplicate claim");
+            }
+        }
+    }
+
+    #[test]
+    fn parity_status_thresholds() {
+        let claim = PaperClaim {
+            scalar: "x.y",
+            paper: 100.0,
+            unit: "%",
+            anchor: "T",
+            warn_rel_pct: 10.0,
+        };
+        let pass = ParityRow { claim, measured: 109.0 };
+        assert_eq!(pass.status(), ParityStatus::Pass);
+        assert!((pass.delta_rel_pct() - 9.0).abs() < 1e-12);
+        let warn = ParityRow { claim, measured: 85.0 };
+        assert_eq!(warn.status(), ParityStatus::Warn);
+        assert!((warn.delta_rel_pct() + 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parity_rows_join_only_measured_claims() {
+        let rows = parity_rows(|name| {
+            (name == "table1.acc_reduction_pct").then_some(20.0)
+        });
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].claim.scalar, "table1.acc_reduction_pct");
+        assert_eq!(rows[0].measured, 20.0);
+        assert_eq!(rows[0].status(), ParityStatus::Pass);
+        assert!(parity_rows(|_| None).is_empty());
+    }
+}

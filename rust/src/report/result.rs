@@ -1,0 +1,85 @@
+//! Typed experiment output: every registry experiment
+//! ([`crate::experiments::Experiment`]) returns an [`ExperimentResult`]
+//! instead of printing — named [`Scalar`]s for the paper-parity
+//! comparison and the machine-readable `results.json`, [`Table`]s for the
+//! Markdown report, and the classic aligned-text rendering for the CLI.
+
+use super::Table;
+
+/// One measured scalar, e.g. `table1.acc_reduction_pct`.
+///
+/// Names are dotted `<experiment>.<metric>` and stable: they key the
+/// paper-claim table ([`crate::report::paper::CLAIMS`]) and the flat
+/// `scalars` object of the benchutil-compatible `results.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scalar {
+    /// Dotted metric name (`<experiment>.<metric>`).
+    pub name: String,
+    /// Measured value.
+    pub value: f64,
+    /// Unit label (`"%"`, `"um^2"`, `"BT/flit"`, ...; `""` for counts).
+    pub unit: &'static str,
+}
+
+/// The structured output of one experiment run.
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentResult {
+    /// The classic aligned-text rendering (what the per-experiment CLI
+    /// commands print).
+    pub text: String,
+    /// Column-aligned tables, rendered as Markdown in `RESULTS.md`.
+    /// Experiments without a tabular form (waveforms, prose summaries)
+    /// leave this empty and the report embeds [`ExperimentResult::text`]
+    /// in a code fence instead.
+    pub tables: Vec<Table>,
+    /// Named measured scalars, in insertion order.
+    pub scalars: Vec<Scalar>,
+}
+
+impl ExperimentResult {
+    /// Result with the given text rendering and no tables or scalars yet.
+    pub fn new(text: impl Into<String>) -> Self {
+        Self { text: text.into(), tables: Vec::new(), scalars: Vec::new() }
+    }
+
+    /// Append a table (kept in paper order for the Markdown report).
+    pub fn push_table(&mut self, table: Table) {
+        self.tables.push(table);
+    }
+
+    /// Append a named scalar.
+    pub fn push_scalar(&mut self, name: impl Into<String>, value: f64, unit: &'static str) {
+        self.scalars.push(Scalar { name: name.into(), value, unit });
+    }
+
+    /// Look up a scalar by exact name.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.scalars.iter().find(|s| s.name == name).map(|s| s.value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_get_round_trip() {
+        let mut r = ExperimentResult::new("text");
+        assert_eq!(r.get("x"), None);
+        r.push_scalar("x.y", 1.5, "%");
+        r.push_scalar("x.z", -2.0, "");
+        assert_eq!(r.get("x.y"), Some(1.5));
+        assert_eq!(r.get("x.z"), Some(-2.0));
+        assert_eq!(r.scalars.len(), 2);
+        assert_eq!(r.text, "text");
+    }
+
+    #[test]
+    fn tables_keep_insertion_order() {
+        let mut r = ExperimentResult::new("");
+        r.push_table(Table::new("first", &["a"]));
+        r.push_table(Table::new("second", &["b"]));
+        let titles: Vec<&str> = r.tables.iter().map(|t| t.title.as_str()).collect();
+        assert_eq!(titles, vec!["first", "second"]);
+    }
+}

@@ -22,11 +22,16 @@
 
 use anyhow::Result;
 
-/// Shapes fixed at AOT time (must match python/compile/model.py).
+/// Images per `lenet_head` batch, fixed at AOT time (must match
+/// python/compile/model.py).
 pub const PE_BATCH: usize = 16;
+/// Packets per `psu_sort` / `packet_bt` batch (AOT-fixed).
 pub const BT_BATCH: usize = 256;
+/// Bytes per packet (AOT-fixed).
 pub const PACKET_ELEMS: usize = 64;
+/// Flits per packet (AOT-fixed).
 pub const PACKET_FLITS: usize = 4;
+/// Bytes per flit (AOT-fixed).
 pub const FLIT_LANES: usize = 16;
 
 pub mod reference;

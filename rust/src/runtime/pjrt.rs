@@ -24,6 +24,7 @@ use super::{Backend, BT_BATCH, FLIT_LANES, PACKET_ELEMS, PACKET_FLITS, PE_BATCH}
 /// A loaded, compiled artifact.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Artifact stem (file name without extension).
     pub name: String,
 }
 
@@ -31,8 +32,11 @@ pub struct Executable {
 pub struct PjrtBackend {
     #[allow(dead_code)]
     client: xla::PjRtClient,
+    /// Compiled `lenet_head` entry point.
     pub lenet_head: Executable,
+    /// Compiled `psu_sort` entry point.
     pub psu_sort: Executable,
+    /// Compiled `packet_bt` entry point.
     pub packet_bt: Executable,
 }
 

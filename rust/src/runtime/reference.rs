@@ -30,6 +30,7 @@ pub struct ReferenceBackend {
 }
 
 impl ReferenceBackend {
+    /// A backend with the paper's k = 4 APP bucket map.
     pub fn new() -> Self {
         Self { map: BucketMap::paper_k4() }
     }

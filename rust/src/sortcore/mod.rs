@@ -86,6 +86,18 @@ fn counting_scatter(values: &[u8], key: &impl Fn(u8) -> u8, next: &mut [u32], ou
 /// # Panics
 /// If `out.len() != values.len()`, `b` is out of `[1, MAX_BUCKETS]`, or a
 /// key falls outside `[0, b)`.
+///
+/// # Example
+///
+/// ```
+/// use repro::sortcore::{sort_into_by, ACC_BUCKETS};
+///
+/// // popcounts: 4, 1, 7, 5, 3, 5 — stable sort by exact '1'-bit count
+/// let vals = [0x0Fu8, 0x01, 0x7F, 0x1F, 0x07, 0xF8];
+/// let mut out = [0u16; 6];
+/// sort_into_by(&vals, ACC_BUCKETS, |v| v.count_ones() as u8, &mut out);
+/// assert_eq!(out, [1, 4, 0, 3, 5, 2]);
+/// ```
 pub fn sort_into_by(values: &[u8], b: usize, key: impl Fn(u8) -> u8, out: &mut [u16]) {
     assert!((1..=MAX_BUCKETS).contains(&b), "bucket count {b} out of range");
     assert_eq!(values.len(), out.len(), "output buffer length mismatch");
@@ -133,6 +145,7 @@ pub struct SortScratch {
 }
 
 impl SortScratch {
+    /// An empty scratch (allocates on first sort).
     pub fn new() -> Self {
         Self::default()
     }

@@ -33,7 +33,9 @@ pub fn paper_patterns(n: usize, seed: u64) -> Vec<(&'static str, Vec<u8>)> {
 /// One waveform: cycle-indexed rows.
 #[derive(Debug, Clone)]
 pub struct Waveform {
+    /// Design name the trace was captured from.
     pub design: &'static str,
+    /// Stimulus pattern name.
     pub pattern: String,
     /// (cycle, signal, value) tuples.
     pub rows: Vec<(u64, &'static str, String)>,

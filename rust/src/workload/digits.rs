@@ -8,6 +8,7 @@
 
 use super::rng::Rng;
 
+/// Image side length in pixels (28x28, LeNet's input).
 pub const IMG: usize = 28;
 
 /// Which of the 7 segments are lit for digits 0-9 (a..g, standard layout).

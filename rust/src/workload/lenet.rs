@@ -5,14 +5,20 @@
 use super::digits::{self, IMG};
 use super::rng::Rng;
 
-/// LeNet conv1 geometry.
+/// Conv1 kernel height.
 pub const KH: usize = 5;
+/// Conv1 kernel width.
 pub const KW: usize = 5;
-pub const K: usize = KH * KW; // 25 = the paper's 5x5 kernel-size config
+/// Taps per kernel (25 — the paper's 5x5 kernel-size config).
+pub const K: usize = KH * KW;
+/// Conv1 output feature maps.
 pub const OUT_MAPS: usize = 6;
-pub const OH: usize = IMG - KH + 1; // 24
-pub const OW: usize = IMG - KW + 1; // 24
-pub const WINDOWS: usize = OH * OW; // 576
+/// Conv output height (24).
+pub const OH: usize = IMG - KH + 1;
+/// Conv output width (24).
+pub const OW: usize = IMG - KW + 1;
+/// im2col windows per image (576).
+pub const WINDOWS: usize = OH * OW;
 
 /// Quantized conv weights: signed int8 stored offset-128 (u8 on the link).
 #[derive(Debug, Clone)]

@@ -23,6 +23,7 @@ impl Rng {
         Self { s: [next(), next(), next(), next()] }
     }
 
+    /// Next 64 uniform bits (xoshiro256++ step).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]

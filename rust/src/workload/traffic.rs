@@ -35,13 +35,18 @@ use super::rng::Rng;
 /// The four ordering strategies of Table I.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OrderStrategy {
+    /// Row-major raster, no sorting (the paper's baseline).
     NonOptimized,
+    /// Column-major raster (locality-friendly, still unsorted).
     ColumnMajor,
+    /// Column-major + exact popcount ordering (ACC-PSU).
     Acc,
+    /// Column-major + k=4 bucketed ordering (APP-PSU).
     App,
 }
 
 impl OrderStrategy {
+    /// Every strategy, in Table-I row order.
     pub fn all() -> [OrderStrategy; 4] {
         [
             OrderStrategy::NonOptimized,
@@ -51,6 +56,7 @@ impl OrderStrategy {
         ]
     }
 
+    /// The paper's row label.
     pub fn label(self) -> &'static str {
         match self {
             OrderStrategy::NonOptimized => "Non-optimized",
@@ -102,10 +108,13 @@ pub struct FieldModel {
 /// The Table-I traffic model: one input field + one weight field.
 #[derive(Debug, Clone, Copy)]
 pub struct TrafficModel {
+    /// Statistics of the input (activation) field.
     pub input: FieldModel,
+    /// Statistics of the weight field.
     pub weight: FieldModel,
-    /// Field height/width in bytes (packets stream out of this canvas).
+    /// Field height in bytes (packets stream out of this canvas).
     pub height: usize,
+    /// Field width in bytes.
     pub width: usize,
 }
 
@@ -181,14 +190,18 @@ pub fn gen_field(m: &FieldModel, h: usize, w: usize, rng: &mut Rng) -> Vec<Vec<u
 /// One Table-I packet: paired 64-byte input and weight payloads.
 #[derive(Debug, Clone)]
 pub struct PacketPair {
+    /// 64-byte input payload.
     pub input: Vec<u8>,
+    /// 64-byte weight payload (follows the input ordering).
     pub weight: Vec<u8>,
 }
 
 /// A generated traffic trace: the field pair, before any ordering.
 #[derive(Debug, Clone)]
 pub struct Trace {
+    /// Input field rows (height x width bytes).
     pub input_field: Vec<Vec<u8>>,
+    /// Weight field rows.
     pub weight_field: Vec<Vec<u8>>,
 }
 

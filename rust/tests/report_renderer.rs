@@ -1,0 +1,174 @@
+//! Report-pipeline integration tests: the registry contract, renderer
+//! determinism, and golden files pinning the exact `RESULTS.md` /
+//! `results.json` bytes for a fixed-seed two-experiment subset.
+//!
+//! Golden workflow: the files live in `rust/tests/golden/`. A missing
+//! golden file is (re)created on first run ("blessed"); after an
+//! intentional renderer change, regenerate with
+//! `REPRO_BLESS=1 cargo test --test report_renderer`.
+
+use std::path::PathBuf;
+
+use repro::config::Config;
+use repro::experiments::{self, Experiment};
+use repro::report::{run_report, ParityStatus, Report, CLAIMS};
+
+/// Small, fast, fully deterministic configuration for the golden subset.
+fn small_cfg() -> Config {
+    Config { table1_packets: 2000, ..Config::default() }
+}
+
+/// Run the fixed-seed `table1` + `fig5` subset (no threads, no backend —
+/// byte-stable output).
+fn small_report() -> Report {
+    let reg = experiments::registry();
+    let sel: Vec<&dyn Experiment> = ["table1", "fig5"]
+        .iter()
+        .map(|n| experiments::find(&reg, n).expect("registry name"))
+        .collect();
+    run_report(&sel, &small_cfg()).expect("report run")
+}
+
+#[test]
+fn registry_names_are_unique_with_nonempty_anchors() {
+    let reg = experiments::registry();
+    assert_eq!(reg.len(), 10, "ten experiments expected");
+    for (i, e) in reg.iter().enumerate() {
+        assert!(!e.name().is_empty());
+        assert!(
+            !e.paper_anchor().trim().is_empty(),
+            "{} has an empty paper anchor",
+            e.name()
+        );
+        assert!(!e.description().trim().is_empty(), "{}", e.name());
+        for later in &reg[i + 1..] {
+            assert_ne!(e.name(), later.name(), "duplicate experiment name");
+        }
+    }
+}
+
+#[test]
+fn every_claim_references_a_plausible_experiment() {
+    // each paper claim's scalar prefix must be a registry experiment, so a
+    // renamed experiment cannot silently orphan its claims
+    let reg = experiments::registry();
+    for c in CLAIMS {
+        let prefix = c.scalar.split('.').next().unwrap();
+        assert!(
+            experiments::find(&reg, prefix).is_some(),
+            "claim {} references unknown experiment {prefix:?}",
+            c.scalar
+        );
+    }
+}
+
+#[test]
+fn report_is_deterministic() {
+    let a = small_report();
+    let b = small_report();
+    assert_eq!(a.to_markdown(), b.to_markdown(), "RESULTS.md must be byte-stable");
+    assert_eq!(a.to_json(), b.to_json(), "results.json must be byte-stable");
+}
+
+#[test]
+fn markdown_contains_parity_rows_with_deltas_and_status() {
+    let rep = small_report();
+    let md = rep.to_markdown();
+    assert!(md.starts_with("# Paper-parity report"));
+    assert!(md.contains("## Paper parity"));
+    // claimed-vs-measured rows for the subset's experiments only
+    assert!(md.contains("table1.acc_reduction_pct"));
+    assert!(md.contains("20.177"), "paper value missing: {md}");
+    assert!(md.contains("fig5.app_total_um2_k25"));
+    assert!(md.contains("2193"));
+    assert!(!md.contains("fig67."), "unselected experiment leaked into parity");
+    // every parity row renders a signed relative delta and a known status
+    for row in &rep.parity {
+        let status = row.status();
+        assert!(matches!(status, ParityStatus::Pass | ParityStatus::Warn));
+        assert!(md.contains(row.claim.scalar), "{} missing", row.claim.scalar);
+    }
+    assert!(md.contains("| pass |") || md.contains("| warn |"));
+    // per-experiment sections in registry order, with scalars appendices
+    let t1 = md.find("## table1").expect("table1 section");
+    let f5 = md.find("## fig5").expect("fig5 section");
+    assert!(t1 < f5, "sections out of registry order");
+    assert!(md.contains("### table1 scalars"));
+    assert!(md.contains("### fig5 scalars"));
+}
+
+#[test]
+fn json_is_benchutil_shaped_with_paper_and_delta_keys() {
+    let rep = small_report();
+    let json = rep.to_json();
+    assert!(json.starts_with("{\"measurements\":["), "not benchutil-shaped: {json}");
+    assert!(json.trim_end().ends_with("}}"));
+    assert!(json.contains("\"scalars\":{"));
+    assert!(json.contains("\"report.seed\":"));
+    assert!(json.contains("\"table1.acc_reduction_pct\":"));
+    assert!(json.contains("\"paper.table1.acc_reduction_pct\":20.177"));
+    assert!(json.contains("\"delta_rel_pct.table1.acc_reduction_pct\":"));
+    assert!(json.contains("\"paper.fig5.app_total_um2_k25\":2193"));
+    assert!(!json.contains("paper.fig67."), "unselected claim leaked");
+}
+
+#[test]
+fn parity_measurements_match_the_experiment_scalars() {
+    let rep = small_report();
+    assert!(!rep.parity.is_empty(), "subset produced no parity rows");
+    for row in &rep.parity {
+        let measured = rep.get(row.claim.scalar).expect("parity scalar must exist");
+        assert_eq!(measured, row.measured, "{}", row.claim.scalar);
+        assert!(row.measured.is_finite());
+    }
+    // the calibrated K=25 area anchor must hold (pass, not warn) — this is
+    // the same 5 % bound rust/tests/calibration.rs and fig5 tests pin
+    let area = rep
+        .parity
+        .iter()
+        .find(|r| r.claim.scalar == "fig5.app_total_um2_k25")
+        .expect("area claim");
+    assert_eq!(area.status(), ParityStatus::Pass, "delta {:.2}%", area.delta_rel_pct());
+}
+
+#[test]
+fn write_to_emits_both_artifacts() {
+    let rep = small_report();
+    let dir = std::env::temp_dir().join("repro_report_renderer_test");
+    let dir_s = dir.to_str().unwrap();
+    let (md_path, json_path) = rep.write_to(dir_s).expect("write_to");
+    let md = std::fs::read_to_string(&md_path).unwrap();
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert_eq!(md, rep.to_markdown());
+    assert_eq!(json, rep.to_json());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Compare `content` against the committed golden file, blessing it when
+/// missing or when `REPRO_BLESS` is set.
+fn check_golden(name: &str, content: &str) {
+    let path: PathBuf =
+        [env!("CARGO_MANIFEST_DIR"), "rust", "tests", "golden", name].iter().collect();
+    if std::env::var_os("REPRO_BLESS").is_some() || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, content).unwrap();
+        eprintln!("(blessed golden {name})");
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        want, content,
+        "golden {name} drifted; if the renderer change is intentional, \
+         regenerate with REPRO_BLESS=1 cargo test --test report_renderer"
+    );
+}
+
+#[test]
+fn golden_results_md_pins_renderer_output() {
+    check_golden("report_small.md", &small_report().to_markdown());
+}
+
+#[test]
+fn golden_results_json_pins_renderer_output() {
+    check_golden("report_small.json", &small_report().to_json());
+}

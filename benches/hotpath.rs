@@ -1,7 +1,9 @@
 //! Hot-path microbenchmarks (§Perf in EXPERIMENTS.md): the per-packet
-//! sort→frame→count pipeline that every experiment leans on, the batched
-//! execution-backend path the serving engine dispatches (and, with
-//! `--features pjrt`, its PJRT-dispatched XLA twin), the
+//! sort→frame→count pipeline that every experiment leans on, the
+//! `packet_bt_throughput` scenario pricing the legacy byte-lane flit path
+//! against the packed word-level data plane on the Table-I mix, the
+//! batched execution-backend path the serving engine dispatches (and,
+//! with `--features pjrt`, its PJRT-dispatched XLA twin), the
 //! `serve_throughput` scenario driving the public sharded `SortService`
 //! API end to end (1 shard vs N shards), and the
 //! `serve_telemetry_overhead` scenario pricing the link-power probe +
@@ -9,63 +11,109 @@
 //!
 //! Set `BENCHUTIL_JSON=path.json` to dump every measurement as JSON
 //! (uploaded as a CI artifact — the BENCH_* trajectory; the telemetry
-//! overhead also lands there as the `serve_telemetry_overhead_ratio`
-//! scalar, so probe cost on the hot path is tracked across PRs).
+//! overhead and the byte-vs-word `packet_bt_throughput_speedup` also land
+//! there as scalars, so both are tracked across PRs). Set `BENCH_SMOKE=1`
+//! to shrink every scenario to CI-smoke sizes (trajectory, not
+//! precision).
 
 use std::time::Duration;
 
 use repro::benchutil::{self, bench, black_box, Measurement};
 use repro::coordinator::SortService;
-use repro::noc::{Link, Packet};
+use repro::noc::{Link, Packet, PacketFrame};
 use repro::psu::{AccPsu, AppPsu, BitonicSorter, BucketMap, CsnSorter, SorterUnit};
-use repro::workload::Rng;
+use repro::workload::{OrderStrategy, Rng, TrafficModel};
 use repro::PACKET_BYTES;
 
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").ok().as_deref() == Some("1");
+    let n_packets: usize = if smoke { 128 } else { 1024 };
+    let n_reqs: usize = if smoke { 256 } else { 2048 };
+    let iters = |full: u32| if smoke { (full / 5).max(2) } else { full };
+
     let mut all: Vec<Measurement> = Vec::new();
     let mut scalars: Vec<(&str, f64)> = Vec::new();
     let mut rng = Rng::new(3);
-    let packets: Vec<Vec<u8>> = (0..1024)
+    let packets: Vec<Vec<u8>> = (0..n_packets)
         .map(|_| (0..PACKET_BYTES).map(|_| rng.next_u8()).collect())
         .collect();
 
     // sorting units on the 64-byte packet path
     for (name, sorter) in [
-        ("ACC-PSU sort_indices (64B x 1024)", Box::new(AccPsu::new(PACKET_BYTES)) as Box<dyn SorterUnit>),
-        ("APP-PSU sort_indices (64B x 1024)", Box::new(AppPsu::new(PACKET_BYTES, BucketMap::paper_k4()))),
-        ("Bitonic sort_indices (64B x 1024)", Box::new(BitonicSorter::new(PACKET_BYTES))),
-        ("CSN sort_indices     (64B x 1024)", Box::new(CsnSorter::new(PACKET_BYTES))),
+        ("ACC-PSU sort_indices (64B)", Box::new(AccPsu::new(PACKET_BYTES)) as Box<dyn SorterUnit>),
+        ("APP-PSU sort_indices (64B)", Box::new(AppPsu::new(PACKET_BYTES, BucketMap::paper_k4()))),
+        ("Bitonic sort_indices (64B)", Box::new(BitonicSorter::new(PACKET_BYTES))),
+        ("CSN sort_indices     (64B)", Box::new(CsnSorter::new(PACKET_BYTES))),
     ] {
-        let m = bench(name, 2, 20, || {
+        let m = bench(name, 2, iters(20), || {
             let mut acc = 0u32;
             for p in &packets {
                 acc = acc.wrapping_add(sorter.sort_indices(p)[0] as u32);
             }
             acc
         });
-        println!("  -> {:.2} Mpackets/s", m.per_second(1024) / 1e6);
+        println!("  -> {:.2} Mpackets/s", m.per_second(n_packets as u64) / 1e6);
         all.push(m);
     }
 
-    // full per-packet pipeline: sort -> reorder -> frame -> count
+    // full per-packet pipeline: sort -> reorder -> frame -> count, on the
+    // packed word path end to end
     let psu = AppPsu::new(PACKET_BYTES, BucketMap::paper_k4());
-    let m = bench("APP pipeline sort+reorder+frame+BT (x1024)", 2, 20, || {
+    let m = bench("APP pipeline sort+reorder+frame+BT", 2, iters(20), || {
         let mut link = Link::new("b");
         for p in &packets {
             let sorted = psu.reorder(p);
-            link.send_transfer(&Packet::standard(&sorted));
+            link.send_transfer_frame(&PacketFrame::standard(&sorted));
         }
         link.total_bt()
     });
-    println!("  -> {:.2} Mpackets/s full pipeline", m.per_second(1024) / 1e6);
+    println!("  -> {:.2} Mpackets/s full pipeline", m.per_second(n_packets as u64) / 1e6);
     all.push(m);
 
-    // BT counting alone
-    let framed: Vec<Packet> = packets.iter().map(|p| Packet::standard(p)).collect();
-    let m = bench("internal_bt only (x1024)", 2, 50, || {
+    // packet_bt_throughput: frame + count BT per packet on the Table-I
+    // traffic mix (column-major raster and ACC-sorted payloads, input and
+    // weight sides), priced through the legacy byte-lane Vec<Vec<u8>>
+    // path vs the packed [u64; 2] word path. The median ratio is the
+    // recorded speedup of the data-plane refactor.
+    {
+        let model = TrafficModel { height: 128, width: 128, ..TrafficModel::default() };
+        let trace = model.gen_trace(&mut Rng::new(17));
+        let mut mix: Vec<Vec<u8>> = Vec::new();
+        for s in [OrderStrategy::ColumnMajor, OrderStrategy::Acc] {
+            for p in trace.packets(s) {
+                mix.push(p.input);
+                mix.push(p.weight);
+            }
+        }
+        if smoke {
+            mix.truncate(256);
+        }
+        let m_old = bench("packet_bt_throughput legacy byte lanes", 2, iters(50), || {
+            mix.iter().map(|b| Packet::standard(b).internal_bt()).sum::<u64>()
+        });
+        println!("  -> {:.2} Mpackets/s legacy", m_old.per_second(mix.len() as u64) / 1e6);
+        let m_new = bench("packet_bt_throughput packed words", 2, iters(50), || {
+            mix.iter().map(|b| PacketFrame::standard(b).internal_bt()).sum::<u64>()
+        });
+        println!("  -> {:.2} Mpackets/s packed", m_new.per_second(mix.len() as u64) / 1e6);
+        // both paths must price the mix identically before the ratio means
+        // anything (the property suite pins this; the bench re-checks)
+        let bt_old: u64 = mix.iter().map(|b| Packet::standard(b).internal_bt()).sum();
+        let bt_new: u64 = mix.iter().map(|b| PacketFrame::standard(b).internal_bt()).sum();
+        assert_eq!(bt_old, bt_new, "byte and word paths disagree on the Table-I mix");
+        let speedup = m_old.median.as_secs_f64() / m_new.median.as_secs_f64();
+        println!("  -> packet_bt_throughput: {speedup:.2}x (packed vs byte lanes)");
+        scalars.push(("packet_bt_throughput_speedup", speedup));
+        all.push(m_old);
+        all.push(m_new);
+    }
+
+    // BT counting alone, word path (frames prebuilt)
+    let framed: Vec<PacketFrame> = packets.iter().map(|p| PacketFrame::standard(p)).collect();
+    let m = bench("internal_bt only (packed)", 2, iters(50), || {
         framed.iter().map(|p| black_box(p).internal_bt()).sum::<u64>()
     });
-    println!("  -> {:.2} Mpackets/s BT counting", m.per_second(1024) / 1e6);
+    println!("  -> {:.2} Mpackets/s BT counting", m.per_second(n_packets as u64) / 1e6);
     all.push(m);
 
     // batched backend path — the serving engine's dispatch unit
@@ -74,6 +122,7 @@ fn main() {
         let be = ReferenceBackend::new();
         let xs: Vec<[u8; PACKET_ELEMS]> = packets
             .iter()
+            .cycle()
             .take(BT_BATCH)
             .map(|p| {
                 let mut a = [0u8; PACKET_ELEMS];
@@ -81,7 +130,7 @@ fn main() {
                 a
             })
             .collect();
-        let m = bench("ReferenceBackend psu_sort (256-packet batch)", 2, 10, || {
+        let m = bench("ReferenceBackend psu_sort (256-packet batch)", 2, iters(10), || {
             be.psu_sort(&xs).unwrap()
         });
         println!(
@@ -96,7 +145,7 @@ fn main() {
     // host; per-request results stay popcount-sorted permutations).
     {
         use repro::runtime::PACKET_ELEMS;
-        let reqs: Vec<[u8; PACKET_ELEMS]> = (0..2048)
+        let reqs: Vec<[u8; PACKET_ELEMS]> = (0..n_reqs)
             .map(|i| {
                 let mut a = [0u8; PACKET_ELEMS];
                 a.copy_from_slice(&packets[i % packets.len()]);
@@ -110,9 +159,9 @@ fn main() {
             let clients = 8;
             let chunk = reqs.len().div_ceil(clients);
             let m = bench(
-                &format!("serve_throughput ({shards} shard(s), 2048 reqs, 8 clients)"),
+                &format!("serve_throughput ({shards} shard(s), {n_reqs} reqs, 8 clients)"),
                 1,
-                5,
+                iters(5),
                 || {
                     std::thread::scope(|s| {
                         for c in reqs.chunks(chunk) {
@@ -156,7 +205,7 @@ fn main() {
     {
         use repro::linkpower::OrderPolicy;
         use repro::runtime::PACKET_ELEMS;
-        let reqs: Vec<[u8; PACKET_ELEMS]> = (0..2048)
+        let reqs: Vec<[u8; PACKET_ELEMS]> = (0..n_reqs)
             .map(|i| {
                 let mut a = [0u8; PACKET_ELEMS];
                 a.copy_from_slice(&packets[i % packets.len()]);
@@ -170,9 +219,9 @@ fn main() {
             let clients = 8;
             let chunk = reqs.len().div_ceil(clients);
             let m = bench(
-                &format!("serve_telemetry_overhead (probe {tag}, 2 shards, 2048 reqs)"),
+                &format!("serve_telemetry_overhead (probe {tag}, 2 shards, {n_reqs} reqs)"),
                 1,
-                5,
+                iters(5),
                 || {
                     std::thread::scope(|s| {
                         for c in reqs.chunks(chunk) {
@@ -209,6 +258,7 @@ fn main() {
         let rt = PjrtBackend::load("artifacts").expect("artifacts");
         let xs: Vec<[u8; PACKET_ELEMS]> = packets
             .iter()
+            .cycle()
             .take(BT_BATCH)
             .map(|p| {
                 let mut a = [0u8; PACKET_ELEMS];
@@ -216,7 +266,7 @@ fn main() {
                 a
             })
             .collect();
-        let m = bench("XLA psu_sort via PJRT (256-packet batch)", 2, 10, || {
+        let m = bench("XLA psu_sort via PJRT (256-packet batch)", 2, iters(10), || {
             rt.psu_sort(&xs).unwrap()
         });
         println!("  -> {:.2} Mpackets/s via XLA", m.per_second(BT_BATCH as u64) / 1e6);

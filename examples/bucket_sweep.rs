@@ -34,7 +34,7 @@ fn main() {
         let mut flits = 0u64;
         for p in pkts.iter().take(2048) {
             let sorted = psu.reorder(&p.input);
-            let pk = repro::noc::Packet::standard(&sorted);
+            let pk = repro::noc::PacketFrame::standard(&sorted);
             bt += pk.internal_bt();
             flits += pk.num_flits() as u64;
         }

@@ -5,7 +5,7 @@
 //! ```
 
 use repro::hw::Tech;
-use repro::noc::{Link, Packet};
+use repro::noc::{Link, PacketFrame};
 use repro::psu::{all_designs, AppPsu, SorterUnit};
 use repro::workload::Rng;
 
@@ -35,7 +35,7 @@ fn main() {
     let sorted = psu.reorder(&window);
     let mut raw = Link::new("raw");
     let mut srt = Link::new("sorted");
-    let bt_raw = raw.send_transfer(&Packet::from_bytes_lane_major(&window, 16));
-    let bt_srt = srt.send_transfer(&Packet::from_bytes_lane_major(&sorted, 16));
+    let bt_raw = raw.send_transfer_frame(&PacketFrame::from_bytes_lane_major(&window, 16));
+    let bt_srt = srt.send_transfer_frame(&PacketFrame::from_bytes_lane_major(&sorted, 16));
     println!("\nlink BT for one window transfer: unsorted {bt_raw}, APP-sorted {bt_srt}");
 }

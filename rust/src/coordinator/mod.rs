@@ -24,6 +24,14 @@
 //! channels + threads (the build is offline; no async runtime is vendored
 //! — DESIGN.md §2).
 //!
+//! Allocation discipline: the batch, packet, and strategy buffers of each
+//! shard's loop are reused across batches, and the telemetry engine
+//! frames packets through a reused [`crate::noc::FrameScratch`], so a
+//! served packet flows from admission to telemetry with zero per-packet
+//! heap allocation — the only allocations on the path are the response
+//! index vectors, which the backend produces and the replies move to the
+//! client (zero-copy).
+//!
 //! [`Metrics`] extends the request/batch counters with per-shard
 //! breakdowns and a fixed-bucket (power-of-two nanosecond) latency
 //! histogram: [`LatencyHistogram::p50`] / [`LatencyHistogram::p99`] come
@@ -638,13 +646,21 @@ fn batch_loop(
     metrics: Arc<Metrics>,
     mut engine: Option<PolicyEngine>,
 ) {
+    // Every per-batch buffer is hoisted out of the loop and reused, so the
+    // serving path performs zero per-packet heap allocation: the only
+    // allocations left are the response index vectors themselves, which
+    // the backend produces and the replies take ownership of (zero-copy).
+    let mut batch: Vec<SortRequest> = Vec::with_capacity(BT_BATCH);
+    let mut packets: Vec<[u8; PACKET_ELEMS]> = Vec::with_capacity(BT_BATCH);
+    let mut strategies: Vec<StrategyKind> = Vec::with_capacity(BT_BATCH);
     loop {
         // wait for the first request of the batch
         let first = match rx.recv() {
             Ok(r) => r,
             Err(_) => return, // all senders gone
         };
-        let mut batch = vec![first];
+        batch.clear();
+        batch.push(first);
         let deadline = Instant::now() + max_wait;
         while batch.len() < BT_BATCH {
             let now = Instant::now();
@@ -659,7 +675,8 @@ fn batch_loop(
         }
         metrics.record_batch(shard, batch.len() as u64);
 
-        let packets: Vec<[u8; PACKET_ELEMS]> = batch.iter().map(|r| r.packet).collect();
+        packets.clear();
+        packets.extend(batch.iter().map(|r| r.packet));
         // one backend execution per batch — the fixed batch shape pads
         match backend.psu_sort(&packets) {
             Ok((acc, app)) if acc.len() == batch.len() && app.len() == batch.len() => {
@@ -667,37 +684,34 @@ fn batch_loop(
                 // publish telemetry *before* any reply unblocks a client —
                 // a caller that reads Metrics right after its reply must
                 // already see this batch accounted for
-                let strategies: Option<Vec<StrategyKind>> = engine.as_mut().map(|e| {
-                    batch
-                        .iter()
-                        .zip(&acc)
-                        .zip(&app)
-                        .map(|((req, a), p)| e.observe_with_perms(&req.packet, a, p))
-                        .collect()
-                });
-                if let Some(e) = &engine {
+                strategies.clear();
+                if let Some(e) = engine.as_mut() {
+                    for ((req, a), p) in batch.iter().zip(&acc).zip(&app) {
+                        strategies.push(e.observe_with_perms(&req.packet, a, p));
+                    }
                     metrics.linkpower[shard].publish(&e.snapshot());
                 }
                 // move each index vector straight into its reply — the
                 // backend's outputs are the response payloads (zero-copy)
                 for (i, ((req, acc_indices), app_indices)) in
-                    batch.into_iter().zip(acc).zip(app).enumerate()
+                    batch.drain(..).zip(acc).zip(app).enumerate()
                 {
                     metrics.latency.record(req.enqueued.elapsed());
-                    let strategy = strategies.as_ref().map(|s| s[i]);
+                    // empty without a policy engine: no stamp
+                    let strategy = strategies.get(i).copied();
                     let resp = SortResponse { acc_indices, app_indices, strategy };
                     let _ = req.reply.send(Ok(resp));
                 }
             }
             Ok(_) => {
-                for req in batch {
+                for req in batch.drain(..) {
                     let _ = req
                         .reply
                         .send(Err(anyhow::anyhow!("backend returned wrong batch size")));
                 }
             }
             Err(e) => {
-                for req in batch {
+                for req in batch.drain(..) {
                     let _ = req.reply.send(Err(anyhow::anyhow!("{e}")));
                 }
             }

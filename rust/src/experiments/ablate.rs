@@ -3,7 +3,7 @@
 
 use crate::config::Config;
 use crate::hw::Tech;
-use crate::noc::{Link, Packet};
+use crate::noc::{Link, PacketFrame};
 use crate::psu::{AppPsu, BucketMap, SorterUnit};
 use crate::report::{self, ExperimentResult, Table};
 use crate::workload::{OrderStrategy, Rng, TrafficModel};
@@ -39,7 +39,7 @@ pub fn run(ks: &[usize], model: &TrafficModel, n_packets: usize, seed: u64, tech
     }
     let mut base_link = Link::new("base");
     for p in &all_packets {
-        base_link.send_transfer(&Packet::standard(&p.input));
+        base_link.send_transfer_frame(&PacketFrame::standard(&p.input));
     }
     let base = base_link.bt_per_flit();
 
@@ -50,7 +50,7 @@ pub fn run(ks: &[usize], model: &TrafficModel, n_packets: usize, seed: u64, tech
             let mut link = Link::new(format!("k{k}"));
             for p in &all_packets {
                 let sorted = psu.reorder(&p.input);
-                link.send_transfer(&Packet::standard(&sorted));
+                link.send_transfer_frame(&PacketFrame::standard(&sorted));
             }
             KPoint {
                 k,

@@ -11,7 +11,7 @@
 
 use crate::config::Config;
 use crate::hw::Tech;
-use crate::noc::{Link, Packet};
+use crate::noc::{Link, Packet, PacketFrame, MAX_FRAME_BYTES};
 use crate::psu::{AccPsu, AppPsu, BucketMap, SorterUnit};
 use crate::report::{self, ExperimentResult, Table};
 use crate::workload::traffic::{gen_field, TrafficModel};
@@ -55,6 +55,18 @@ pub struct LayerRow {
     pub app_area_um2: f64,
 }
 
+/// Lane-major transfer of one group: the heap-free frame path for every
+/// group that fits a [`PacketFrame`], the legacy any-length byte path for
+/// custom shapes wider than [`MAX_FRAME_BYTES`] — so `run` keeps its
+/// unbounded-`k` contract.
+fn send_lane_major(link: &mut Link, bytes: &[u8]) -> u64 {
+    if bytes.len() <= MAX_FRAME_BYTES {
+        link.send_transfer_frame(&PacketFrame::from_bytes_lane_major(bytes, 16))
+    } else {
+        link.send_transfer(&Packet::from_bytes_lane_major(bytes, 16))
+    }
+}
+
 /// Run the sweep: `windows` activation windows per shape.
 pub fn run(shapes: &[LayerShape], windows: usize, seed: u64, tech: &Tech) -> Vec<LayerRow> {
     let field_model = TrafficModel::default().input;
@@ -74,18 +86,22 @@ pub fn run(shapes: &[LayerShape], windows: usize, seed: u64, tech: &Tech) -> Vec
             // K-wide unit, then windows are packed per transfer.
             let per_packet = (crate::PACKET_BYTES / s.k).max(1);
             let group = s.k * per_packet;
+            // transfer payload buffers reused across the whole sweep
+            let mut base_p = Vec::with_capacity(group);
+            let mut acc_p = Vec::with_capacity(group);
+            let mut app_p = Vec::with_capacity(group);
             for g in row[0].chunks_exact(group) {
-                let mut base_p = Vec::with_capacity(group);
-                let mut acc_p = Vec::with_capacity(group);
-                let mut app_p = Vec::with_capacity(group);
+                base_p.clear();
+                acc_p.clear();
+                app_p.clear();
                 for w in g.chunks_exact(s.k) {
                     base_p.extend_from_slice(w);
                     acc_p.extend(acc.reorder(w));
                     app_p.extend(app.reorder(w));
                 }
-                base_l.send_transfer(&Packet::from_bytes_lane_major(&base_p, 16));
-                acc_l.send_transfer(&Packet::from_bytes_lane_major(&acc_p, 16));
-                app_l.send_transfer(&Packet::from_bytes_lane_major(&app_p, 16));
+                send_lane_major(&mut base_l, &base_p);
+                send_lane_major(&mut acc_l, &acc_p);
+                send_lane_major(&mut app_l, &app_p);
             }
             let base = base_l.total_bt() as f64;
             LayerRow {
@@ -182,5 +198,16 @@ mod tests {
         }
         // area grows with K
         assert!(rows.windows(2).all(|w| w[0].app_area_um2 < w[1].app_area_um2));
+    }
+
+    #[test]
+    fn oversized_custom_shapes_take_the_byte_path() {
+        // a 160-byte group exceeds MAX_FRAME_BYTES: run() must fall back
+        // to the legacy any-length framing instead of panicking
+        let shapes = [LayerShape { name: "wide GEMM tile", k: 160 }];
+        let rows = run(&shapes, 64, 3, &Tech::default());
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].acc_bt_reduction_pct.is_finite());
+        assert!(rows[0].acc_area_um2 > 0.0);
     }
 }

@@ -4,7 +4,7 @@
 
 use crate::config::Config;
 use crate::hw::Tech;
-use crate::noc::{MultiHopPath, Packet};
+use crate::noc::{MultiHopPath, PacketFrame};
 use crate::report::{self, ExperimentResult, Table};
 use crate::workload::{OrderStrategy, Rng, TrafficModel};
 
@@ -35,20 +35,31 @@ pub fn run(
 ) -> Vec<HopPoint> {
     let mut rng = Rng::new(seed);
     let trace = model.gen_trace(&mut rng);
-    let base_pkts = trace.packets(OrderStrategy::NonOptimized);
-    let app_pkts = trace.packets(OrderStrategy::App);
-    let n = n_packets.min(base_pkts.len());
+    // frame each input payload once (frames are Copy and heap-free), then
+    // replay the identical frames across every hop count
+    let mut base_frames: Vec<PacketFrame> = Vec::new();
+    let mut app_frames: Vec<PacketFrame> = Vec::new();
+    for (frames, strategy) in [
+        (&mut base_frames, OrderStrategy::NonOptimized),
+        (&mut app_frames, OrderStrategy::App),
+    ] {
+        trace.for_each_packet(strategy, |input, _| {
+            frames.push(PacketFrame::standard(input));
+            frames.len() < n_packets
+        });
+    }
+    let n = n_packets.min(base_frames.len());
 
     hop_counts
         .iter()
         .map(|&h| {
             let mut base_path = MultiHopPath::new("base", h);
             let mut app_path = MultiHopPath::new("app", h);
-            for p in base_pkts.iter().take(n) {
-                base_path.send_transfer(&Packet::standard(&p.input));
+            for f in base_frames.iter().take(n) {
+                base_path.send_transfer(f);
             }
-            for p in app_pkts.iter().take(n) {
-                app_path.send_transfer(&Packet::standard(&p.input));
+            for f in app_frames.iter().take(n) {
+                app_path.send_transfer(f);
             }
             let be = base_path.energy_j(tech);
             let ae = app_path.energy_j(tech);

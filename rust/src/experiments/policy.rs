@@ -178,13 +178,17 @@ pub fn run(model: &TrafficModel, n_packets: usize, seed: u64) -> PolicyReport {
     let mut remaining = n_packets;
     while remaining > 0 {
         let trace = model.gen_trace(&mut rng);
-        let pkts = trace.packets(OrderStrategy::ColumnMajor);
-        for p in pkts.iter().take(remaining) {
+        // stream straight from the generator's reused payload buffers into
+        // the engines' frame scratch — no per-packet allocation anywhere
+        let mut seen = 0usize;
+        trace.for_each_packet(OrderStrategy::ColumnMajor, |input, _| {
             for (_, e) in engines.iter_mut() {
-                e.observe(&p.input);
+                e.observe(input);
             }
-        }
-        remaining -= remaining.min(pkts.len());
+            seen += 1;
+            seen < remaining
+        });
+        remaining -= remaining.min(seen.max(1));
     }
     PolicyReport {
         rows: engines

@@ -17,7 +17,7 @@
 //! count, is what the Fig. 6/7 platform experiment uses.)
 
 use crate::config::Config;
-use crate::noc::Packet;
+use crate::noc::PacketFrame;
 use crate::report::{self, ExperimentResult, Table};
 use crate::workload::{OrderStrategy, Rng, TrafficModel};
 
@@ -156,15 +156,22 @@ pub fn run(model: &TrafficModel, n_packets: usize, seed: u64) -> Table1 {
     for _ in 0..traces {
         let trace = model.gen_trace(&mut rng);
         let take = remaining.min(per_trace);
+        if take == 0 {
+            break;
+        }
         for (si, s) in OrderStrategy::all().into_iter().enumerate() {
-            let pkts = trace.packets(s);
-            for p in pkts.iter().take(take) {
-                let ip = Packet::standard(&p.input);
-                let wp = Packet::standard(&p.weight);
+            // the packed word path end to end: reused payload buffers from
+            // the streaming generator, heap-free frames, two XOR +
+            // count_ones per flit boundary — zero per-packet allocation
+            let mut left = take;
+            trace.for_each_packet(s, |input, weight| {
+                let ip = PacketFrame::standard(input);
                 input_bt[si] += ip.internal_bt();
-                weight_bt[si] += wp.internal_bt();
+                weight_bt[si] += PacketFrame::standard(weight).internal_bt();
                 flits[si] += ip.num_flits() as u64;
-            }
+                left -= 1;
+                left > 0 // stop as spent: don't sort a packet we'd discard
+            });
             results[si].packets += take;
         }
         remaining -= take;

@@ -19,7 +19,10 @@
 //! * [`psu`] — the sorting units: ACC-PSU, APP-PSU, and the Bitonic / CSN
 //!   baselines, each with behavioural (via [`sortcore`]), area, and
 //!   activity models.
-//! * [`noc`] — 128-bit link with flit framing and BT ledger; multi-hop
+//! * [`noc`] — the word-level data plane: [`noc::PackedFlit`] (the
+//!   128-bit flit as two `u64` words), [`noc::PacketFrame`] (fixed-
+//!   capacity heap-free framing), the 128-bit link with its BT ledger
+//!   (two XOR + `count_ones` per flit boundary), and the multi-hop
 //!   extension.
 //! * [`pe`] / [`platform`] — the paper's Fig. 3 platform: an allocation
 //!   unit (PSU + transmitting units) feeding 16 LeNet conv/pool PEs.

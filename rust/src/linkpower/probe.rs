@@ -2,21 +2,24 @@
 //! served packet under raw, ACC, and APP orderings simultaneously.
 //!
 //! The probe reuses the [`crate::noc::Link`] transmission-register
-//! semantics verbatim — one `Link` per tracked ordering, each packet sent
-//! with [`crate::noc::Link::send_transfer_bytes`] (windows are independent
-//! transfers: the serializer parallel-loads the first flit, so only the
-//! packet's internal flit boundaries toggle, exactly the Table-I metric;
-//! the `_bytes` entry point frames flits on the fly, keeping the observe
-//! path allocation-free). A property test (rust/tests/properties.rs)
-//! holds the probe byte-identical to a standalone `Link` ledger fed the
-//! same flit sequence through the `Packet`-framed path.
+//! semantics verbatim — one `Link` per tracked ordering, each packet
+//! packed into a reused [`crate::noc::PacketFrame`] (via a
+//! [`FrameScratch`], which also owns the permutation-application buffer)
+//! and sent with [`crate::noc::Link::send_transfer_frame`] (windows are
+//! independent transfers: the serializer parallel-loads the first flit,
+//! so only the packet's internal flit boundaries toggle, exactly the
+//! Table-I metric). The whole three-register hot path is word-speed (two
+//! XOR + `count_ones` per flit) and performs zero per-packet heap
+//! allocation. A property test (rust/tests/properties.rs) holds the
+//! probe bit-identical to a standalone `Link` ledger fed the same flit
+//! sequence through the legacy `Packet`-framed byte path.
 //!
 //! Besides cumulative ledgers the probe keeps a sliding window of the last
 //! `window_packets` observations in a ring buffer with O(1) running sums,
 //! so "what is each strategy worth on *recent* traffic" is a constant-time
 //! query — that window is what the adaptive policy scores.
 
-use crate::noc::Link;
+use crate::noc::{FrameScratch, Link};
 use crate::sortcore;
 use crate::FLIT_LANES;
 
@@ -215,10 +218,10 @@ pub struct LinkProbe {
     served_bt: u64,
     window: Ring,
     packets: u64,
-    /// Reused permutation-application buffer — with the on-the-fly flit
-    /// framing of [`Link::send_transfer_bytes`] the whole observe path is
+    /// Reused frame + permutation-application buffers — the whole observe
+    /// path packs into one [`crate::noc::PacketFrame`] and is
     /// allocation-free per packet.
-    ordered: Vec<u8>,
+    frames: FrameScratch,
 }
 
 impl LinkProbe {
@@ -231,14 +234,8 @@ impl LinkProbe {
             served_bt: 0,
             window: Ring::new(window_packets),
             packets: 0,
-            ordered: Vec::new(),
+            frames: FrameScratch::new(),
         }
-    }
-
-    fn send_ordered(link: &mut Link, ordered: &mut Vec<u8>, perm: &[u16], bytes: &[u8]) -> u64 {
-        ordered.clear();
-        ordered.extend(perm.iter().map(|&i| bytes[i as usize]));
-        link.send_transfer_bytes(ordered)
     }
 
     /// Price one packet under all three orderings (`acc_perm` / `app_perm`
@@ -246,8 +243,12 @@ impl LinkProbe {
     /// [`crate::runtime::Backend::psu_sort`]) and record that it was
     /// transmitted under `served`. Returns the per-ordering BT.
     ///
-    /// Allocation-free: the reorder buffer is reused and the links frame
-    /// flits on the fly ([`Link::send_transfer_bytes`]).
+    /// Allocation-free: the frame and the reorder buffer live in the
+    /// probe's [`FrameScratch`] and every flit latches word-speed
+    /// ([`Link::send_transfer_frame`]). Packets longer than
+    /// [`crate::noc::MAX_FRAME_BYTES`] take the on-the-fly
+    /// [`Link::send_transfer_bytes`] streaming path instead — identical
+    /// ledger semantics, no size limit.
     pub fn observe(
         &mut self,
         packet: &[u8],
@@ -257,9 +258,33 @@ impl LinkProbe {
     ) -> PacketBt {
         debug_assert_eq!(packet.len(), acc_perm.len());
         debug_assert_eq!(packet.len(), app_perm.len());
-        let raw = self.raw.send_transfer_bytes(packet);
-        let acc = Self::send_ordered(&mut self.acc, &mut self.ordered, acc_perm, packet);
-        let app = Self::send_ordered(&mut self.app, &mut self.ordered, app_perm, packet);
+        let (raw, acc, app) = if packet.len() <= crate::noc::MAX_FRAME_BYTES {
+            let raw = self
+                .raw
+                .send_transfer_frame(self.frames.stream_major(packet, FLIT_LANES));
+            let acc = self.acc.send_transfer_frame(self.frames.permuted_stream_major(
+                acc_perm,
+                packet,
+                FLIT_LANES,
+            ));
+            let app = self.app.send_transfer_frame(self.frames.permuted_stream_major(
+                app_perm,
+                packet,
+                FLIT_LANES,
+            ));
+            (raw, acc, app)
+        } else {
+            // oversized payloads exceed a frame's fixed capacity; stream
+            // flits on the fly (still word-speed, still allocation-free)
+            let raw = self.raw.send_transfer_bytes(packet);
+            let acc = self
+                .acc
+                .send_transfer_bytes(self.frames.permuted_bytes(acc_perm, packet));
+            let app = self
+                .app
+                .send_transfer_bytes(self.frames.permuted_bytes(app_perm, packet));
+            (raw, acc, app)
+        };
         let mut obs = PacketBt {
             raw,
             acc,
@@ -389,6 +414,29 @@ mod tests {
         // passthrough served == raw everywhere
         assert_eq!(s.served_bt, s.raw_bt);
         assert!((s.savings_ratio()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oversized_packets_take_the_streaming_path() {
+        // a 256-byte packet exceeds MAX_FRAME_BYTES (128): the probe must
+        // fall back to on-the-fly flit framing with identical semantics
+        let mut probe = LinkProbe::new(4);
+        let map = BucketMap::paper_k4();
+        let mut scratch = ProbeScratch::new();
+        let mut rng = Rng::new(31);
+        let p: Vec<u8> = (0..2 * crate::noc::MAX_FRAME_BYTES).map(|_| rng.next_u8()).collect();
+        let obs = probe.observe_sorting(&p, &map, &mut scratch, StrategyKind::Precise);
+        assert_eq!(obs.flits, 16);
+        // oracle: fresh links fed the same transfers byte-wise
+        let mut raw = Link::new("oracle.raw");
+        assert_eq!(raw.send_transfer_bytes(&p), obs.raw);
+        let mut acc = Link::new("oracle.acc");
+        let mut perm = vec![0u16; p.len()];
+        crate::sortcore::popcount_sort_into(&p, &mut perm);
+        assert_eq!(acc.send_transfer_bytes(&crate::sortcore::apply_perm(&perm, &p)), obs.acc);
+        let s = probe.snapshot();
+        assert_eq!(s.flits, 16);
+        assert_eq!(s.served_bt, obs.acc);
     }
 
     #[test]

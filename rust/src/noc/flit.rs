@@ -1,0 +1,167 @@
+//! The packed 128-bit flit word: the data-plane unit of the whole crate.
+//!
+//! The paper's metric is bit transitions on a 128-bit link (§IV-B4) —
+//! `popcount(prev XOR next)` over a 128-bit word at every flit boundary.
+//! The legacy representation latched flits as 16 separate byte lanes
+//! (16 XOR + popcount operations plus a heap-allocated `Vec<u8>` per
+//! flit); a [`PackedFlit`] is the same flit as two LSB-packed `u64`
+//! words, so one boundary prices as exactly two XOR + `count_ones`
+//! operations and the whole data plane stays `Copy` — no per-flit
+//! allocation anywhere between the workload generator and the telemetry
+//! ledgers.
+//!
+//! Lane packing matches [`crate::hw::ToggleGroup::latch_bytes`]: byte
+//! lane `i` occupies bits `8·(i mod 8)..` of word `i / 8`
+//! (little-endian), so the word path and the byte path produce
+//! bit-identical ledgers by construction. The equivalence is
+//! property-tested in `rust/tests/properties.rs` against the legacy
+//! byte-lane oracle.
+
+use crate::FLIT_LANES;
+
+/// `u64` words per 128-bit flit.
+pub const FLIT_WORDS: usize = FLIT_LANES / 8;
+
+/// A 128-bit flit as [`FLIT_WORDS`] LSB-packed little-endian `u64` words.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub struct PackedFlit(
+    /// The packed words: byte lane `i` sits at bits `8·(i mod 8)..` of
+    /// word `i / 8`.
+    pub [u64; FLIT_WORDS],
+);
+
+impl PackedFlit {
+    /// The all-zero flit (the reset state of a link's TX register).
+    pub const ZERO: PackedFlit = PackedFlit([0; FLIT_WORDS]);
+
+    /// Pack up to [`FLIT_LANES`] bytes; missing tail lanes are zero — the
+    /// same conservative idle-lane padding as the byte-lane framing
+    /// ([`super::Packet::from_bytes`]).
+    ///
+    /// # Panics
+    /// If `bytes` is longer than a flit.
+    #[inline]
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        assert!(bytes.len() <= FLIT_LANES, "flit holds at most {FLIT_LANES} bytes");
+        if bytes.len() == FLIT_LANES {
+            // the hot full-width case: two little-endian word loads
+            let lanes: &[u8; FLIT_LANES] = bytes.try_into().unwrap();
+            return Self::from_lanes(lanes);
+        }
+        let mut w = [0u64; FLIT_WORDS];
+        for (i, &b) in bytes.iter().enumerate() {
+            w[i / 8] |= (b as u64) << ((i % 8) * 8);
+        }
+        PackedFlit(w)
+    }
+
+    /// Pack a full 16-lane flit.
+    #[inline]
+    pub fn from_lanes(lanes: &[u8; FLIT_LANES]) -> Self {
+        PackedFlit([
+            u64::from_le_bytes(lanes[0..8].try_into().unwrap()),
+            u64::from_le_bytes(lanes[8..16].try_into().unwrap()),
+        ])
+    }
+
+    /// Unpack back to byte lanes.
+    #[inline]
+    pub fn to_lanes(self) -> [u8; FLIT_LANES] {
+        let mut out = [0u8; FLIT_LANES];
+        out[0..8].copy_from_slice(&self.0[0].to_le_bytes());
+        out[8..16].copy_from_slice(&self.0[1].to_le_bytes());
+        out
+    }
+
+    /// The byte riding lane `i`.
+    #[inline]
+    pub fn lane(self, i: usize) -> u8 {
+        debug_assert!(i < FLIT_LANES);
+        (self.0[i / 8] >> ((i % 8) * 8)) as u8
+    }
+
+    /// Set the byte riding lane `i`.
+    #[inline]
+    pub fn set_lane(&mut self, i: usize, v: u8) {
+        debug_assert!(i < FLIT_LANES);
+        let shift = (i % 8) * 8;
+        let w = &mut self.0[i / 8];
+        *w = (*w & !(0xFFu64 << shift)) | ((v as u64) << shift);
+    }
+
+    /// Bit transitions against another flit — the paper's per-boundary BT,
+    /// priced as two XOR + `count_ones` operations.
+    #[inline]
+    pub fn transitions(self, other: PackedFlit) -> u32 {
+        (self.0[0] ^ other.0[0]).count_ones() + (self.0[1] ^ other.0[1]).count_ones()
+    }
+
+    /// Total '1' bits in the flit.
+    #[inline]
+    pub fn popcount(self) -> u32 {
+        self.0[0].count_ones() + self.0[1].count_ones()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Rng;
+
+    #[test]
+    fn pack_unpack_round_trips() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let lanes: [u8; FLIT_LANES] = std::array::from_fn(|_| rng.next_u8());
+            let f = PackedFlit::from_lanes(&lanes);
+            assert_eq!(f.to_lanes(), lanes);
+            assert_eq!(PackedFlit::from_bytes(&lanes), f);
+            for (i, &b) in lanes.iter().enumerate() {
+                assert_eq!(f.lane(i), b, "lane {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn short_packs_zero_pad_the_tail() {
+        let f = PackedFlit::from_bytes(&[0xAB, 0xCD, 0xEF]);
+        assert_eq!(f.lane(0), 0xAB);
+        assert_eq!(f.lane(1), 0xCD);
+        assert_eq!(f.lane(2), 0xEF);
+        for i in 3..FLIT_LANES {
+            assert_eq!(f.lane(i), 0, "lane {i} must be zero-padded");
+        }
+        assert_eq!(PackedFlit::from_bytes(&[]), PackedFlit::ZERO);
+    }
+
+    #[test]
+    fn set_lane_overwrites_only_its_lane() {
+        let mut f = PackedFlit::ZERO;
+        f.set_lane(0, 0xFF);
+        f.set_lane(9, 0x5A);
+        f.set_lane(0, 0x01);
+        let mut want = [0u8; FLIT_LANES];
+        want[0] = 0x01;
+        want[9] = 0x5A;
+        assert_eq!(f.to_lanes(), want);
+    }
+
+    #[test]
+    fn transitions_match_byte_oracle() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let a: [u8; FLIT_LANES] = std::array::from_fn(|_| rng.next_u8());
+            let b: [u8; FLIT_LANES] = std::array::from_fn(|_| rng.next_u8());
+            let oracle: u32 = a.iter().zip(&b).map(|(&x, &y)| (x ^ y).count_ones()).sum();
+            let got = PackedFlit::from_lanes(&a).transitions(PackedFlit::from_lanes(&b));
+            assert_eq!(got, oracle);
+        }
+    }
+
+    #[test]
+    fn popcount_sums_all_lanes() {
+        let f = PackedFlit::from_bytes(&[0x0F, 0xF0, 0x01]);
+        assert_eq!(f.popcount(), 9);
+        assert_eq!(PackedFlit::ZERO.popcount(), 0);
+    }
+}

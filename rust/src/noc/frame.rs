@@ -1,0 +1,306 @@
+//! Packet framing over packed flits: the fixed-capacity, contiguous,
+//! allocation-free replacement for [`super::Packet`]'s byte-lane
+//! `Vec<Vec<u8>>`.
+//!
+//! A [`PacketFrame`] is `Copy` and lives entirely on the stack, so the
+//! serving path, the telemetry probe, and every experiment loop frame
+//! millions of packets with zero per-packet heap allocation. Streaming
+//! callers that also need a permutation-application buffer reuse a
+//! [`FrameScratch`], mirroring [`crate::sortcore::SortScratch`].
+//!
+//! Both byte-to-flit mappings of the platform are provided:
+//!
+//! * **stream-major** ([`PacketFrame::from_bytes`]) — consecutive stream
+//!   bytes fill the lanes of one flit before moving to the next
+//!   (`Packet::from_bytes` semantics, the Table-I framing);
+//! * **lane-major** ([`PacketFrame::from_bytes_lane_major`]) — the
+//!   transmitting-unit serpentine: byte `j` rides flit `j % F`, lane
+//!   `j / F`, so adjacent sorted elements stay on one lane
+//!   (`Packet::from_bytes_lane_major` semantics).
+//!
+//! Bit-for-bit equivalence with the legacy byte-lane ledger is
+//! property-tested in `rust/tests/properties.rs`.
+
+use crate::{FLIT_LANES, PACKET_BYTES};
+
+use super::flit::PackedFlit;
+
+/// Maximum flits a [`PacketFrame`] holds: 128 bytes at 16 lanes — double
+/// the Table-I packet, covering every transfer the platform frames.
+/// Longer streams go through [`super::Link::send_bytes`] /
+/// [`super::Link::send_transfer_bytes`], which frame flits on the fly
+/// without materializing a frame.
+pub const MAX_FRAME_FLITS: usize = 8;
+
+/// Byte capacity of a [`PacketFrame`] at full [`FLIT_LANES`]-wide flits.
+pub const MAX_FRAME_BYTES: usize = MAX_FRAME_FLITS * FLIT_LANES;
+
+/// A framed packet: a fixed-capacity, contiguous array of packed flits.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PacketFrame {
+    /// Storage; only `flits[..len]` is live (the tail is kept all-zero so
+    /// the derived `PartialEq` stays meaningful across reuse).
+    flits: [PackedFlit; MAX_FRAME_FLITS],
+    len: usize,
+}
+
+impl PacketFrame {
+    /// The empty frame.
+    pub const EMPTY: PacketFrame = PacketFrame {
+        flits: [PackedFlit::ZERO; MAX_FRAME_FLITS],
+        len: 0,
+    };
+
+    /// Frame a byte stream stream-major into flits of `lanes` bytes,
+    /// zero-padding the tail flit — exactly
+    /// [`super::Packet::from_bytes`]'s framing, heap-free.
+    ///
+    /// # Panics
+    /// If `lanes` is outside `[1, FLIT_LANES]` or the stream needs more
+    /// than [`MAX_FRAME_FLITS`] flits.
+    pub fn from_bytes(bytes: &[u8], lanes: usize) -> Self {
+        let mut f = Self::EMPTY;
+        f.pack_stream_major(bytes, lanes);
+        f
+    }
+
+    /// Standard Table-I framing: 4 flits × 16 lanes.
+    pub fn standard(bytes: &[u8]) -> Self {
+        assert_eq!(bytes.len(), PACKET_BYTES);
+        Self::from_bytes(bytes, FLIT_LANES)
+    }
+
+    /// Lane-major (serpentine) framing: byte `j` of the stream rides flit
+    /// `j % F`, lane `j / F` (`F` = flit count), so consecutive stream
+    /// bytes stay on one lane across consecutive flits — exactly
+    /// [`super::Packet::from_bytes_lane_major`]'s mapping, heap-free.
+    ///
+    /// # Panics
+    /// Same conditions as [`PacketFrame::from_bytes`].
+    pub fn from_bytes_lane_major(bytes: &[u8], lanes: usize) -> Self {
+        let mut f = Self::EMPTY;
+        f.pack_lane_major(bytes, lanes);
+        f
+    }
+
+    fn check_shape(bytes: &[u8], lanes: usize) -> usize {
+        assert!(
+            (1..=FLIT_LANES).contains(&lanes),
+            "lanes {lanes} outside [1, {FLIT_LANES}]"
+        );
+        let n = bytes.len().div_ceil(lanes);
+        assert!(
+            n <= MAX_FRAME_FLITS,
+            "{} bytes need {n} flits; a frame holds {MAX_FRAME_FLITS}",
+            bytes.len()
+        );
+        n
+    }
+
+    /// Re-pack this frame stream-major (the [`FrameScratch`] reuse path).
+    fn pack_stream_major(&mut self, bytes: &[u8], lanes: usize) {
+        let n = Self::check_shape(bytes, lanes);
+        for (flit, chunk) in self.flits.iter_mut().zip(bytes.chunks(lanes)) {
+            *flit = PackedFlit::from_bytes(chunk);
+        }
+        for flit in &mut self.flits[n..] {
+            *flit = PackedFlit::ZERO;
+        }
+        self.len = n;
+    }
+
+    /// Re-pack this frame lane-major (the [`FrameScratch`] reuse path).
+    fn pack_lane_major(&mut self, bytes: &[u8], lanes: usize) {
+        let n = Self::check_shape(bytes, lanes);
+        self.flits = [PackedFlit::ZERO; MAX_FRAME_FLITS];
+        for (j, &b) in bytes.iter().enumerate() {
+            self.flits[j % n].set_lane(j / n, b);
+        }
+        self.len = n;
+    }
+
+    /// Number of flits this packet frames into.
+    pub fn num_flits(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the frame holds no flits.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The framed flits, in transmission order.
+    pub fn flits(&self) -> &[PackedFlit] {
+        &self.flits[..self.len]
+    }
+
+    /// Internal bit transitions (between consecutive flits of this
+    /// frame): the Table-I per-transfer metric, priced at two XOR +
+    /// `count_ones` per boundary.
+    pub fn internal_bt(&self) -> u64 {
+        let flits = self.flits();
+        let mut bt = 0u64;
+        for w in flits.windows(2) {
+            bt += w[0].transitions(w[1]) as u64;
+        }
+        bt
+    }
+
+    /// Flatten back to bytes, `lanes` per flit (test/debug helper; the
+    /// hot paths never unpack).
+    pub fn to_bytes(&self, lanes: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len * lanes);
+        for flit in self.flits() {
+            out.extend((0..lanes).map(|i| flit.lane(i)));
+        }
+        out
+    }
+}
+
+/// Reusable framing + reorder buffers for streaming callers, mirroring
+/// [`crate::sortcore::SortScratch`]: one frame and one byte buffer live
+/// for a whole stream, so pricing millions of packets performs zero
+/// per-packet heap allocation (the [`crate::linkpower::LinkProbe`] hot
+/// path).
+#[derive(Debug, Clone, Default)]
+pub struct FrameScratch {
+    frame: PacketFrame,
+    bytes: Vec<u8>,
+}
+
+impl FrameScratch {
+    /// Empty buffers (the reorder buffer sizes itself on first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Frame `bytes` stream-major into the reused frame (valid until the
+    /// next framing on this scratch).
+    pub fn stream_major(&mut self, bytes: &[u8], lanes: usize) -> &PacketFrame {
+        self.frame.pack_stream_major(bytes, lanes);
+        &self.frame
+    }
+
+    /// Frame `bytes` lane-major into the reused frame.
+    pub fn lane_major(&mut self, bytes: &[u8], lanes: usize) -> &PacketFrame {
+        self.frame.pack_lane_major(bytes, lanes);
+        &self.frame
+    }
+
+    /// Apply `perm` to `bytes` through the reused reorder buffer, then
+    /// frame the permuted packet stream-major — the telemetry probe's
+    /// per-ordering hot path.
+    pub fn permuted_stream_major(
+        &mut self,
+        perm: &[u16],
+        bytes: &[u8],
+        lanes: usize,
+    ) -> &PacketFrame {
+        crate::sortcore::apply_perm_into(perm, bytes, &mut self.bytes);
+        self.frame.pack_stream_major(&self.bytes, lanes);
+        &self.frame
+    }
+
+    /// Apply `perm` to `bytes` through the reused reorder buffer without
+    /// framing — the oversized-packet fallback for callers that stream
+    /// flits on the fly ([`super::Link::send_transfer_bytes`]) because
+    /// the payload exceeds [`MAX_FRAME_BYTES`].
+    pub fn permuted_bytes(&mut self, perm: &[u16], bytes: &[u8]) -> &[u8] {
+        crate::sortcore::apply_perm_into(perm, bytes, &mut self.bytes);
+        &self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::packet::Packet;
+    use super::*;
+    use crate::workload::Rng;
+    use crate::PACKET_FLITS;
+
+    fn flits_eq_packet(frame: &PacketFrame, packet: &Packet, lanes: usize) {
+        assert_eq!(frame.num_flits(), packet.num_flits());
+        for (pf, bf) in frame.flits().iter().zip(&packet.flits) {
+            for (i, &b) in bf.iter().enumerate() {
+                assert_eq!(pf.lane(i), b, "lane {i}");
+            }
+            for i in lanes..crate::FLIT_LANES {
+                assert_eq!(pf.lane(i), 0, "idle lane {i} must stay zero");
+            }
+        }
+    }
+
+    #[test]
+    fn standard_framing_matches_packet() {
+        let bytes: Vec<u8> = (0..PACKET_BYTES as u32).map(|i| i as u8).collect();
+        let f = PacketFrame::standard(&bytes);
+        assert_eq!(f.num_flits(), PACKET_FLITS);
+        flits_eq_packet(&f, &Packet::standard(&bytes), FLIT_LANES);
+        assert_eq!(f.to_bytes(FLIT_LANES), bytes);
+        assert_eq!(f.internal_bt(), Packet::standard(&bytes).internal_bt());
+    }
+
+    #[test]
+    fn stream_and_lane_major_match_packet_across_shapes() {
+        let mut rng = Rng::new(7);
+        for len in [0usize, 1, 5, 16, 20, 33, 64, 128] {
+            for lanes in [1usize, 3, 8, 16] {
+                if len.div_ceil(lanes) > MAX_FRAME_FLITS {
+                    continue;
+                }
+                let bytes: Vec<u8> = (0..len).map(|_| rng.next_u8()).collect();
+                let f = PacketFrame::from_bytes(&bytes, lanes);
+                let p = Packet::from_bytes(&bytes, lanes);
+                flits_eq_packet(&f, &p, lanes);
+                assert_eq!(f.internal_bt(), p.internal_bt(), "len {len} lanes {lanes}");
+                let f = PacketFrame::from_bytes_lane_major(&bytes, lanes);
+                let p = Packet::from_bytes_lane_major(&bytes, lanes);
+                flits_eq_packet(&f, &p, lanes);
+                assert_eq!(f.internal_bt(), p.internal_bt(), "lane-major {len}/{lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_major_pins_the_serpentine_mapping() {
+        // 8 bytes on 2 lanes frame into F = 4 flits; byte j rides flit
+        // j % 4, lane j / 4 (bytes 1..=4 down lane 0, 5..=8 down lane 1)
+        let f = PacketFrame::from_bytes_lane_major(&[1, 2, 3, 4, 5, 6, 7, 8], 2);
+        assert_eq!(f.num_flits(), 4);
+        let lanes: Vec<[u8; 2]> = f.flits().iter().map(|fl| [fl.lane(0), fl.lane(1)]).collect();
+        assert_eq!(lanes, vec![[1, 5], [2, 6], [3, 7], [4, 8]]);
+    }
+
+    #[test]
+    fn scratch_reuse_is_exact_across_shapes() {
+        let mut s = FrameScratch::new();
+        let mut rng = Rng::new(11);
+        // interleave shapes and framings so stale state would be caught
+        for len in [64usize, 5, 64, 20, 0, 33] {
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u8()).collect();
+            assert_eq!(*s.stream_major(&bytes, 16), PacketFrame::from_bytes(&bytes, 16));
+            assert_eq!(
+                *s.lane_major(&bytes, 16),
+                PacketFrame::from_bytes_lane_major(&bytes, 16)
+            );
+        }
+    }
+
+    #[test]
+    fn permuted_framing_matches_apply_perm() {
+        use crate::sortcore;
+        let mut s = FrameScratch::new();
+        let mut rng = Rng::new(13);
+        let bytes: Vec<u8> = (0..64).map(|_| rng.next_u8()).collect();
+        let mut perm = vec![0u16; 64];
+        sortcore::popcount_sort_into(&bytes, &mut perm);
+        let want = PacketFrame::from_bytes(&sortcore::apply_perm(&perm, &bytes), 16);
+        assert_eq!(*s.permuted_stream_major(&perm, &bytes, 16), want);
+    }
+
+    #[test]
+    #[should_panic(expected = "flits")]
+    fn oversized_streams_are_rejected() {
+        let _ = PacketFrame::from_bytes(&[0u8; 2 * MAX_FRAME_FLITS * FLIT_LANES], 16);
+    }
+}

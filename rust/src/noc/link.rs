@@ -5,10 +5,19 @@
 //! the previous flit; the paper extracts "the switching power of the
 //! transmission registers as a proxy for link power" (§IV-B4), so this
 //! register's toggle ledger *is* the link-related power measurement.
+//!
+//! The hot path is word-speed: flits arrive as [`PackedFlit`]s (two
+//! `u64` words) and every latch prices as two XOR + `count_ones`
+//! operations ([`crate::hw::ToggleGroup::latch_flit`]). The byte-lane
+//! [`Packet`] entry points remain as thin compatibility shims that pack
+//! each flit on the fly; `rust/tests/properties.rs` holds the word path
+//! bit-identical to the legacy byte-lane ledger.
 
 use crate::hw::{Tech, ToggleGroup};
 use crate::FLIT_LANES;
 
+use super::flit::PackedFlit;
+use super::frame::PacketFrame;
 use super::packet::Packet;
 
 /// A point-to-point on-chip link with BT accounting.
@@ -35,17 +44,66 @@ impl Link {
         }
     }
 
-    /// Transmit one flit; returns the bit transitions this flit caused.
-    pub fn send_flit(&mut self, flit: &[u8]) -> u64 {
-        debug_assert_eq!(flit.len(), self.lanes);
+    /// Transmit one packed flit; returns the bit transitions this flit
+    /// caused. The data-plane hot path: two XOR + `count_ones`.
+    ///
+    /// # Panics
+    /// On links wider than [`FLIT_LANES`] (a 128-bit word cannot carry
+    /// them) — wide links use the byte entry points ([`Link::send_flit`],
+    /// [`Link::send_bytes`], [`Link::send_transfer_bytes`]), which fall
+    /// back to byte latching. The same contract applies to
+    /// [`Link::send_frame`] and [`Link::send_transfer_frame`].
+    #[inline]
+    pub fn send_flit_packed(&mut self, flit: PackedFlit) -> u64 {
         let before = self.tx_reg.toggles;
-        self.tx_reg.latch_bytes(flit);
+        self.tx_reg.latch_flit(&flit.0, self.lanes);
         self.flits_sent += 1;
         self.tx_reg.toggles - before
     }
 
-    /// Transmit a whole packet; returns the bit transitions it caused
-    /// (including the boundary transition from the previous traffic).
+    /// Parallel-load one packed flit: overwrite the TX state without
+    /// counting the transition (the serializer's load path — see
+    /// [`Link::send_transfer_frame`]).
+    #[inline]
+    fn load_flit(&mut self, flit: PackedFlit) {
+        let before = self.tx_reg.toggles;
+        self.tx_reg.latch_flit(&flit.0, self.lanes);
+        self.tx_reg.toggles = before;
+        self.flits_sent += 1;
+    }
+
+    /// Parallel-load a byte-lane flit (wide-link compatible twin of
+    /// [`Link::load_flit`]).
+    fn load_bytes(&mut self, flit: &[u8]) {
+        let before = self.tx_reg.toggles;
+        self.tx_reg.latch_bytes(flit);
+        self.tx_reg.toggles = before;
+        self.flits_sent += 1;
+    }
+
+    /// Transmit one byte-lane flit (compatibility shim: packs the lanes
+    /// and delegates to the word path).
+    pub fn send_flit(&mut self, flit: &[u8]) -> u64 {
+        debug_assert_eq!(flit.len(), self.lanes);
+        if self.lanes > FLIT_LANES {
+            // wide links don't fit a 128-bit word; take the byte path
+            let before = self.tx_reg.toggles;
+            self.tx_reg.latch_bytes(flit);
+            self.flits_sent += 1;
+            return self.tx_reg.toggles - before;
+        }
+        self.send_flit_packed(PackedFlit::from_bytes(flit))
+    }
+
+    /// Transmit a whole frame under continuous-stream semantics: every
+    /// flit boundary counts, including the boundary from the previous
+    /// traffic on this link.
+    pub fn send_frame(&mut self, frame: &PacketFrame) -> u64 {
+        frame.flits().iter().map(|&f| self.send_flit_packed(f)).sum()
+    }
+
+    /// Transmit a whole byte-lane packet (continuous-stream semantics;
+    /// compatibility shim over the word path).
     pub fn send_packet(&mut self, packet: &Packet) -> u64 {
         packet.flits.iter().map(|f| self.send_flit(f)).sum()
     }
@@ -56,46 +114,53 @@ impl Link {
     /// boundaries toggle the TX register. This is the platform's link
     /// semantics (windows are independent transfers; the link idles
     /// between them).
+    pub fn send_transfer_frame(&mut self, frame: &PacketFrame) -> u64 {
+        let mut it = frame.flits().iter();
+        if let Some(&first) = it.next() {
+            self.load_flit(first);
+        }
+        it.map(|&f| self.send_flit_packed(f)).sum()
+    }
+
+    /// [`Link::send_transfer_frame`] semantics for a byte-lane [`Packet`]
+    /// (compatibility shim).
     pub fn send_transfer(&mut self, packet: &Packet) -> u64 {
         let mut it = packet.flits.iter();
         if let Some(first) = it.next() {
-            // parallel load: overwrite state without counting
-            let before = self.tx_reg.toggles;
-            self.tx_reg.latch_bytes(first);
-            self.tx_reg.toggles = before;
-            self.flits_sent += 1;
+            self.load_bytes(first);
         }
         it.map(|f| self.send_flit(f)).sum()
     }
 
-    /// Transmit a raw byte stream (framed into flits).
+    /// Transmit a raw byte stream, framing flits on the fly (tail
+    /// zero-padded exactly like [`PacketFrame::from_bytes`]) under
+    /// continuous-stream semantics — no intermediate packet or frame.
     pub fn send_bytes(&mut self, bytes: &[u8]) -> u64 {
-        self.send_packet(&Packet::from_bytes(bytes, self.lanes))
+        if self.lanes > FLIT_LANES {
+            return self.send_packet(&Packet::from_bytes(bytes, self.lanes));
+        }
+        let mut bt = 0;
+        for chunk in bytes.chunks(self.lanes) {
+            bt += self.send_flit_packed(PackedFlit::from_bytes(chunk));
+        }
+        bt
     }
 
-    /// [`Link::send_transfer`] semantics for a raw byte stream, framing
-    /// flits on the fly (tail zero-padded exactly like
-    /// [`Packet::from_bytes`]) without allocating the intermediate
-    /// [`Packet`] — the telemetry probe's per-packet hot path.
+    /// [`Link::send_transfer_frame`] semantics for a raw byte stream,
+    /// framing flits on the fly without materializing a frame — the
+    /// telemetry probe's original per-packet entry point, now word-speed.
     pub fn send_transfer_bytes(&mut self, bytes: &[u8]) -> u64 {
         if self.lanes > FLIT_LANES {
             // wide links are off the standard framing; take the slow path
             return self.send_transfer(&Packet::from_bytes(bytes, self.lanes));
         }
-        let mut flit = [0u8; FLIT_LANES];
-        let lanes = self.lanes;
         let mut bt = 0;
-        for (i, chunk) in bytes.chunks(lanes).enumerate() {
-            flit[..chunk.len()].copy_from_slice(chunk);
-            flit[chunk.len()..lanes].fill(0);
+        for (i, chunk) in bytes.chunks(self.lanes).enumerate() {
+            let flit = PackedFlit::from_bytes(chunk);
             if i == 0 {
-                // parallel load: overwrite state without counting
-                let before = self.tx_reg.toggles;
-                self.tx_reg.latch_bytes(&flit[..lanes]);
-                self.tx_reg.toggles = before;
-                self.flits_sent += 1;
+                self.load_flit(flit);
             } else {
-                bt += self.send_flit(&flit[..lanes]);
+                bt += self.send_flit_packed(flit);
             }
         }
         bt
@@ -167,6 +232,23 @@ mod tests {
     }
 
     #[test]
+    fn frame_and_packet_paths_leave_identical_ledgers() {
+        for len in [0usize, 5, 16, 20, 64] {
+            let bytes: Vec<u8> = (0..len).map(|i| (i as u8).wrapping_mul(91) ^ 0x3C).collect();
+            let mut a = Link::new("packet");
+            let mut b = Link::new("frame");
+            a.send_packet(&Packet::from_bytes(&bytes, 16));
+            b.send_frame(&PacketFrame::from_bytes(&bytes, 16));
+            assert_eq!(a.total_bt(), b.total_bt(), "len {len}");
+            assert_eq!(a.flits_sent, b.flits_sent, "len {len}");
+            let via_packet = a.send_transfer(&Packet::from_bytes(&bytes, 16));
+            let via_frame = b.send_transfer_frame(&PacketFrame::from_bytes(&bytes, 16));
+            assert_eq!(via_packet, via_frame, "len {len}");
+            assert_eq!(a.total_bt(), b.total_bt(), "len {len}");
+        }
+    }
+
+    #[test]
     fn energy_proportional_to_bt() {
         let tech = Tech::default();
         let mut link = Link::new("t");
@@ -202,6 +284,41 @@ mod tests {
             assert_eq!(a.total_bt(), b.total_bt(), "len {len}");
             assert_eq!(a.flits_sent, b.flits_sent, "len {len}");
         }
+    }
+
+    #[test]
+    fn send_bytes_matches_packet_path() {
+        for len in [0usize, 5, 16, 20, 64] {
+            let bytes: Vec<u8> = (0..len).map(|i| (i as u8).wrapping_mul(53) ^ 0x69).collect();
+            let mut a = Link::new("packet");
+            let mut b = Link::new("bytes");
+            a.send_packet(&Packet::from_bytes(&bytes, 16));
+            b.send_bytes(&bytes);
+            assert_eq!(a.total_bt(), b.total_bt(), "len {len}");
+            assert_eq!(a.flits_sent, b.flits_sent, "len {len}");
+        }
+    }
+
+    #[test]
+    fn wide_links_take_the_byte_path() {
+        // lanes > FLIT_LANES: the byte entry points fall back to byte
+        // latching with the same ledger semantics
+        let mut link = Link::new("wide");
+        link.lanes = 32;
+        assert_eq!(link.send_flit(&[0xFFu8; 32]), 256);
+        // two 32-byte zero flits: FF->0 flips 256, 0->0 flips none
+        assert_eq!(link.send_bytes(&[0u8; 64]), 256);
+        assert_eq!(link.total_bt(), 512);
+        assert_eq!(link.flits_sent, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "16 lanes")]
+    fn wide_links_reject_packed_flits() {
+        // a 128-bit word cannot carry a 32-lane flit: clear contract panic
+        let mut link = Link::new("wide");
+        link.lanes = 32;
+        link.send_flit_packed(PackedFlit::ZERO);
     }
 
     #[test]

@@ -1,17 +1,29 @@
 //! On-chip interconnect models.
 //!
+//! * [`flit`] — [`PackedFlit`], the 128-bit flit as two LSB-packed `u64`
+//!   words: one flit boundary prices as two XOR + `count_ones` operations.
+//! * [`frame`] — [`PacketFrame`], the fixed-capacity, heap-free framed
+//!   packet (stream-major and lane-major packing), plus the
+//!   [`FrameScratch`] reuse pattern for streaming callers.
 //! * [`link`] — the 128-bit point-to-point link of the paper's platform:
-//!   flit framing, a transmission register whose switching activity is the
-//!   link-power proxy (paper §IV-B4), and an exact bit-transition ledger.
-//! * [`packet`] — packet framing helpers (bytes ↔ flits).
+//!   a transmission register whose switching activity is the link-power
+//!   proxy (paper §IV-B4) and an exact bit-transition ledger, word-speed
+//!   on the frame path.
+//! * [`packet`] — the legacy byte-lane [`Packet`] framing, kept as a thin
+//!   shim where tests pin byte semantics (the property suite holds it
+//!   bit-identical to the packed frames).
 //! * [`multihop`] — router-to-router multi-hop paths (the paper's §IV-C3
 //!   discussion, built out as a real model): BT savings accumulate at each
 //!   hop because every traversal re-drives the wires.
 
+pub mod flit;
+pub mod frame;
 pub mod link;
 pub mod multihop;
 pub mod packet;
 
+pub use flit::{PackedFlit, FLIT_WORDS};
+pub use frame::{FrameScratch, PacketFrame, MAX_FRAME_BYTES, MAX_FRAME_FLITS};
 pub use link::Link;
 pub use multihop::MultiHopPath;
 pub use packet::{bytes_to_flits, Packet};

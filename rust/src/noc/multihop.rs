@@ -8,11 +8,15 @@
 //! order, each hop sees the same flit sequence and the per-hop BT is
 //! identical — total link energy is `h ×` the single-hop energy, which is
 //! exactly the scaling claim the `multihop` experiment quantifies.
+//!
+//! Hops consume [`PacketFrame`]s: the same `Copy`, heap-free frame is
+//! latched by every hop, so an `h`-hop traversal performs `h` word-speed
+//! replays of the frame and zero per-packet allocation.
 
 use crate::hw::Tech;
 
+use super::frame::PacketFrame;
 use super::link::Link;
-use super::packet::Packet;
 
 /// A chain of `h` identical links between source and destination.
 #[derive(Debug, Clone)]
@@ -35,15 +39,16 @@ impl MultiHopPath {
         self.hops.len()
     }
 
-    /// Send a packet across every hop; returns total BT summed over hops.
-    pub fn send_packet(&mut self, packet: &Packet) -> u64 {
-        self.hops.iter_mut().map(|l| l.send_packet(packet)).sum()
+    /// Send a framed packet across every hop under continuous-stream
+    /// semantics; returns total BT summed over hops.
+    pub fn send_frame(&mut self, frame: &PacketFrame) -> u64 {
+        self.hops.iter_mut().map(|l| l.send_frame(frame)).sum()
     }
 
     /// Send an independent transfer across every hop (per-packet BT
     /// semantics, matching Table I).
-    pub fn send_transfer(&mut self, packet: &Packet) -> u64 {
-        self.hops.iter_mut().map(|l| l.send_transfer(packet)).sum()
+    pub fn send_transfer(&mut self, frame: &PacketFrame) -> u64 {
+        self.hops.iter_mut().map(|l| l.send_transfer_frame(frame)).sum()
     }
 
     /// Total BT across all hops.
@@ -65,11 +70,11 @@ mod tests {
     fn per_hop_bt_identical_total_scales() {
         let mut p1 = MultiHopPath::new("a", 1);
         let mut p4 = MultiHopPath::new("b", 4);
-        let pkt1 = Packet::from_bytes(&[0xAA; 64], 16);
-        let pkt2 = Packet::from_bytes(&[0x55; 64], 16);
+        let pkt1 = PacketFrame::from_bytes(&[0xAA; 64], 16);
+        let pkt2 = PacketFrame::from_bytes(&[0x55; 64], 16);
         for pkt in [&pkt1, &pkt2, &pkt1] {
-            p1.send_packet(pkt);
-            p4.send_packet(pkt);
+            p1.send_frame(pkt);
+            p4.send_frame(pkt);
         }
         assert_eq!(p4.total_bt(), 4 * p1.total_bt());
         let per_hop: Vec<u64> = p4.hops.iter().map(|l| l.total_bt()).collect();
@@ -80,7 +85,7 @@ mod tests {
     fn energy_scales_with_hops() {
         let tech = Tech::default();
         let mut p = MultiHopPath::new("p", 3);
-        p.send_packet(&Packet::from_bytes(&[0xFF; 64], 16));
+        p.send_frame(&PacketFrame::from_bytes(&[0xFF; 64], 16));
         let e = p.energy_j(&tech);
         assert!(e > 0.0);
         assert!((e / p.hops[0].energy_j(&tech) - 3.0).abs() < 1e-9);

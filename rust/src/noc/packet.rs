@@ -1,4 +1,11 @@
-//! Packet and flit framing.
+//! Legacy byte-lane packet framing, kept as a thin compatibility shim.
+//!
+//! The data plane proper is [`super::frame::PacketFrame`] (packed
+//! `[u64; 2]` flits, heap-free); this byte-lane representation survives
+//! only where tests pin byte semantics and as the oracle the property
+//! suite holds the word path bit-identical to
+//! (`rust/tests/properties.rs`). New code should frame through
+//! [`super::frame::PacketFrame`] / [`super::frame::FrameScratch`].
 
 use crate::{FLIT_LANES, PACKET_BYTES};
 #[cfg(test)]
@@ -96,6 +103,20 @@ mod tests {
         let p = Packet::from_bytes(&[0xFF; 20], 16);
         assert_eq!(p.num_flits(), 2);
         assert_eq!(p.flits[1][4..], [0u8; 12]);
+    }
+
+    #[test]
+    fn lane_major_pins_the_serpentine_mapping() {
+        // Hand-computed 8-byte / 2-lane example: F = ceil(8 / 2) = 4
+        // flits, and byte j rides flit j % F, lane j / F — so bytes
+        // 1..=4 run down lane 0 of flits 0..=3, then 5..=8 wrap onto
+        // lane 1. This pins the doc-comment mapping so the serpentine
+        // can't silently change during representation ports.
+        let p = Packet::from_bytes_lane_major(&[1, 2, 3, 4, 5, 6, 7, 8], 2);
+        assert_eq!(p.flits, vec![vec![1, 5], vec![2, 6], vec![3, 7], vec![4, 8]]);
+        // a ragged tail pads the unreachable slots with zero
+        let p = Packet::from_bytes_lane_major(&[1, 2, 3], 2);
+        assert_eq!(p.flits, vec![vec![1, 3], vec![2, 0]]);
     }
 
     #[test]

@@ -22,8 +22,9 @@
 //! aggregate.
 
 use crate::hw::{Tech, ToggleLedger};
-use crate::noc::{Link, Packet};
+use crate::noc::{Link, PacketFrame};
 use crate::pe::Pe;
+use crate::sortcore;
 use crate::psu::SorterUnit;
 use crate::workload::lenet::{
     self, QuantWeights, K, OH, OUT_MAPS, OW,
@@ -149,11 +150,15 @@ impl Platform {
         weights: &QuantWeights,
     ) -> Vec<Vec<Vec<i32>>> {
         let mut conv = vec![vec![vec![0i32; OW]; OH]; OUT_MAPS];
+        // per-window payload buffers reused across the whole image
+        let mut sin: Vec<u8> = Vec::with_capacity(K);
+        let mut sw: Vec<u8> = Vec::with_capacity(K);
         for pe_id in 0..NUM_PES {
             // weight-stationary: load this vector's taps once per PE
             for m in 0..OUT_MAPS {
-                self.weight_links[pe_id]
-                    .send_transfer(&Packet::from_bytes_lane_major(&weights.bytes[m], 16));
+                self.weight_links[pe_id].send_transfer_frame(
+                    &PacketFrame::from_bytes_lane_major(&weights.bytes[m], 16),
+                );
             }
             for &(oy, ox) in &lenet::windows_for_pe(pe_id, NUM_PES) {
                 let win = lenet::window(img, oy, ox);
@@ -169,13 +174,12 @@ impl Platform {
                 // 3. transmit permuted input window once per window; the
                 //    transmitting unit fills lanes serpentine (lane-major)
                 //    so adjacent sorted elements ride the same lane
-                let sin: Vec<u8> = idx.iter().map(|&i| win[i as usize]).collect();
+                sortcore::apply_perm_into(&idx, &win, &mut sin);
                 self.input_links[pe_id]
-                    .send_transfer(&Packet::from_bytes_lane_major(&sin, 16));
+                    .send_transfer_frame(&PacketFrame::from_bytes_lane_major(&sin, 16));
                 // per output map: MAC against index-addressed resident taps
                 for m in 0..OUT_MAPS {
-                    let sw: Vec<u8> =
-                        idx.iter().map(|&i| weights.bytes[m][i as usize]).collect();
+                    sortcore::apply_perm_into(&idx, &weights.bytes[m], &mut sw);
                     let out =
                         self.pes[pe_id].conv_window(&sin, &sw, weights.bias[m]);
                     conv[m][oy][ox] = out;

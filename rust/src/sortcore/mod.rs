@@ -136,6 +136,15 @@ pub fn apply_perm(perm: &[u16], values: &[u8]) -> Vec<u8> {
     perm.iter().map(|&i| values[i as usize]).collect()
 }
 
+/// Apply a permutation into a reused buffer (cleared first):
+/// the zero-allocation twin of [`apply_perm`] for streaming callers
+/// (the telemetry probe and the traffic generator reorder through one
+/// buffer per stream).
+pub fn apply_perm_into(perm: &[u16], values: &[u8], out: &mut Vec<u8>) {
+    out.clear();
+    out.extend(perm.iter().map(|&i| values[i as usize]));
+}
+
 /// Reusable permutation buffer for streaming callers: one heap allocation
 /// on first use (growth only afterwards), then every packet sorts through
 /// [`sort_into_by`] with zero per-packet allocation.

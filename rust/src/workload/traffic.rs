@@ -237,12 +237,20 @@ fn stream_col_major(field: &[Vec<u8>]) -> Vec<u8> {
 }
 
 impl Trace {
-    /// Stream the trace under a strategy into paired 64-byte packets.
+    /// Stream the trace under a strategy, visiting every paired 64-byte
+    /// packet with **zero per-packet heap allocation**: the sort
+    /// permutation and both reordered payloads live in buffers reused
+    /// across the whole trace (the [`SortScratch`] pattern). The visitor
+    /// receives `(input, weight)` and returns `false` to stop early.
     ///
     /// ACC/APP packets are permuted by the [`sortcore`] scatter keyed on
-    /// the input byte, the paired weight byte following its input; one
-    /// scratch buffer is reused across every packet of the trace.
-    pub fn packets(&self, strategy: OrderStrategy) -> Vec<PacketPair> {
+    /// the input byte, the paired weight byte following its input.
+    /// [`Trace::packets`] is the allocating convenience wrapper.
+    pub fn for_each_packet(
+        &self,
+        strategy: OrderStrategy,
+        mut visit: impl FnMut(&[u8], &[u8]) -> bool,
+    ) {
         let (istream, wstream) = match strategy {
             OrderStrategy::NonOptimized => (
                 stream_row_major(&self.input_field),
@@ -255,24 +263,39 @@ impl Trace {
         };
         let map = BucketMap::paper_k4();
         let mut scratch = SortScratch::new();
-        let mut out = Vec::with_capacity(istream.len() / PACKET_BYTES);
+        let mut ibuf = Vec::new();
+        let mut wbuf = Vec::new();
         for (i, w) in istream
             .chunks_exact(PACKET_BYTES)
             .zip(wstream.chunks_exact(PACKET_BYTES))
         {
-            let perm = match strategy {
-                OrderStrategy::NonOptimized | OrderStrategy::ColumnMajor => {
-                    out.push(PacketPair { input: i.to_vec(), weight: w.to_vec() });
-                    continue;
+            let keep_going = match strategy {
+                OrderStrategy::NonOptimized | OrderStrategy::ColumnMajor => visit(i, w),
+                OrderStrategy::Acc | OrderStrategy::App => {
+                    let perm = match strategy {
+                        OrderStrategy::Acc => scratch.popcount_sort(i),
+                        _ => scratch.bucket_sort(i, &map),
+                    };
+                    sortcore::apply_perm_into(perm, i, &mut ibuf);
+                    sortcore::apply_perm_into(perm, w, &mut wbuf);
+                    visit(&ibuf, &wbuf)
                 }
-                OrderStrategy::Acc => scratch.popcount_sort(i),
-                OrderStrategy::App => scratch.bucket_sort(i, &map),
             };
-            out.push(PacketPair {
-                input: sortcore::apply_perm(perm, i),
-                weight: sortcore::apply_perm(perm, w),
-            });
+            if !keep_going {
+                return;
+            }
         }
+    }
+
+    /// Stream the trace under a strategy into paired 64-byte packets
+    /// (allocating wrapper over [`Trace::for_each_packet`]; hot loops
+    /// stream through the visitor instead).
+    pub fn packets(&self, strategy: OrderStrategy) -> Vec<PacketPair> {
+        let mut out = Vec::new();
+        self.for_each_packet(strategy, |i, w| {
+            out.push(PacketPair { input: i.to_vec(), weight: w.to_vec() });
+            true
+        });
         out
     }
 }
@@ -341,6 +364,30 @@ mod tests {
             cp.sort_unstable();
             ap.sort_unstable();
             assert_eq!(cp, ap);
+        }
+    }
+
+    #[test]
+    fn for_each_packet_matches_collected_packets_and_stops_early() {
+        let m = mini_model();
+        let t = m.gen_trace(&mut Rng::new(13));
+        for s in OrderStrategy::all() {
+            let collected = t.packets(s);
+            let mut streamed = 0usize;
+            t.for_each_packet(s, |i, w| {
+                assert_eq!(i, &collected[streamed].input[..], "{s:?} packet {streamed}");
+                assert_eq!(w, &collected[streamed].weight[..], "{s:?} packet {streamed}");
+                streamed += 1;
+                true
+            });
+            assert_eq!(streamed, collected.len(), "{s:?}");
+            // early stop: the visitor's `false` halts the stream
+            let mut seen = 0usize;
+            t.for_each_packet(s, |_, _| {
+                seen += 1;
+                seen < 3
+            });
+            assert_eq!(seen, 3, "{s:?}");
         }
     }
 

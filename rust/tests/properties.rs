@@ -279,6 +279,105 @@ fn link_probe_matches_link_ledger() {
     }
 }
 
+/// Tentpole equivalence: the packed word-level data plane is bit-identical
+/// to the legacy byte-lane ledger — across randomized streams, all four
+/// Table-I ordering strategies, and both framings (stream-major and
+/// lane-major). Checks, per packet and cumulatively:
+///
+/// * [`PacketFrame`] internal BT equals the byte-lane [`Packet`] oracle;
+/// * a word-path [`Link`] transfer ledger equals an explicit byte-latching
+///   [`ToggleGroup`] ledger fed the same flits with the same parallel-load
+///   transfer semantics.
+#[test]
+fn packed_data_plane_matches_byte_lane_ledger() {
+    use repro::hw::ToggleGroup;
+    use repro::noc::{FrameScratch, PacketFrame};
+    use repro::workload::{OrderStrategy, TrafficModel};
+
+    // the legacy ledger: byte-lane latches, first flit parallel-loaded
+    fn byte_transfer(reg: &mut ToggleGroup, packet: &Packet) -> u64 {
+        let mut bt = 0;
+        for (i, flit) in packet.flits.iter().enumerate() {
+            let before = reg.toggles;
+            reg.latch_bytes(flit);
+            if i == 0 {
+                reg.toggles = before;
+            } else {
+                bt += reg.toggles - before;
+            }
+        }
+        bt
+    }
+
+    let model = TrafficModel { height: 64, width: 64, ..TrafficModel::default() };
+    let mut rng = Rng::new(4242);
+    for strategy in OrderStrategy::all() {
+        let trace = model.gen_trace(&mut rng);
+        let mut frames = FrameScratch::new();
+        let mut link_sm = Link::new("word.stream");
+        let mut link_lm = Link::new("word.lane");
+        let mut oracle_sm = ToggleGroup::default();
+        let mut oracle_lm = ToggleGroup::default();
+        let mut n = 0usize;
+        trace.for_each_packet(strategy, |input, weight| {
+            for bytes in [input, weight] {
+                let packet_sm = Packet::from_bytes(bytes, FLIT_LANES);
+                let frame_sm = *frames.stream_major(bytes, FLIT_LANES);
+                assert_eq!(
+                    frame_sm.internal_bt(),
+                    packet_sm.internal_bt(),
+                    "{strategy:?}: stream-major internal BT diverged"
+                );
+                assert_eq!(
+                    link_sm.send_transfer_frame(&frame_sm),
+                    byte_transfer(&mut oracle_sm, &packet_sm),
+                    "{strategy:?}: stream-major transfer BT diverged"
+                );
+                let packet_lm = Packet::from_bytes_lane_major(bytes, FLIT_LANES);
+                let frame_lm = *frames.lane_major(bytes, FLIT_LANES);
+                assert_eq!(
+                    frame_lm.internal_bt(),
+                    packet_lm.internal_bt(),
+                    "{strategy:?}: lane-major internal BT diverged"
+                );
+                assert_eq!(
+                    link_lm.send_transfer_frame(&frame_lm),
+                    byte_transfer(&mut oracle_lm, &packet_lm),
+                    "{strategy:?}: lane-major transfer BT diverged"
+                );
+            }
+            n += 1;
+            n < 24 // enough traffic to accumulate non-trivial ledgers
+        });
+        // cumulative ledgers must agree exactly, not just per packet
+        assert_eq!(link_sm.total_bt(), oracle_sm.toggles, "{strategy:?}: cumulative");
+        assert_eq!(link_lm.total_bt(), oracle_lm.toggles, "{strategy:?}: cumulative");
+        assert!(link_sm.total_bt() > 0, "{strategy:?}: degenerate all-zero stream");
+    }
+
+    // ragged tails and narrow lanes: random lengths exercise the zero
+    // padding both framings apply
+    for case in 0..CASES {
+        let len = 1 + rng.next_below(120);
+        let lanes = [3usize, 8, 16][rng.next_below(3)];
+        if len.div_ceil(lanes) > repro::noc::MAX_FRAME_FLITS {
+            continue;
+        }
+        let bytes = random_values(&mut rng, len);
+        let ctx = format!("case {case}: len {len} lanes {lanes}");
+        assert_eq!(
+            PacketFrame::from_bytes(&bytes, lanes).internal_bt(),
+            Packet::from_bytes(&bytes, lanes).internal_bt(),
+            "{ctx} stream-major"
+        );
+        assert_eq!(
+            PacketFrame::from_bytes_lane_major(&bytes, lanes).internal_bt(),
+            Packet::from_bytes_lane_major(&bytes, lanes).internal_bt(),
+            "{ctx} lane-major"
+        );
+    }
+}
+
 /// Lane-major framing is a bijection on packet bytes.
 #[test]
 fn lane_major_framing_preserves_bytes() {

@@ -10,11 +10,13 @@
 //! adaptive policy against the bare serving path.
 //!
 //! Set `BENCHUTIL_JSON=path.json` to dump every measurement as JSON
-//! (uploaded as a CI artifact — the BENCH_* trajectory; the telemetry
-//! overhead and the byte-vs-word `packet_bt_throughput_speedup` also land
-//! there as scalars, so both are tracked across PRs). Set `BENCH_SMOKE=1`
-//! to shrink every scenario to CI-smoke sizes (trajectory, not
-//! precision).
+//! (compared against the committed `BENCH_hotpath.json` baseline by the
+//! `bench-gate` CI step; the telemetry overhead, the byte-vs-word
+//! `packet_bt_throughput_speedup`, the per-boundary-vs-block
+//! `packet_bt_block_speedup`, and the sequential-vs-parallel
+//! `psu_sort_parallel_speedup` also land there as scalars, so all are
+//! tracked across PRs). Set `BENCH_SMOKE=1` to shrink every scenario to
+//! CI-smoke sizes (trajectory, not precision).
 
 use std::time::Duration;
 
@@ -104,8 +106,32 @@ fn main() {
         let speedup = m_old.median.as_secs_f64() / m_new.median.as_secs_f64();
         println!("  -> packet_bt_throughput: {speedup:.2}x (packed vs byte lanes)");
         scalars.push(("packet_bt_throughput_speedup", speedup));
+
+        // the same packed words priced one boundary at a time — the PR 5
+        // data plane, written inline so it survives as an oracle after the
+        // library's internal_bt moved to the shifted block kernel
+        let m_bound = bench("packet_bt_throughput per-boundary words", 2, iters(50), || {
+            mix.iter()
+                .map(|b| {
+                    let f = PacketFrame::standard(b);
+                    f.flits().windows(2).map(|w| w[0].transitions(w[1]) as u64).sum::<u64>()
+                })
+                .sum::<u64>()
+        });
+        let bt_bound: u64 = mix
+            .iter()
+            .map(|b| {
+                let f = PacketFrame::standard(b);
+                f.flits().windows(2).map(|w| w[0].transitions(w[1]) as u64).sum::<u64>()
+            })
+            .sum();
+        assert_eq!(bt_bound, bt_new, "block kernel disagrees with per-boundary pricing");
+        let block_speedup = m_bound.median.as_secs_f64() / m_new.median.as_secs_f64();
+        println!("  -> packet_bt block kernel: {block_speedup:.2}x (vs per-boundary words)");
+        scalars.push(("packet_bt_block_speedup", block_speedup));
         all.push(m_old);
         all.push(m_new);
+        all.push(m_bound);
     }
 
     // BT counting alone, word path (frames prebuilt)
@@ -137,12 +163,36 @@ fn main() {
             "  -> {:.2} Mpackets/s via backend",
             m.per_second(BT_BATCH as u64) / 1e6
         );
+
+        // the same batch fanned out across the shard-local worker budget
+        // (bit-identical output; the delta is pure parallel speedup)
+        let workers = repro::sortcore::available_workers().min(4);
+        let bep = ReferenceBackend::with_workers(workers);
+        assert_eq!(
+            bep.psu_sort(&xs).unwrap(),
+            be.psu_sort(&xs).unwrap(),
+            "parallel psu_sort is not bit-identical to sequential"
+        );
+        let m_par = bench("ReferenceBackend psu_sort parallel (256-packet batch)", 2, iters(10), || {
+            bep.psu_sort(&xs).unwrap()
+        });
+        println!(
+            "  -> {:.2} Mpackets/s via backend ({workers} workers)",
+            m_par.per_second(BT_BATCH as u64) / 1e6
+        );
+        let par_speedup = m.median.as_secs_f64() / m_par.median.as_secs_f64();
+        println!("  -> psu_sort parallel: {par_speedup:.2}x (vs sequential)");
+        scalars.push(("psu_sort_parallel_speedup", par_speedup));
         all.push(m);
+        all.push(m_par);
     }
 
     // serve_throughput: the public sharded SortService API under concurrent
-    // clients, 1 shard vs 4 shards (acceptance: >= 2x req/s on a 4+ core
-    // host; per-request results stay popcount-sorted permutations).
+    // clients at 1, 4, and 8 shards (acceptance: >= 2x req/s at 4 shards on
+    // a 4+ core host; per-request results stay popcount-sorted
+    // permutations). Each shard's backend sizes its own sort worker pool
+    // via workers_per_shard, so the 8-shard point also exercises the
+    // intra-shard parallel sortcore.
     {
         use repro::runtime::PACKET_ELEMS;
         let reqs: Vec<[u8; PACKET_ELEMS]> = (0..n_reqs)
@@ -153,7 +203,7 @@ fn main() {
             })
             .collect();
         let mut per_shard_rps = Vec::new();
-        for shards in [1usize, 4] {
+        for shards in [1usize, 4, 8] {
             let svc = SortService::spawn_reference_sharded(shards, Duration::from_micros(200))
                 .expect("spawn service");
             let clients = 8;
@@ -193,8 +243,13 @@ fn main() {
                 resp.acc_indices.iter().map(|&i| reqs[0][i as usize].count_ones()).collect();
             assert!(keys.windows(2).all(|w| w[0] <= w[1]), "serve reply not sorted");
         }
-        if let [(_, one), (_, four)] = per_shard_rps[..] {
-            println!("  -> serve_throughput scaling: {:.2}x (4 shards vs 1)", four / one);
+        if let Some(&(_, one)) = per_shard_rps.first() {
+            for &(shards, rps) in &per_shard_rps[1..] {
+                println!(
+                    "  -> serve_throughput scaling: {:.2}x ({shards} shards vs 1)",
+                    rps / one
+                );
+            }
         }
     }
 

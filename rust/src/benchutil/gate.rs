@@ -1,0 +1,656 @@
+//! Bench regression gate: compare a fresh benchutil JSON document against a
+//! committed `BENCH_*.json` baseline and fail when throughput drops.
+//!
+//! CI runs the smoke benches (`BENCH_SMOKE=1`), then
+//! `repro bench-gate --fresh bench-hotpath.json --baseline BENCH_hotpath.json`
+//! renders a per-scenario delta table and exits non-zero when any gated
+//! scenario regresses by more than the tolerance (default 10%).
+//!
+//! Gating rules:
+//!
+//! * **Measurements** are timings — lower is better. The throughput ratio
+//!   `baseline_median / fresh_median - 1` must not fall below `-tolerance`.
+//! * **Scalars** are gated only when the name marks them as
+//!   higher-is-better (`*_per_s`, `*_speedup`); the ratio
+//!   `fresh / baseline - 1` must not fall below `-tolerance`. All other
+//!   scalars (counts, ratios without a direction) are informational.
+//! * A baseline scenario **missing** from the fresh run is a warning row,
+//!   not a failure (smoke runs may legitimately skip scenarios), but a run
+//!   with **zero** gated comparisons fails outright — an empty fresh file
+//!   must never pass the gate.
+//!
+//! The JSON reader is a minimal hand-rolled parser (this crate vendors no
+//! serde); it handles the full JSON grammar the [`super::json_document`]
+//! writer and external tools can produce.
+
+use anyhow::{bail, Context, Result};
+
+/// Default regression tolerance: a gated scenario may lose up to 10%
+/// throughput before the gate fails.
+pub const DEFAULT_TOLERANCE: f64 = 0.10;
+
+// ---------------------------------------------------------------------------
+// Minimal JSON parser
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value (numbers as f64, objects in source order).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any number.
+    Num(f64),
+    /// A string (escapes decoded).
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, preserving key order.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Member lookup on an object (first match), `None` otherwise.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The number inside, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The string inside, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one JSON document (trailing whitespace allowed, nothing else).
+pub fn parse_json(text: &str) -> Result<Json> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing garbage at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .with_context(|| format!("unexpected end of input at byte {}", self.pos))
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.peek()?;
+        if got != b {
+            bail!("expected '{}' at byte {}, found '{}'", b as char, self.pos, got as char);
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut members = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(members));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            members.push((key, self.value()?));
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(members));
+                }
+                c => bail!("expected ',' or '}}' at byte {}, found '{}'", self.pos, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => bail!("expected ',' or ']' at byte {}, found '{}'", self.pos, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let b = self.peek()?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{0008}'),
+                        b'f' => s.push('\u{000C}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .context("truncated \\u escape")?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).context("non-ASCII \\u escape")?,
+                                16,
+                            )
+                            .context("invalid \\u escape")?;
+                            self.pos += 4;
+                            // benchutil never writes surrogate pairs; map
+                            // unpaired surrogates to the replacement char.
+                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        c => bail!("invalid escape '\\{}' at byte {}", c as char, self.pos),
+                    }
+                }
+                _ => {
+                    // Re-walk the UTF-8 sequence starting at b.
+                    let start = self.pos - 1;
+                    let len = match b {
+                        0x00..=0x7F => 1,
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    let chunk = self
+                        .bytes
+                        .get(start..start + len)
+                        .context("truncated UTF-8 sequence")?;
+                    s.push_str(std::str::from_utf8(chunk).context("invalid UTF-8 in string")?);
+                    self.pos = start + len;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if matches!(b, b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let n: f64 = text
+            .parse()
+            .with_context(|| format!("invalid number '{text}' at byte {start}"))?;
+        Ok(Json::Num(n))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bench documents
+// ---------------------------------------------------------------------------
+
+/// One parsed benchutil document: scenario medians plus free-form scalars.
+#[derive(Debug, Clone, Default)]
+pub struct BenchDoc {
+    /// `(scenario name, median ns)` in file order.
+    pub measurements: Vec<(String, f64)>,
+    /// `(name, value)` in file order; `None` was a JSON `null` (non-finite).
+    pub scalars: Vec<(String, Option<f64>)>,
+}
+
+impl BenchDoc {
+    /// Parse a [`super::json_document`]-shaped string.
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = parse_json(text)?;
+        let mut doc = BenchDoc::default();
+        if let Some(Json::Arr(ms)) = root.get("measurements") {
+            for m in ms {
+                let name = m
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("measurement without a name")?
+                    .to_string();
+                let median = m
+                    .get("median_ns")
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("measurement {name:?} without median_ns"))?;
+                doc.measurements.push((name, median));
+            }
+        }
+        if let Some(Json::Obj(ss)) = root.get("scalars") {
+            for (k, v) in ss {
+                doc.scalars.push((k.clone(), v.as_f64()));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Read and parse a benchutil JSON file.
+    pub fn load(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::parse(&text).with_context(|| format!("parsing {path}"))
+    }
+
+    fn measurement(&self, name: &str) -> Option<f64> {
+        self.measurements.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    fn scalar(&self, name: &str) -> Option<Option<f64>> {
+        self.scalars.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
+/// A scalar is gated (higher-is-better) only when its name says so;
+/// everything else is informational (counts, sizes, free-form ratios).
+fn scalar_is_gated(name: &str) -> bool {
+    name.ends_with("_per_s") || name.ends_with("_speedup")
+}
+
+// ---------------------------------------------------------------------------
+// The gate
+// ---------------------------------------------------------------------------
+
+/// The verdict for one scenario row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Gated and within tolerance.
+    Pass,
+    /// Gated and regressed beyond tolerance.
+    Fail,
+    /// In the baseline but missing from the fresh run.
+    Missing,
+    /// Compared for the table but never gated.
+    Info,
+}
+
+impl Verdict {
+    fn label(self) -> &'static str {
+        match self {
+            Verdict::Pass => "ok",
+            Verdict::Fail => "FAIL",
+            Verdict::Missing => "missing",
+            Verdict::Info => "info",
+        }
+    }
+}
+
+/// One row of the delta table.
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// Scenario or scalar name.
+    pub name: String,
+    /// Committed baseline value (median ns for measurements).
+    pub baseline: Option<f64>,
+    /// Fresh-run value.
+    pub fresh: Option<f64>,
+    /// Throughput delta (`+0.08` = 8% faster than baseline).
+    pub delta: Option<f64>,
+    /// Gate verdict for this row.
+    pub verdict: Verdict,
+}
+
+/// The gate's full result: every row plus the aggregate verdict.
+#[derive(Debug, Clone)]
+pub struct GateReport {
+    /// All rows, baseline order (measurements then scalars).
+    pub rows: Vec<Row>,
+    /// Gated comparisons actually made (pass + fail).
+    pub compared: usize,
+    /// Tolerance the verdicts used.
+    pub tolerance: f64,
+}
+
+impl GateReport {
+    /// True when no gated scenario regressed and at least one was compared.
+    pub fn passed(&self) -> bool {
+        self.compared > 0 && self.rows.iter().all(|r| r.verdict != Verdict::Fail)
+    }
+
+    /// Names of the regressed scenarios.
+    pub fn failures(&self) -> Vec<&str> {
+        self.rows
+            .iter()
+            .filter(|r| r.verdict == Verdict::Fail)
+            .map(|r| r.name.as_str())
+            .collect()
+    }
+
+    /// Render the per-scenario delta table (one row per baseline scenario).
+    pub fn render(&self) -> String {
+        let width = self
+            .rows
+            .iter()
+            .map(|r| r.name.len())
+            .chain(std::iter::once("scenario".len()))
+            .max()
+            .unwrap_or(8);
+        let mut s = format!(
+            "{:<width$}  {:>14}  {:>14}  {:>8}  verdict\n",
+            "scenario", "baseline", "fresh", "delta"
+        );
+        for r in &self.rows {
+            let fmt = |v: Option<f64>| match v {
+                Some(x) => format!("{x:.1}"),
+                None => "-".to_string(),
+            };
+            let delta = match r.delta {
+                Some(d) => format!("{:+.1}%", 100.0 * d),
+                None => "-".to_string(),
+            };
+            s.push_str(&format!(
+                "{:<width$}  {:>14}  {:>14}  {:>8}  {}\n",
+                r.name,
+                fmt(r.baseline),
+                fmt(r.fresh),
+                delta,
+                r.verdict.label()
+            ));
+        }
+        s.push_str(&format!(
+            "{} gated comparison(s), tolerance {:.0}%\n",
+            self.compared,
+            100.0 * self.tolerance
+        ));
+        s
+    }
+}
+
+/// Compare a fresh run against a committed baseline.
+///
+/// Every baseline scenario produces a row; fresh-only scenarios are
+/// ignored (new benches land in the baseline when blessed). See the
+/// module docs for the gating rules.
+pub fn compare(baseline: &BenchDoc, fresh: &BenchDoc, tolerance: f64) -> GateReport {
+    let mut rows = Vec::new();
+    let mut compared = 0usize;
+    for (name, base) in &baseline.measurements {
+        let row = match fresh.measurement(name) {
+            Some(f) if f > 0.0 && *base > 0.0 => {
+                compared += 1;
+                // medians are timings: throughput delta inverts the ratio
+                let delta = base / f - 1.0;
+                Row {
+                    name: name.clone(),
+                    baseline: Some(*base),
+                    fresh: Some(f),
+                    delta: Some(delta),
+                    verdict: if delta < -tolerance { Verdict::Fail } else { Verdict::Pass },
+                }
+            }
+            Some(f) => Row {
+                name: name.clone(),
+                baseline: Some(*base),
+                fresh: Some(f),
+                delta: None,
+                verdict: Verdict::Info,
+            },
+            None => Row {
+                name: name.clone(),
+                baseline: Some(*base),
+                fresh: None,
+                delta: None,
+                verdict: Verdict::Missing,
+            },
+        };
+        rows.push(row);
+    }
+    for (name, base) in &baseline.scalars {
+        let fresh_v = fresh.scalar(name);
+        let row = match (base, fresh_v) {
+            (Some(b), Some(Some(f))) if scalar_is_gated(name) && *b > 0.0 && f > 0.0 => {
+                compared += 1;
+                let delta = f / b - 1.0;
+                Row {
+                    name: name.clone(),
+                    baseline: Some(*b),
+                    fresh: Some(f),
+                    delta: Some(delta),
+                    verdict: if delta < -tolerance { Verdict::Fail } else { Verdict::Pass },
+                }
+            }
+            (_, None) => Row {
+                name: name.clone(),
+                baseline: *base,
+                fresh: None,
+                delta: None,
+                verdict: Verdict::Missing,
+            },
+            (_, Some(f)) => Row {
+                name: name.clone(),
+                baseline: *base,
+                fresh: f,
+                delta: None,
+                verdict: Verdict::Info,
+            },
+        };
+        rows.push(row);
+    }
+    GateReport { rows, compared, tolerance }
+}
+
+/// Load both files and compare; the CLI's `bench-gate` entry point.
+pub fn run_gate(fresh_path: &str, baseline_path: &str, tolerance: f64) -> Result<GateReport> {
+    let baseline = BenchDoc::load(baseline_path)?;
+    let fresh = BenchDoc::load(fresh_path)?;
+    Ok(compare(&baseline, &fresh, tolerance))
+}
+
+/// Bless a fresh run: copy it over the committed baseline (after checking
+/// it parses — a truncated file must never become the baseline).
+pub fn bless(fresh_path: &str, baseline_path: &str) -> Result<()> {
+    BenchDoc::load(fresh_path)?;
+    std::fs::copy(fresh_path, baseline_path)
+        .with_context(|| format!("copying {fresh_path} over {baseline_path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(measurements: &[(&str, f64)], scalars: &[(&str, Option<f64>)]) -> BenchDoc {
+        BenchDoc {
+            measurements: measurements.iter().map(|&(n, v)| (n.to_string(), v)).collect(),
+            scalars: scalars.iter().map(|&(n, v)| (n.to_string(), v)).collect(),
+        }
+    }
+
+    #[test]
+    fn parses_benchutil_documents() {
+        let m = crate::benchutil::Measurement {
+            name: "sort \"fast\"".into(),
+            iters: 3,
+            median: std::time::Duration::from_nanos(1500),
+            mean: std::time::Duration::from_nanos(1600),
+            min: std::time::Duration::from_nanos(1400),
+        };
+        let text = crate::benchutil::json_document(
+            &[m],
+            &[("req_per_s", 1234.5), ("bad", f64::NAN)],
+        );
+        let doc = BenchDoc::parse(&text).unwrap();
+        assert_eq!(doc.measurements, vec![("sort \"fast\"".to_string(), 1500.0)]);
+        assert_eq!(doc.scalar("req_per_s"), Some(Some(1234.5)));
+        assert_eq!(doc.scalar("bad"), Some(None), "NaN serializes as null");
+    }
+
+    #[test]
+    fn parser_covers_the_json_grammar() {
+        let v = parse_json(
+            "  {\"a\": [1, -2.5e3, true, false, null], \"b\\n\": \"q\\u0041\\\\\"} ",
+        )
+        .unwrap();
+        assert_eq!(
+            v.get("a"),
+            Some(&Json::Arr(vec![
+                Json::Num(1.0),
+                Json::Num(-2500.0),
+                Json::Bool(true),
+                Json::Bool(false),
+                Json::Null,
+            ]))
+        );
+        assert_eq!(v.get("b\n").and_then(Json::as_str), Some("qA\\"));
+        assert!(parse_json("{\"a\":1} x").is_err(), "trailing garbage");
+        assert!(parse_json("{\"a\":").is_err(), "truncated");
+        assert!(parse_json("").is_err(), "empty");
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = doc(&[("hot", 1000.0)], &[("req_per_s", 100.0)]);
+        let fresh = doc(&[("hot", 1080.0)], &[("req_per_s", 93.0)]);
+        let r = compare(&base, &fresh, DEFAULT_TOLERANCE);
+        assert!(r.passed(), "{}", r.render());
+        assert_eq!(r.compared, 2);
+    }
+
+    #[test]
+    fn regression_fails_with_named_scenarios() {
+        // 1000 -> 1200 ns is a 16.7% throughput drop: over tolerance.
+        let base = doc(&[("hot", 1000.0), ("cold", 500.0)], &[]);
+        let fresh = doc(&[("hot", 1200.0), ("cold", 505.0)], &[]);
+        let r = compare(&base, &fresh, DEFAULT_TOLERANCE);
+        assert!(!r.passed());
+        assert_eq!(r.failures(), vec!["hot"]);
+        let table = r.render();
+        assert!(table.contains("FAIL"), "{table}");
+        assert!(table.contains("hot"), "{table}");
+    }
+
+    #[test]
+    fn scalar_gating_is_suffix_scoped() {
+        // A regressed speedup scalar fails; a regressed count does not.
+        let base = doc(&[], &[("bt_speedup", 4.0), ("serve_batches", 100.0)]);
+        let fresh = doc(&[], &[("bt_speedup", 3.0), ("serve_batches", 10.0)]);
+        let r = compare(&base, &fresh, DEFAULT_TOLERANCE);
+        assert_eq!(r.failures(), vec!["bt_speedup"]);
+        assert_eq!(r.compared, 1, "counts are informational");
+    }
+
+    #[test]
+    fn missing_scenarios_warn_but_empty_fresh_fails() {
+        let base = doc(&[("hot", 1000.0), ("gone", 2000.0)], &[]);
+        let fresh = doc(&[("hot", 1000.0)], &[]);
+        let r = compare(&base, &fresh, DEFAULT_TOLERANCE);
+        assert!(r.passed(), "a missing scenario alone must not fail");
+        assert!(r.rows.iter().any(|x| x.verdict == Verdict::Missing));
+
+        let empty = doc(&[], &[]);
+        let r = compare(&base, &empty, DEFAULT_TOLERANCE);
+        assert!(!r.passed(), "zero gated comparisons must fail the gate");
+    }
+
+    #[test]
+    fn faster_is_never_a_failure() {
+        let base = doc(&[("hot", 1000.0)], &[("x_speedup", 2.0)]);
+        let fresh = doc(&[("hot", 200.0)], &[("x_speedup", 9.0)]);
+        let r = compare(&base, &fresh, 0.0);
+        assert!(r.passed());
+        assert!(r.rows.iter().all(|x| x.delta.unwrap() > 0.0));
+    }
+
+    #[test]
+    fn bless_round_trips_through_files() {
+        let dir = std::env::temp_dir();
+        let fresh = dir.join("gate_fresh.json");
+        let baseline = dir.join("gate_base.json");
+        let fresh = fresh.to_str().unwrap();
+        let baseline = baseline.to_str().unwrap();
+        std::fs::write(
+            fresh,
+            "{\"measurements\":[{\"name\":\"a\",\"iters\":1,\"median_ns\":10,\
+             \"mean_ns\":10,\"min_ns\":10}],\"scalars\":{}}",
+        )
+        .unwrap();
+        bless(fresh, baseline).unwrap();
+        let r = run_gate(fresh, baseline, DEFAULT_TOLERANCE).unwrap();
+        assert!(r.passed());
+        std::fs::write(fresh, "not json").unwrap();
+        assert!(bless(fresh, baseline).is_err(), "unparsable fresh must not bless");
+        let _ = std::fs::remove_file(fresh);
+        let _ = std::fs::remove_file(baseline);
+    }
+}

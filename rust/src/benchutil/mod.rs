@@ -2,10 +2,14 @@
 //! build): warmup + timed iterations, median/mean/min reporting, a
 //! `black_box` to defeat constant folding, and a hand-rolled JSON dump
 //! (`BENCH_*` trajectory: CI uploads the file as a workflow artifact so
-//! throughput regressions are visible across PRs).
+//! throughput regressions are visible across PRs, and the [`gate`]
+//! submodule compares fresh runs against the committed `BENCH_*.json`
+//! baselines, failing the build on >10% throughput drops).
 
 use std::hint::black_box as bb;
 use std::time::{Duration, Instant};
+
+pub mod gate;
 
 /// Re-export for benches.
 pub fn black_box<T>(x: T) -> T {

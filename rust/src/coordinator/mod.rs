@@ -526,9 +526,17 @@ impl SortService {
     }
 
     /// Spawn `shards` shards over the pure-Rust [`ReferenceBackend`]
-    /// (fully offline).
+    /// (fully offline). Each shard's `psu_sort` fans out across a worker
+    /// budget that splits the machine's threads evenly over the shards
+    /// ([`crate::sortcore::workers_per_shard`]); results are bit-identical
+    /// to the sequential backend for any budget.
     pub fn spawn_reference_sharded(shards: usize, max_wait: Duration) -> anyhow::Result<Self> {
-        Self::spawn_sharded_with(|_| Ok(ReferenceBackend::new()), shards, max_wait)
+        let workers = crate::sortcore::workers_per_shard(shards);
+        Self::spawn_sharded_with(
+            move |_| Ok(ReferenceBackend::with_workers(workers)),
+            shards,
+            max_wait,
+        )
     }
 
     /// Reference-backend shards with link-power telemetry and an ordering
@@ -539,7 +547,13 @@ impl SortService {
         max_wait: Duration,
         policy: Option<OrderPolicy>,
     ) -> anyhow::Result<Self> {
-        Self::spawn_sharded_with_policy(|_| Ok(ReferenceBackend::new()), shards, max_wait, policy)
+        let workers = crate::sortcore::workers_per_shard(shards);
+        Self::spawn_sharded_with_policy(
+            move |_| Ok(ReferenceBackend::with_workers(workers)),
+            shards,
+            max_wait,
+            policy,
+        )
     }
 
     /// Spawn over the PJRT backend; each shard loads + compiles the AOT
@@ -686,9 +700,10 @@ fn batch_loop(
                 // already see this batch accounted for
                 strategies.clear();
                 if let Some(e) = engine.as_mut() {
-                    for ((req, a), p) in batch.iter().zip(&acc).zip(&app) {
-                        strategies.push(e.observe_with_perms(&req.packet, a, p));
-                    }
+                    // one batched pass over all three TX registers
+                    // (segmented only at adaptive evaluation boundaries);
+                    // bit-identical to per-packet observation
+                    e.observe_batch_with_perms(&packets, &acc, &app, &mut strategies);
                     metrics.linkpower[shard].publish(&e.snapshot());
                 }
                 // move each index vector straight into its reply — the

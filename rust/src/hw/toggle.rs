@@ -90,6 +90,32 @@ impl ToggleGroup {
         self.latch_words(&[v], width);
     }
 
+    /// Apply a pre-priced block of latches in one step: the batch
+    /// fast path behind [`crate::noc::Link::send_transfer_words`].
+    ///
+    /// The caller has already computed, off-register, the transitions a
+    /// sequence of `writes` latches would accumulate (e.g. via
+    /// [`crate::noc::xor_popcount_block`] over a packed word block) and
+    /// the value the final latch leaves behind. This fold is exact —
+    /// toggle ledgers are prefix sums of per-boundary popcounts, so the
+    /// intermediate register states are unobservable — and the ledger
+    /// ends bit-identical to `writes` individual [`ToggleGroup::latch_words`]
+    /// calls (property-tested in `rust/tests/properties.rs`).
+    ///
+    /// `writes` must be at least 1: the block's first latch establishes
+    /// the width on a fresh group, exactly like `latch_words`.
+    pub fn latch_block(&mut self, final_words: &[u64], width: usize, toggles: u64, writes: u64) {
+        debug_assert!(final_words.len() * 64 >= width);
+        debug_assert!(writes >= 1, "a latch block contains at least one write");
+        if self.last.len() != final_words.len() {
+            self.last = vec![0; final_words.len()];
+            self.width = width;
+        }
+        self.last.copy_from_slice(final_words);
+        self.toggles += toggles;
+        self.writes += writes;
+    }
+
     /// Mean toggles per write.
     pub fn activity(&self) -> f64 {
         if self.writes == 0 {
@@ -216,6 +242,29 @@ mod tests {
         d.latch_flit(&PackedFlit::from_bytes(&y).0, 5);
         assert_eq!(c.toggles, d.toggles);
         assert_eq!(c.width, d.width);
+    }
+
+    #[test]
+    fn latch_block_folds_a_latch_sequence() {
+        // the oracle: latch four 128-bit values one by one
+        let vals: [[u64; 2]; 4] =
+            [[0xFF, 0], [0x0F, 0xF0], [0, u64::MAX], [0xA5A5, 0x5A5A]];
+        let mut oracle = ToggleGroup::default();
+        let before = oracle.toggles;
+        for v in &vals {
+            oracle.latch_words(v, 128);
+        }
+        let bt = oracle.toggles - before;
+        // the block path: one pre-priced fold with the same final state
+        let mut block = ToggleGroup::default();
+        block.latch_block(vals.last().unwrap(), 128, bt, vals.len() as u64);
+        assert_eq!(block.toggles, oracle.toggles);
+        assert_eq!(block.writes, oracle.writes);
+        assert_eq!(block.width, oracle.width);
+        // subsequent per-word latches must diverge identically from here
+        block.latch_words(&[0, 0], 128);
+        oracle.latch_words(&[0, 0], 128);
+        assert_eq!(block.toggles, oracle.toggles);
     }
 
     #[test]

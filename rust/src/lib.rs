@@ -52,6 +52,7 @@
 //! `docs/ARCHITECTURE.md`.
 
 #![warn(missing_docs)]
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 pub mod area;
 pub mod benchutil;

@@ -286,6 +286,51 @@ impl PolicyEngine {
         used
     }
 
+    /// Batched serving-path entry point: prices the whole batch through
+    /// [`LinkProbe::observe_batch`] and appends each packet's transmitted
+    /// strategy to `strategies`.
+    ///
+    /// Bit-identical to calling [`PolicyEngine::observe_with_perms`] per
+    /// packet in order: the active strategy can only change at
+    /// `evaluate_every` packet-count boundaries (and only for
+    /// `Adaptive`), so the batch is segmented into runs ending exactly on
+    /// those boundaries and each run is priced in one batch pass under
+    /// the run's constant strategy, re-evaluating between runs.
+    pub fn observe_batch_with_perms<P: AsRef<[u8]>>(
+        &mut self,
+        packets: &[P],
+        acc_perms: &[Vec<u16>],
+        app_perms: &[Vec<u16>],
+        strategies: &mut Vec<StrategyKind>,
+    ) {
+        assert_eq!(packets.len(), acc_perms.len(), "one ACC permutation per packet");
+        assert_eq!(packets.len(), app_perms.len(), "one APP permutation per packet");
+        let mut start = 0usize;
+        while start < packets.len() {
+            let remaining = packets.len() - start;
+            let run = match &self.policy {
+                OrderPolicy::Adaptive(cfg) => {
+                    let every = cfg.evaluate_every.max(1);
+                    let to_boundary = every - self.probe.packets() % every;
+                    remaining.min(to_boundary as usize)
+                }
+                // static policies never re-evaluate: one run
+                _ => remaining,
+            };
+            let used = self.active;
+            let end = start + run;
+            self.probe.observe_batch(
+                &packets[start..end],
+                &acc_perms[start..end],
+                &app_perms[start..end],
+                used,
+            );
+            strategies.extend(std::iter::repeat(used).take(run));
+            self.maybe_reevaluate();
+            start = end;
+        }
+    }
+
     /// Library entry point: sorts the packet itself (APP under the
     /// policy's own bucket map). Returns the strategy transmitted.
     pub fn observe(&mut self, packet: &[u8]) -> StrategyKind {
@@ -393,6 +438,64 @@ mod tests {
         assert!(t.switches >= 1);
         // the transmitted ledger must now be saving BT vs raw order
         assert!(t.probe.window_savings_ratio() > 0.0);
+    }
+
+    #[test]
+    fn batched_observe_matches_per_packet_observe() {
+        use crate::sortcore;
+        // bimodal traffic + a small cadence forces mid-batch switches, so
+        // the run segmentation is genuinely exercised
+        let mut rng = Rng::new(9);
+        let map = BucketMap::paper_k4();
+        let packets: Vec<Vec<u8>> = (0..100)
+            .map(|_| {
+                (0..PACKET_BYTES)
+                    .map(|_| if rng.next_u64() & 1 == 1 { 0xFF } else { 0x00 })
+                    .collect()
+            })
+            .collect();
+        let (mut acc_perms, mut app_perms) = (Vec::new(), Vec::new());
+        for p in &packets {
+            let mut a = vec![0u16; p.len()];
+            sortcore::popcount_sort_into(p, &mut a);
+            acc_perms.push(a);
+            let mut b = vec![0u16; p.len()];
+            sortcore::bucket_sort_into(p, &map, &mut b);
+            app_perms.push(b);
+        }
+        for policy in [
+            OrderPolicy::Passthrough,
+            OrderPolicy::Precise,
+            OrderPolicy::approximate_paper(),
+            OrderPolicy::Adaptive(AdaptiveConfig {
+                evaluate_every: 7, // does not divide the batch size
+                ..AdaptiveConfig::default()
+            }),
+        ] {
+            let mut scalar = PolicyEngine::with_window(policy.clone(), 16);
+            let mut want = Vec::new();
+            for ((p, a), b) in packets.iter().zip(&acc_perms).zip(&app_perms) {
+                want.push(scalar.observe_with_perms(p, a, b));
+            }
+            let mut batched = PolicyEngine::with_window(policy.clone(), 16);
+            let mut got = Vec::new();
+            // split the batch unevenly to exercise boundary carry-over
+            for (lo, hi) in [(0usize, 33usize), (33, 34), (34, 100)] {
+                batched.observe_batch_with_perms(
+                    &packets[lo..hi],
+                    &acc_perms[lo..hi],
+                    &app_perms[lo..hi],
+                    &mut got,
+                );
+            }
+            assert_eq!(got, want, "{}: strategy sequence diverged", policy.label());
+            assert_eq!(
+                batched.snapshot(),
+                scalar.snapshot(),
+                "{}: telemetry diverged",
+                policy.label()
+            );
+        }
     }
 
     #[test]

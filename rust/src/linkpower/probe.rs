@@ -3,23 +3,29 @@
 //!
 //! The probe reuses the [`crate::noc::Link`] transmission-register
 //! semantics verbatim — one `Link` per tracked ordering, each packet
-//! packed into a reused [`crate::noc::PacketFrame`] (via a
-//! [`FrameScratch`], which also owns the permutation-application buffer)
-//! and sent with [`crate::noc::Link::send_transfer_frame`] (windows are
-//! independent transfers: the serializer parallel-loads the first flit,
-//! so only the packet's internal flit boundaries toggle, exactly the
-//! Table-I metric). The whole three-register hot path is word-speed (two
-//! XOR + `count_ones` per flit) and performs zero per-packet heap
-//! allocation. A property test (rust/tests/properties.rs) holds the
-//! probe bit-identical to a standalone `Link` ledger fed the same flit
-//! sequence through the legacy `Packet`-framed byte path.
+//! packed into a stack block of flit words
+//! ([`crate::noc::pack_stream_words`], permutations gather-fused via
+//! [`crate::noc::pack_permuted_words`]) and sent with
+//! [`crate::noc::Link::send_transfer_words`] (windows are independent
+//! transfers: the serializer parallel-loads the first flit, so only the
+//! packet's internal flit boundaries toggle, exactly the Table-I
+//! metric — priced as one block XOR/popcount reduction per packet per
+//! link). [`LinkProbe::observe_batch`] prices a whole batch in three
+//! per-link passes so each TX register stays hot while the batch streams
+//! through it. The hot path performs zero per-packet heap allocation. A
+//! property test (rust/tests/properties.rs) holds the probe bit-identical
+//! to a standalone `Link` ledger fed the same flit sequence through the
+//! legacy `Packet`-framed byte path.
 //!
 //! Besides cumulative ledgers the probe keeps a sliding window of the last
 //! `window_packets` observations in a ring buffer with O(1) running sums,
 //! so "what is each strategy worth on *recent* traffic" is a constant-time
 //! query — that window is what the adaptive policy scores.
 
-use crate::noc::{FrameScratch, Link};
+use crate::noc::{
+    pack_permuted_words, pack_stream_words, FrameScratch, Link, MAX_FRAME_BYTES,
+    MAX_FRAME_FLITS,
+};
 use crate::sortcore;
 use crate::FLIT_LANES;
 
@@ -218,10 +224,12 @@ pub struct LinkProbe {
     served_bt: u64,
     window: Ring,
     packets: u64,
-    /// Reused frame + permutation-application buffers — the whole observe
-    /// path packs into one [`crate::noc::PacketFrame`] and is
-    /// allocation-free per packet.
+    /// Reused permutation-application buffer for the oversized-packet
+    /// streaming fallback (the fast path packs into stack word blocks
+    /// and never touches it).
     frames: FrameScratch,
+    /// Reused per-packet observation buffer for [`LinkProbe::observe_batch`].
+    batch: Vec<PacketBt>,
 }
 
 impl LinkProbe {
@@ -235,6 +243,7 @@ impl LinkProbe {
             window: Ring::new(window_packets),
             packets: 0,
             frames: FrameScratch::new(),
+            batch: Vec::new(),
         }
     }
 
@@ -258,20 +267,17 @@ impl LinkProbe {
     ) -> PacketBt {
         debug_assert_eq!(packet.len(), acc_perm.len());
         debug_assert_eq!(packet.len(), app_perm.len());
-        let (raw, acc, app) = if packet.len() <= crate::noc::MAX_FRAME_BYTES {
-            let raw = self
-                .raw
-                .send_transfer_frame(self.frames.stream_major(packet, FLIT_LANES));
-            let acc = self.acc.send_transfer_frame(self.frames.permuted_stream_major(
-                acc_perm,
-                packet,
-                FLIT_LANES,
-            ));
-            let app = self.app.send_transfer_frame(self.frames.permuted_stream_major(
-                app_perm,
-                packet,
-                FLIT_LANES,
-            ));
+        let (raw, acc, app) = if packet.len() <= MAX_FRAME_BYTES {
+            // pack into a stack word block (permutations gather-fused),
+            // then one block XOR/popcount per link — no per-flit register
+            // round-trips
+            let mut words = [0u64; 2 * MAX_FRAME_FLITS];
+            let n = pack_stream_words(packet, &mut words);
+            let raw = self.raw.send_transfer_words(&words[..n]);
+            let n = pack_permuted_words(packet, acc_perm, &mut words);
+            let acc = self.acc.send_transfer_words(&words[..n]);
+            let n = pack_permuted_words(packet, app_perm, &mut words);
+            let app = self.app.send_transfer_words(&words[..n]);
             (raw, acc, app)
         } else {
             // oversized payloads exceed a frame's fixed capacity; stream
@@ -315,6 +321,75 @@ impl LinkProbe {
         sortcore::popcount_sort_into(packet, &mut scratch.acc_perm);
         sortcore::bucket_sort_into(packet, map, &mut scratch.app_perm);
         self.observe(packet, &scratch.acc_perm, &scratch.app_perm, served)
+    }
+
+    /// Price a whole batch under all three orderings in three per-link
+    /// passes: each TX register's ledger stays hot while the entire batch
+    /// streams through it, instead of bouncing between the raw/ACC/APP
+    /// registers on every packet. Bit-identical to calling
+    /// [`LinkProbe::observe`] per packet in order — the three links are
+    /// independent, so re-ordering the passes cannot change any ledger —
+    /// and the sliding window still records one [`PacketBt`] per packet.
+    /// Returns the batch total.
+    ///
+    /// Packets longer than [`MAX_FRAME_BYTES`] take the streaming
+    /// fallback inside their pass, exactly like [`LinkProbe::observe`].
+    pub fn observe_batch<P: AsRef<[u8]>>(
+        &mut self,
+        packets: &[P],
+        acc_perms: &[Vec<u16>],
+        app_perms: &[Vec<u16>],
+        served: StrategyKind,
+    ) -> PacketBt {
+        assert_eq!(packets.len(), acc_perms.len(), "one ACC permutation per packet");
+        assert_eq!(packets.len(), app_perms.len(), "one APP permutation per packet");
+        self.batch.clear();
+        self.batch.resize(packets.len(), PacketBt::default());
+        let mut words = [0u64; 2 * MAX_FRAME_FLITS];
+        // pass 1: arrival order
+        for (obs, p) in self.batch.iter_mut().zip(packets) {
+            let p = p.as_ref();
+            obs.flits = p.len().div_ceil(FLIT_LANES) as u64;
+            obs.raw = if p.len() <= MAX_FRAME_BYTES {
+                let n = pack_stream_words(p, &mut words);
+                self.raw.send_transfer_words(&words[..n])
+            } else {
+                self.raw.send_transfer_bytes(p)
+            };
+        }
+        // pass 2: ACC ordering (gather-fused permutation packing)
+        for ((obs, p), perm) in self.batch.iter_mut().zip(packets).zip(acc_perms) {
+            let p = p.as_ref();
+            debug_assert_eq!(p.len(), perm.len());
+            obs.acc = if p.len() <= MAX_FRAME_BYTES {
+                let n = pack_permuted_words(p, perm, &mut words);
+                self.acc.send_transfer_words(&words[..n])
+            } else {
+                self.acc.send_transfer_bytes(self.frames.permuted_bytes(perm, p))
+            };
+        }
+        // pass 3: APP ordering
+        for ((obs, p), perm) in self.batch.iter_mut().zip(packets).zip(app_perms) {
+            let p = p.as_ref();
+            debug_assert_eq!(p.len(), perm.len());
+            obs.app = if p.len() <= MAX_FRAME_BYTES {
+                let n = pack_permuted_words(p, perm, &mut words);
+                self.app.send_transfer_words(&words[..n])
+            } else {
+                self.app.send_transfer_bytes(self.frames.permuted_bytes(perm, p))
+            };
+        }
+        // fold into the window and cumulative ledgers, in packet order
+        let mut total = PacketBt::default();
+        for i in 0..self.batch.len() {
+            let mut obs = self.batch[i];
+            obs.served = obs.of(served);
+            self.served_bt += obs.served;
+            self.window.push(obs);
+            self.packets += 1;
+            total.add(&obs);
+        }
+        total
     }
 
     /// Packets observed so far.
@@ -437,6 +512,34 @@ mod tests {
         let s = probe.snapshot();
         assert_eq!(s.flits, 16);
         assert_eq!(s.served_bt, obs.acc);
+    }
+
+    #[test]
+    fn observe_batch_matches_per_packet_observe() {
+        let map = BucketMap::paper_k4();
+        let mut rng = Rng::new(41);
+        // mix standard packets with an oversized one so both paths run
+        let mut packets: Vec<Vec<u8>> = (0..9).map(|_| random_packet(&mut rng)).collect();
+        packets.push((0..2 * crate::noc::MAX_FRAME_BYTES).map(|_| rng.next_u8()).collect());
+        let (mut acc_perms, mut app_perms) = (Vec::new(), Vec::new());
+        for p in &packets {
+            let mut a = vec![0u16; p.len()];
+            crate::sortcore::popcount_sort_into(p, &mut a);
+            acc_perms.push(a);
+            let mut b = vec![0u16; p.len()];
+            crate::sortcore::bucket_sort_into(p, &map, &mut b);
+            app_perms.push(b);
+        }
+        let mut one = LinkProbe::new(4);
+        let mut want = PacketBt::default();
+        for ((p, a), b) in packets.iter().zip(&acc_perms).zip(&app_perms) {
+            want.add(&one.observe(p, a, b, StrategyKind::Approximate));
+        }
+        let mut batched = LinkProbe::new(4);
+        let got =
+            batched.observe_batch(&packets, &acc_perms, &app_perms, StrategyKind::Approximate);
+        assert_eq!(got, want);
+        assert_eq!(batched.snapshot(), one.snapshot());
     }
 
     #[test]

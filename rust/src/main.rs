@@ -17,10 +17,13 @@ use repro::config::Config;
 use repro::experiments::{self, Experiment};
 use repro::linkpower::OrderPolicy;
 use repro::report::run_report;
-use repro::runtime::make_backend;
+use repro::runtime::make_backend_with_workers;
 
 /// Flags every command accepts.
 const GLOBAL_FLAGS: &[&str] = &["config", "seed"];
+
+/// Flags that take no value (their presence means "yes").
+const BARE_FLAGS: &[&str] = &["bless"];
 
 /// Map CLI aliases onto registry names (`fig6`/`fig7` predate the merged
 /// `fig67` module; `ablate-k` predates the registry).
@@ -43,6 +46,7 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
         "policy" => &["packets"],
         "report" | "all" => &["only", "out"],
         "serve" => &["requests", "shards", "max-wait-us", "policy", "stats"],
+        "bench-gate" => &["fresh", "baseline", "tolerance", "bless"],
         "help" | "--help" | "-h" => &[],
         _ => return None,
     })
@@ -64,6 +68,10 @@ fn flag_doc(flag: &str) -> &'static str {
         "max-wait-us" => "dynamic-batching wait budget in microseconds",
         "policy" => "ordering policy: passthrough|precise|approx|adaptive",
         "stats" => "write the Prometheus-style snapshot to FILE ('-' = stdout)",
+        "fresh" => "benchutil JSON from the run under test",
+        "baseline" => "committed baseline JSON (BENCH_*.json)",
+        "tolerance" => "allowed throughput drop as a fraction (default 0.10)",
+        "bless" => "copy the fresh file over the baseline instead of gating",
         _ => "",
     }
 }
@@ -101,6 +109,9 @@ impl Args {
             if let Some((key, value)) = k.split_once('=') {
                 anyhow::ensure!(!key.is_empty(), "malformed flag {:?}", rest[i]);
                 flags.push((key.to_string(), value.to_string()));
+                i += 1;
+            } else if BARE_FLAGS.contains(&k) {
+                flags.push((k.to_string(), "true".to_string()));
                 i += 1;
             } else {
                 let v = rest
@@ -194,6 +205,14 @@ report & serving:
                             Prometheus-style telemetry snapshot to FILE
                             ('-' = stdout). (set BENCHUTIL_JSON=path to dump
                             JSON metrics)
+  bench-gate --fresh FILE --baseline FILE [--tolerance 0.10] [--bless]
+                            compare a fresh benchutil JSON dump against a
+                            committed BENCH_*.json baseline: prints a
+                            per-scenario delta table and exits non-zero when
+                            any throughput scenario regresses more than the
+                            tolerance. --bless copies fresh over the
+                            baseline instead (re-bless after intentional
+                            performance changes)
   help [command]            this overview, or one command's flags
 ";
 
@@ -328,6 +347,41 @@ fn main() -> Result<()> {
             };
             serve_demo(&cfg, n, shards, wait_us, order_policy, args.get("stats"))?;
         }
+        "bench-gate" => {
+            use repro::benchutil::gate;
+            let (fresh, baseline) = match (args.get("fresh"), args.get("baseline")) {
+                (Some(f), Some(b)) => (f, b),
+                _ => {
+                    eprintln!("error: bench-gate needs --fresh FILE and --baseline FILE\n\n{HELP}");
+                    std::process::exit(2);
+                }
+            };
+            let tolerance = match args.get("tolerance") {
+                None => gate::DEFAULT_TOLERANCE,
+                Some(t) => match t.parse::<f64>() {
+                    Ok(v) if v.is_finite() && v >= 0.0 => v,
+                    _ => {
+                        eprintln!("error: --tolerance: bad fraction {t:?}\n\n{HELP}");
+                        std::process::exit(2);
+                    }
+                },
+            };
+            if args.get("bless").is_some() {
+                gate::bless(fresh, baseline)?;
+                println!("blessed: {fresh} -> {baseline}");
+                return Ok(());
+            }
+            let report = gate::run_gate(fresh, baseline, tolerance)?;
+            print!("{}", report.render());
+            if !report.passed() {
+                let failures = report.failures();
+                if failures.is_empty() {
+                    anyhow::bail!("bench gate failed: no gated scenarios were compared");
+                }
+                anyhow::bail!("bench gate failed: regressed {failures:?}");
+            }
+            println!("bench gate passed");
+        }
         "help" | "--help" | "-h" => match &args.topic {
             None => print!("{HELP}"),
             Some(topic) => match command_help(topic) {
@@ -379,8 +433,11 @@ fn serve_demo(
 
     let policy_label = order_policy.as_ref().map(|p| p.label());
     let dir = cfg.artifacts_dir.clone();
+    // split the machine's threads across shards: each shard's reference
+    // backend fans its sort batches out over its own worker budget
+    let workers = repro::sortcore::workers_per_shard(shards);
     let svc = SortService::spawn_sharded_with_policy(
-        move |_| Ok(make_backend(&dir)),
+        move |_| Ok(make_backend_with_workers(&dir, workers)),
         shards,
         Duration::from_micros(wait_us as u64),
         order_policy,
@@ -544,6 +601,33 @@ mod tests {
         assert!(args(&["table1", "--policy", "adaptive"]).validate().is_err());
         assert!(args(&["policy", "--packets", "100"]).validate().is_ok());
         assert!(args(&["policy", "--stats", "-"]).validate().is_err());
+    }
+
+    #[test]
+    fn bench_gate_flags_validate() {
+        let a = args(&[
+            "bench-gate",
+            "--fresh",
+            "bench-hotpath.json",
+            "--baseline",
+            "BENCH_hotpath.json",
+            "--tolerance=0.2",
+        ]);
+        a.validate().unwrap();
+        assert_eq!(a.get("fresh"), Some("bench-hotpath.json"));
+        assert_eq!(a.get("baseline"), Some("BENCH_hotpath.json"));
+        assert_eq!(a.get("tolerance"), Some("0.2"));
+        // --bless takes no value: bare form and a following flag both parse
+        let a = args(&["bench-gate", "--bless", "--fresh", "f.json", "--baseline", "b.json"]);
+        a.validate().unwrap();
+        assert_eq!(a.get("bless"), Some("true"));
+        assert_eq!(a.get("fresh"), Some("f.json"));
+        // the gate flags stay bench-gate-only
+        assert!(args(&["serve", "--fresh", "x.json"]).validate().is_err());
+        assert!(args(&["bench-gate", "--requests", "5"]).validate().is_err());
+        // bench-gate appears in the help machinery
+        let text = command_help("bench-gate").unwrap();
+        assert!(text.contains("--fresh") && text.contains("--bless"), "{text}");
     }
 
     #[test]

@@ -16,7 +16,7 @@
 use crate::hw::{Tech, ToggleGroup};
 use crate::FLIT_LANES;
 
-use super::flit::PackedFlit;
+use super::flit::{xor_popcount_block, PackedFlit};
 use super::frame::PacketFrame;
 use super::packet::Packet;
 
@@ -130,6 +130,38 @@ impl Link {
             self.load_bytes(first);
         }
         it.map(|f| self.send_flit(f)).sum()
+    }
+
+    /// Transmit one transfer already packed as a contiguous block of flit
+    /// words (two `u64` words per 128-bit flit, e.g. from
+    /// [`super::pack_stream_words`]): the batch-pricing fast path.
+    ///
+    /// Semantically identical to [`Link::send_transfer_frame`] on the
+    /// same flits — parallel-load the first, count only the internal
+    /// boundaries — but priced in one [`xor_popcount_block`] over the
+    /// block shifted against itself by one flit, then folded into the TX
+    /// register in a single pre-priced latch
+    /// ([`crate::hw::ToggleGroup::latch_block`]) instead of per-flit
+    /// register round-trips. Returns the transfer's BT.
+    ///
+    /// # Panics
+    /// If the link is not exactly [`FLIT_LANES`] lanes wide (the packed
+    /// full-width framing carries 16 lanes per flit) or `words` is not a
+    /// whole number of flits.
+    pub fn send_transfer_words(&mut self, words: &[u64]) -> u64 {
+        assert_eq!(
+            self.lanes, FLIT_LANES,
+            "packed transfers carry exactly {FLIT_LANES} lanes per flit"
+        );
+        assert_eq!(words.len() % 2, 0, "a 128-bit flit is two words");
+        if words.is_empty() {
+            return 0;
+        }
+        let n = words.len();
+        let bt = xor_popcount_block(&words[..n - 2], &words[2..]);
+        self.tx_reg.latch_block(&words[n - 2..], 8 * FLIT_LANES, bt, (n / 2) as u64);
+        self.flits_sent += (n / 2) as u64;
+        bt
     }
 
     /// Transmit a raw byte stream, framing flits on the fly (tail
@@ -284,6 +316,44 @@ mod tests {
             assert_eq!(a.total_bt(), b.total_bt(), "len {len}");
             assert_eq!(a.flits_sent, b.flits_sent, "len {len}");
         }
+    }
+
+    #[test]
+    fn send_transfer_words_matches_frame_path() {
+        use super::super::flit::pack_stream_words;
+        // identical streams through the per-flit and the block path must
+        // leave identical ledgers, from reset and from a charged line
+        for len in [0usize, 16, 20, 64, 128] {
+            let bytes: Vec<u8> = (0..len).map(|i| (i as u8).wrapping_mul(73) ^ 0x5C).collect();
+            let mut a = Link::new("frame");
+            let mut b = Link::new("words");
+            a.send_flit(&[0xFF; 16]);
+            b.send_flit(&[0xFF; 16]);
+            let mut words = [0u64; 16];
+            let n = pack_stream_words(&bytes, &mut words);
+            let via_frame = a.send_transfer_frame(&PacketFrame::from_bytes(&bytes, 16));
+            let via_words = b.send_transfer_words(&words[..n]);
+            assert_eq!(via_frame, via_words, "len {len}");
+            assert_eq!(a.total_bt(), b.total_bt(), "len {len}");
+            assert_eq!(a.flits_sent, b.flits_sent, "len {len}");
+            // the TX line state must also agree: resend the same tail flit
+            if n >= 2 {
+                let tail = PackedFlit([words[n - 2], words[n - 1]]);
+                assert_eq!(
+                    a.send_flit_packed(tail),
+                    b.send_flit_packed(tail),
+                    "len {len}: line state diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "16 lanes")]
+    fn wide_links_reject_packed_transfers() {
+        let mut link = Link::new("wide");
+        link.lanes = 32;
+        link.send_transfer_words(&[0, 0]);
     }
 
     #[test]

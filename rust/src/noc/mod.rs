@@ -22,7 +22,9 @@ pub mod link;
 pub mod multihop;
 pub mod packet;
 
-pub use flit::{PackedFlit, FLIT_WORDS};
+pub use flit::{
+    pack_permuted_words, pack_stream_words, xor_popcount_block, PackedFlit, FLIT_WORDS,
+};
 pub use frame::{FrameScratch, PacketFrame, MAX_FRAME_BYTES, MAX_FRAME_FLITS};
 pub use link::Link;
 pub use multihop::MultiHopPath;

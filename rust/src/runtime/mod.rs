@@ -80,8 +80,17 @@ pub trait Backend {
 
 /// Pick the default execution backend for a binary: the PJRT artifact path
 /// when it is compiled in (`--features pjrt`) *and* its artifacts load, the
-/// pure-Rust [`ReferenceBackend`] otherwise.
+/// pure-Rust [`ReferenceBackend`] otherwise (sequential `psu_sort`).
 pub fn make_backend(artifacts_dir: &str) -> Box<dyn Backend> {
+    make_backend_with_workers(artifacts_dir, 1)
+}
+
+/// [`make_backend`] with an explicit `psu_sort` worker-thread budget for
+/// the reference backend (the PJRT backend manages its own parallelism
+/// and ignores it). The serving engine passes
+/// [`crate::sortcore::workers_per_shard`] so co-resident shards split
+/// the machine's threads evenly.
+pub fn make_backend_with_workers(artifacts_dir: &str, workers: usize) -> Box<dyn Backend> {
     #[cfg(feature = "pjrt")]
     {
         match pjrt::PjrtBackend::load(artifacts_dir) {
@@ -91,7 +100,7 @@ pub fn make_backend(artifacts_dir: &str) -> Box<dyn Backend> {
     }
     #[cfg(not(feature = "pjrt"))]
     let _ = artifacts_dir;
-    Box::new(ReferenceBackend::new())
+    Box::new(ReferenceBackend::with_workers(workers))
 }
 
 /// Boxed backends forward to their contents, so `Box<dyn Backend>` can be

@@ -16,8 +16,8 @@
 
 use anyhow::Result;
 
-use crate::noc::PackedFlit;
-use crate::sortcore::{self, BucketMap};
+use crate::noc::{xor_popcount_block, PackedFlit};
+use crate::sortcore::{batch, BucketMap};
 
 use super::{Backend, BT_BATCH, FLIT_LANES, PACKET_ELEMS, PACKET_FLITS, PE_BATCH};
 
@@ -31,12 +31,25 @@ const POOLED: usize = CONV / 2; // 12
 /// The default, dependency-free execution backend.
 pub struct ReferenceBackend {
     map: BucketMap,
+    /// Worker-thread budget for `psu_sort` batches (1 = sequential).
+    workers: usize,
 }
 
 impl ReferenceBackend {
-    /// A backend with the paper's k = 4 APP bucket map.
+    /// A backend with the paper's k = 4 APP bucket map, sorting batches
+    /// sequentially (the library default: embedders control their own
+    /// threading).
     pub fn new() -> Self {
-        Self { map: BucketMap::paper_k4() }
+        Self::with_workers(1)
+    }
+
+    /// A backend whose `psu_sort` fans each batch out across up to
+    /// `workers` scoped threads ([`crate::sortcore::batch`]) —
+    /// bit-identical output for any worker count. The serving engine
+    /// sizes this per shard via
+    /// [`crate::sortcore::workers_per_shard`].
+    pub fn with_workers(workers: usize) -> Self {
+        Self { map: BucketMap::paper_k4(), workers: workers.max(1) }
     }
 }
 
@@ -106,35 +119,27 @@ impl Backend for ReferenceBackend {
         packets: &[[u8; PACKET_ELEMS]],
     ) -> Result<(Vec<Vec<u16>>, Vec<Vec<u16>>)> {
         anyhow::ensure!(packets.len() <= BT_BATCH, "batch too large");
-        // Both orderings through the one sortcore scatter; the output
-        // vectors are the response payloads (moved, never copied, by the
-        // serving engine).
-        let mut acc = Vec::with_capacity(packets.len());
-        let mut app = Vec::with_capacity(packets.len());
-        for p in packets {
-            let mut a = vec![0u16; PACKET_ELEMS];
-            sortcore::popcount_sort_into(p, &mut a);
-            acc.push(a);
-            let mut b = vec![0u16; PACKET_ELEMS];
-            sortcore::bucket_sort_into(p, &self.map, &mut b);
-            app.push(b);
-        }
-        Ok((acc, app))
+        // Both orderings through the one sortcore scatter, fanned out
+        // across the backend's worker budget; the output vectors are the
+        // response payloads (moved, never copied, by the serving engine).
+        Ok(batch::batch_sort_pairs(packets, &self.map, self.workers))
     }
 
     fn packet_bt(&self, packets: &[[[u8; FLIT_LANES]; PACKET_FLITS]]) -> Result<Vec<u32>> {
         anyhow::ensure!(packets.len() <= BT_BATCH, "batch too large");
+        // Per packet: pack the four flits into one contiguous word block
+        // and price all three internal boundaries in a single shifted
+        // block XOR/popcount (branch-free, autovectorizable).
         Ok(packets
             .iter()
             .map(|p| {
-                let mut prev = PackedFlit::from_lanes(&p[0]);
-                let mut bt = 0u32;
-                for lanes in &p[1..] {
-                    let cur = PackedFlit::from_lanes(lanes);
-                    bt += prev.transitions(cur);
-                    prev = cur;
+                let mut w = [0u64; 2 * PACKET_FLITS];
+                for (i, lanes) in p.iter().enumerate() {
+                    let f = PackedFlit::from_lanes(lanes);
+                    w[2 * i] = f.0[0];
+                    w[2 * i + 1] = f.0[1];
                 }
-                bt
+                xor_popcount_block(&w[..2 * PACKET_FLITS - 2], &w[2..]) as u32
             })
             .collect())
     }
@@ -206,6 +211,23 @@ mod tests {
             let mut want: Vec<u16> = (0..PACKET_ELEMS as u16).collect();
             want.sort_by_key(|&j| map.bucket_of(p[j as usize]));
             assert_eq!(app[i], want, "APP packet {i}");
+        }
+    }
+
+    #[test]
+    fn psu_sort_is_worker_count_invariant() {
+        let mut rng = Rng::new(13);
+        let packets: Vec<[u8; PACKET_ELEMS]> = (0..BT_BATCH)
+            .map(|_| {
+                let mut p = [0u8; PACKET_ELEMS];
+                p.iter_mut().for_each(|b| *b = rng.next_u8());
+                p
+            })
+            .collect();
+        let want = ReferenceBackend::new().psu_sort(&packets).unwrap();
+        for workers in [2usize, 4, 16] {
+            let got = ReferenceBackend::with_workers(workers).psu_sort(&packets).unwrap();
+            assert_eq!(got, want, "workers {workers}");
         }
     }
 

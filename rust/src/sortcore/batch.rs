@@ -1,0 +1,164 @@
+//! Multi-threaded batch sorting: fan a batch of packets out across a
+//! shard-local scoped-thread pool.
+//!
+//! The popcount → bucket → scatter pipeline is per-packet independent, so
+//! a batch splits into contiguous chunks with zero synchronization beyond
+//! the scope join: each worker sorts its chunk straight into disjoint
+//! slices of the output, making the result bit-identical for any worker
+//! count (property-tested in `rust/tests/properties.rs`).
+//!
+//! Threads are scoped per batch ([`std::thread::scope`]) rather than kept
+//! in a persistent pool: the serving batch is hundreds of packets, so the
+//! sort work dwarfs the spawn cost, and scoping keeps the borrows safe
+//! with no channels or `Arc`s. Small batches stay sequential — a chunk
+//! below [`MIN_CHUNK`] packets is not worth a thread — so latency-sized
+//! batches never pay a spawn.
+
+use std::num::NonZeroUsize;
+use std::thread;
+
+use super::{bucket_sort_into, popcount_sort_into, BucketMap};
+
+/// Minimum packets per worker before the batch fans out: below this the
+/// spawn overhead exceeds the sort work of a chunk.
+pub const MIN_CHUNK: usize = 32;
+
+/// Hardware threads available to this process (1 when undetectable).
+pub fn available_workers() -> usize {
+    thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+}
+
+/// Worker-thread budget for one serving shard: an even split of the
+/// machine's hardware threads across `shards` shard worker threads,
+/// clamped to `[1, 4]` (each shard's own thread already provides one
+/// core of compute; a few helpers saturate the sort without starving
+/// co-resident shards).
+pub fn workers_per_shard(shards: usize) -> usize {
+    (available_workers() / shards.max(1)).clamp(1, 4)
+}
+
+/// The worker count a batch of `n` packets actually uses: never more
+/// than `workers`, never so many that a chunk falls below [`MIN_CHUNK`].
+fn effective_workers(n: usize, workers: usize) -> usize {
+    workers.max(1).min(n.div_ceil(MIN_CHUNK).max(1))
+}
+
+/// Sort every packet of a batch under both serving orderings — ACC
+/// (exact popcount) and APP (under `map`) — fanning out across at most
+/// `workers` scoped threads. Returns one permutation pair per packet,
+/// in batch order, bit-identical for every `workers` value.
+pub fn batch_sort_pairs<P: AsRef<[u8]> + Sync>(
+    packets: &[P],
+    map: &BucketMap,
+    workers: usize,
+) -> (Vec<Vec<u16>>, Vec<Vec<u16>>) {
+    let mut acc: Vec<Vec<u16>> =
+        packets.iter().map(|p| vec![0u16; p.as_ref().len()]).collect();
+    let mut app: Vec<Vec<u16>> =
+        packets.iter().map(|p| vec![0u16; p.as_ref().len()]).collect();
+    batch_sort_pairs_into(packets, map, workers, &mut acc, &mut app);
+    (acc, app)
+}
+
+/// [`batch_sort_pairs`] into caller-owned (pre-sized) permutation
+/// buffers: the zero-allocation path for callers that recycle response
+/// vectors. Each `acc[i]` / `app[i]` must already be
+/// `packets[i].as_ref().len()` long.
+pub fn batch_sort_pairs_into<P: AsRef<[u8]> + Sync>(
+    packets: &[P],
+    map: &BucketMap,
+    workers: usize,
+    acc: &mut [Vec<u16>],
+    app: &mut [Vec<u16>],
+) {
+    let n = packets.len();
+    assert_eq!(n, acc.len(), "one ACC buffer per packet");
+    assert_eq!(n, app.len(), "one APP buffer per packet");
+    let w = effective_workers(n, workers);
+    if w <= 1 {
+        sort_run(packets, map, acc, app);
+        return;
+    }
+    let chunk = n.div_ceil(w);
+    thread::scope(|s| {
+        for ((ps, accs), apps) in packets
+            .chunks(chunk)
+            .zip(acc.chunks_mut(chunk))
+            .zip(app.chunks_mut(chunk))
+        {
+            s.spawn(move || sort_run(ps, map, accs, apps));
+        }
+    });
+}
+
+/// One worker's share: sequential sort of a contiguous run.
+fn sort_run<P: AsRef<[u8]>>(
+    packets: &[P],
+    map: &BucketMap,
+    acc: &mut [Vec<u16>],
+    app: &mut [Vec<u16>],
+) {
+    for ((p, a), b) in packets.iter().zip(acc).zip(app) {
+        popcount_sort_into(p.as_ref(), a);
+        bucket_sort_into(p.as_ref(), map, b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Rng;
+
+    fn random_packets(rng: &mut Rng, n: usize, len: usize) -> Vec<Vec<u8>> {
+        (0..n).map(|_| (0..len).map(|_| rng.next_u8()).collect()).collect()
+    }
+
+    #[test]
+    fn parallel_matches_sequential_for_any_worker_count() {
+        let map = BucketMap::paper_k4();
+        let mut rng = Rng::new(29);
+        for n in [0usize, 1, 7, 33, 256] {
+            let packets = random_packets(&mut rng, n, 64);
+            let (acc1, app1) = batch_sort_pairs(&packets, &map, 1);
+            for workers in [2usize, 3, 8, 64] {
+                let (acc, app) = batch_sort_pairs(&packets, &map, workers);
+                assert_eq!(acc, acc1, "n {n} workers {workers}");
+                assert_eq!(app, app1, "n {n} workers {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_the_single_packet_kernels() {
+        let map = BucketMap::paper_k4();
+        let mut rng = Rng::new(31);
+        let packets = random_packets(&mut rng, 70, 64);
+        let (acc, app) = batch_sort_pairs(&packets, &map, 4);
+        for (i, p) in packets.iter().enumerate() {
+            let mut a = vec![0u16; p.len()];
+            crate::sortcore::popcount_sort_into(p, &mut a);
+            assert_eq!(acc[i], a, "ACC packet {i}");
+            let mut b = vec![0u16; p.len()];
+            crate::sortcore::bucket_sort_into(p, &map, &mut b);
+            assert_eq!(app[i], b, "APP packet {i}");
+        }
+    }
+
+    #[test]
+    fn effective_workers_respects_min_chunk() {
+        assert_eq!(effective_workers(0, 8), 1);
+        assert_eq!(effective_workers(MIN_CHUNK, 8), 1);
+        assert_eq!(effective_workers(2 * MIN_CHUNK, 8), 2);
+        assert_eq!(effective_workers(10_000, 4), 4);
+        assert_eq!(effective_workers(10_000, 0), 1);
+    }
+
+    #[test]
+    fn worker_budgets_are_sane() {
+        assert!(available_workers() >= 1);
+        for shards in [1usize, 4, 8, 1024] {
+            let w = workers_per_shard(shards);
+            assert!((1..=4).contains(&w), "shards {shards}: workers {w}");
+        }
+    }
+}

@@ -24,8 +24,10 @@
 //! into a caller-owned buffer. [`SortScratch`] packages the buffer-reuse
 //! pattern for streaming callers that sort millions of packets.
 
+pub mod batch;
 pub mod bucket;
 
+pub use batch::{available_workers, batch_sort_pairs, workers_per_shard};
 pub use bucket::BucketMap;
 
 use crate::{popcount8, WIDTH};

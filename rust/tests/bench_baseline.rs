@@ -1,0 +1,66 @@
+//! The committed `BENCH_*.json` baselines stay well-formed: they must
+//! parse through the same reader the `bench-gate` CLI uses, name the
+//! scenarios the gate is meant to protect, and record the tentpole
+//! speedups. (Cargo runs integration tests from the package root, which
+//! is where the baselines are committed.)
+
+use repro::benchutil::gate::{compare, BenchDoc, Verdict, DEFAULT_TOLERANCE};
+
+fn scalar(doc: &BenchDoc, name: &str) -> Option<f64> {
+    doc.scalars.iter().find(|(n, _)| n == name).and_then(|(_, v)| *v)
+}
+
+fn has_measurement(doc: &BenchDoc, name: &str) -> bool {
+    doc.measurements.iter().any(|(n, _)| n == name)
+}
+
+#[test]
+fn hotpath_baseline_parses_and_names_the_gated_scenarios() {
+    let doc = BenchDoc::load("BENCH_hotpath.json").expect("committed baseline must parse");
+    for name in [
+        "packet_bt_throughput legacy byte lanes",
+        "packet_bt_throughput packed words",
+        "packet_bt_throughput per-boundary words",
+        "ReferenceBackend psu_sort (256-packet batch)",
+        "ReferenceBackend psu_sort parallel (256-packet batch)",
+        "serve_throughput (1 shard(s), 256 reqs, 8 clients)",
+        "serve_throughput (8 shard(s), 256 reqs, 8 clients)",
+    ] {
+        assert!(has_measurement(&doc, name), "baseline lost scenario {name:?}");
+    }
+    assert!(doc.measurements.iter().all(|&(_, v)| v > 0.0), "non-positive median");
+}
+
+#[test]
+fn hotpath_baseline_records_the_block_and_parallel_speedups() {
+    let doc = BenchDoc::load("BENCH_hotpath.json").unwrap();
+    // the tentpole's acceptance: the shifted block kernel and the parallel
+    // sortcore are recorded wins, not aspirations
+    assert!(scalar(&doc, "packet_bt_block_speedup").expect("scalar missing") > 1.0);
+    assert!(scalar(&doc, "psu_sort_parallel_speedup").expect("scalar missing") > 1.0);
+    assert!(scalar(&doc, "packet_bt_throughput_speedup").expect("scalar missing") > 1.0);
+}
+
+#[test]
+fn serve_baseline_parses_and_gates_throughput() {
+    let doc = BenchDoc::load("BENCH_serve.json").expect("committed baseline must parse");
+    assert!(scalar(&doc, "serve_req_per_s").expect("scalar missing") > 0.0);
+    // exactly the *_per_s scalar is gated: the self-comparison must make
+    // at least one gated comparison and pass
+    let r = compare(&doc, &doc, DEFAULT_TOLERANCE);
+    assert!(r.passed(), "{}", r.render());
+    assert!(r.compared >= 1);
+}
+
+#[test]
+fn baselines_self_compare_clean() {
+    for path in ["BENCH_hotpath.json", "BENCH_serve.json"] {
+        let doc = BenchDoc::load(path).unwrap();
+        let r = compare(&doc, &doc, 0.0);
+        assert!(r.passed(), "{path}: {}", r.render());
+        assert!(
+            r.rows.iter().all(|row| row.verdict != Verdict::Missing),
+            "{path}: self-comparison must not report missing scenarios"
+        );
+    }
+}

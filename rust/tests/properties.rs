@@ -378,6 +378,126 @@ fn packed_data_plane_matches_byte_lane_ledger() {
     }
 }
 
+/// Tentpole equivalence (PR 6): the chunked block XOR/popcount kernel is
+/// bit-identical to a per-word scalar fold, across ragged block lengths
+/// that leave every possible `chunks_exact(4)` remainder (0–3 words).
+#[test]
+fn block_kernel_matches_per_word_scalar_oracle() {
+    use repro::noc::xor_popcount_block;
+    let mut rng = Rng::new(1313);
+    for case in 0..CASES {
+        let n = rng.next_below(41); // 0..=40 covers empty + every remainder
+        let a: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let want: u64 = a.iter().zip(&b).map(|(x, y)| (x ^ y).count_ones() as u64).sum();
+        assert_eq!(xor_popcount_block(&a, &b), want, "case {case}: n {n} words");
+    }
+}
+
+/// The frame's shifted-block internal BT equals pricing one flit boundary
+/// at a time — the PR 5 data plane — on ragged tails and narrow lanes.
+#[test]
+fn frame_block_bt_matches_per_boundary_pricing() {
+    use repro::noc::PacketFrame;
+    let mut rng = Rng::new(1414);
+    for case in 0..CASES {
+        let len = 1 + rng.next_below(120);
+        let lanes = [3usize, 8, 16][rng.next_below(3)];
+        if len.div_ceil(lanes) > repro::noc::MAX_FRAME_FLITS {
+            continue;
+        }
+        let bytes = random_values(&mut rng, len);
+        let frame = PacketFrame::from_bytes(&bytes, lanes);
+        let per_boundary: u64 =
+            frame.flits().windows(2).map(|w| w[0].transitions(w[1]) as u64).sum();
+        assert_eq!(
+            frame.internal_bt(),
+            per_boundary,
+            "case {case}: len {len} lanes {lanes}"
+        );
+    }
+}
+
+/// Tentpole equivalence (PR 6): the policy engine's batched observation
+/// path — one pass per TX register, segmented only at adaptive
+/// re-evaluation boundaries — is bit-identical to the per-packet loop, for
+/// all four policies, random batch sizes, and random split points.
+#[test]
+fn batched_policy_engine_matches_per_packet_loop() {
+    use repro::linkpower::{AdaptiveConfig, OrderPolicy, PolicyEngine};
+    let mut rng = Rng::new(1515);
+    let map = BucketMap::paper_k4();
+    for case in 0..CASES {
+        let policy = match rng.next_below(4) {
+            0 => OrderPolicy::Passthrough,
+            1 => OrderPolicy::Precise,
+            2 => OrderPolicy::approximate_paper(),
+            // a small cadence forces strategy re-evaluation *inside*
+            // batches, so the segmentation logic actually fires
+            _ => OrderPolicy::Adaptive(AdaptiveConfig {
+                evaluate_every: 1 + rng.next_below(9) as u64,
+                ..AdaptiveConfig::default()
+            }),
+        };
+        let n_packets = 1 + rng.next_below(60);
+        let packets: Vec<Vec<u8>> =
+            (0..n_packets).map(|_| random_values(&mut rng, 64)).collect();
+        let acc_perms: Vec<Vec<u16>> = packets
+            .iter()
+            .map(|p| sortcore::sort_indices_by(p, sortcore::ACC_BUCKETS, popcount8))
+            .collect();
+        let app_perms: Vec<Vec<u16>> = packets
+            .iter()
+            .map(|p| sortcore::sort_indices_by(p, map.k(), |v| map.bucket_of(v)))
+            .collect();
+
+        // oracle: one packet at a time
+        let mut scalar = PolicyEngine::with_window(policy.clone(), 32);
+        let want: Vec<StrategyKind> = (0..n_packets)
+            .map(|i| scalar.observe_with_perms(&packets[i], &acc_perms[i], &app_perms[i]))
+            .collect();
+
+        // batched: random split points, including mid-run and run-aligned
+        let mut batched = PolicyEngine::with_window(policy.clone(), 32);
+        let mut got: Vec<StrategyKind> = Vec::new();
+        let mut start = 0;
+        while start < n_packets {
+            let take = (1 + rng.next_below(16)).min(n_packets - start);
+            let end = start + take;
+            batched.observe_batch_with_perms(
+                &packets[start..end],
+                &acc_perms[start..end],
+                &app_perms[start..end],
+                &mut got,
+            );
+            start = end;
+        }
+
+        let ctx = format!("case {case}: {} over {n_packets} packets", policy.label());
+        assert_eq!(got, want, "{ctx}: transmitted strategies diverged");
+        assert_eq!(batched.snapshot(), scalar.snapshot(), "{ctx}: telemetry diverged");
+    }
+}
+
+/// Tentpole equivalence (PR 6): fanning a sort batch across worker threads
+/// never changes a single output bit — random batch sizes (including sizes
+/// that don't divide the chunk width) and packet lengths, 1 vs N workers.
+#[test]
+fn parallel_batch_sort_is_worker_invariant() {
+    let mut rng = Rng::new(1616);
+    let map = BucketMap::paper_k4();
+    for case in 0..CASES {
+        let n = [1usize, 7, 33, 64, 256][rng.next_below(5)];
+        let len = 1 + rng.next_below(96);
+        let packets: Vec<Vec<u8>> = (0..n).map(|_| random_values(&mut rng, len)).collect();
+        let want = sortcore::batch_sort_pairs(&packets, &map, 1);
+        for workers in [2usize, 3, 8] {
+            let got = sortcore::batch_sort_pairs(&packets, &map, workers);
+            assert_eq!(got, want, "case {case}: n {n} len {len} workers {workers}");
+        }
+    }
+}
+
 /// Lane-major framing is a bijection on packet bytes.
 #[test]
 fn lane_major_framing_preserves_bytes() {

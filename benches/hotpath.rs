@@ -5,23 +5,26 @@
 //! batched execution-backend path the serving engine dispatches (and,
 //! with `--features pjrt`, its PJRT-dispatched XLA twin), the
 //! `serve_throughput` scenario driving the public sharded `SortService`
-//! API end to end (1 shard vs N shards), and the
+//! API end to end through the pooled-reply `SortClient::submit_batch`
+//! path (1/4/8 shards at 8 clients, plus an 8-shard 16-client row so
+//! client-side contention is a measured axis), and the
 //! `serve_telemetry_overhead` scenario pricing the link-power probe +
 //! adaptive policy against the bare serving path.
 //!
 //! Set `BENCHUTIL_JSON=path.json` to dump every measurement as JSON
 //! (compared against the committed `BENCH_hotpath.json` baseline by the
-//! `bench-gate` CI step; the telemetry overhead, the byte-vs-word
-//! `packet_bt_throughput_speedup`, the per-boundary-vs-block
-//! `packet_bt_block_speedup`, and the sequential-vs-parallel
-//! `psu_sort_parallel_speedup` also land there as scalars, so all are
-//! tracked across PRs). Set `BENCH_SMOKE=1` to shrink every scenario to
-//! CI-smoke sizes (trajectory, not precision).
+//! `bench-gate` CI step; the telemetry `serve_telemetry_overhead_ratio`,
+//! the least-loaded-admission `serve_shard_scaling_8v4`, the
+//! byte-vs-word `packet_bt_throughput_speedup`, the
+//! per-boundary-vs-block `packet_bt_block_speedup`, and the
+//! sequential-vs-parallel `psu_sort_parallel_speedup` also land there as
+//! scalars, so all are tracked across PRs). Set `BENCH_SMOKE=1` to
+//! shrink every scenario to CI-smoke sizes (trajectory, not precision).
 
 use std::time::Duration;
 
 use repro::benchutil::{self, bench, black_box, Measurement};
-use repro::coordinator::SortService;
+use repro::coordinator::{SortClient, SortResponse, SortService};
 use repro::noc::{Link, Packet, PacketFrame};
 use repro::psu::{AccPsu, AppPsu, BitonicSorter, BucketMap, CsnSorter, SorterUnit};
 use repro::workload::{OrderStrategy, Rng, TrafficModel};
@@ -188,11 +191,14 @@ fn main() {
     }
 
     // serve_throughput: the public sharded SortService API under concurrent
-    // clients at 1, 4, and 8 shards (acceptance: >= 2x req/s at 4 shards on
-    // a 4+ core host; per-request results stay popcount-sorted
-    // permutations). Each shard's backend sizes its own sort worker pool
-    // via workers_per_shard, so the 8-shard point also exercises the
-    // intra-shard parallel sortcore.
+    // clients, each submitting its share through the pooled-reply
+    // SortClient::submit_batch path (acceptance: >= 2x req/s at 4 shards
+    // on a 4+ core host, >1.15x from 4 to 8 shards under least-loaded
+    // admission; per-request results stay popcount-sorted permutations).
+    // Each shard's backend sizes its own sort worker pool via
+    // workers_per_shard, so the 8-shard point also exercises the
+    // intra-shard parallel sortcore. The 16-client row varies client-side
+    // contention at fixed shard count.
     {
         use repro::runtime::PACKET_ELEMS;
         let reqs: Vec<[u8; PACKET_ELEMS]> = (0..n_reqs)
@@ -203,33 +209,41 @@ fn main() {
             })
             .collect();
         let mut per_shard_rps = Vec::new();
-        for shards in [1usize, 4, 8] {
+        for (shards, clients) in [(1usize, 8usize), (4, 8), (8, 8), (8, 16)] {
             let svc = SortService::spawn_reference_sharded(shards, Duration::from_micros(200))
                 .expect("spawn service");
-            let clients = 8;
             let chunk = reqs.len().div_ceil(clients);
+            // one pooled-reply client + reused response buffer per lane,
+            // held across iterations so the slot pool reaches steady state
+            let mut lanes: Vec<(SortClient, Vec<SortResponse>)> =
+                (0..clients).map(|_| (svc.client(), Vec::with_capacity(chunk))).collect();
             let m = bench(
-                &format!("serve_throughput ({shards} shard(s), {n_reqs} reqs, 8 clients)"),
+                &format!("serve_throughput ({shards} shard(s), {n_reqs} reqs, {clients} clients)"),
                 1,
                 iters(5),
                 || {
                     std::thread::scope(|s| {
-                        for c in reqs.chunks(chunk) {
-                            let svc = svc.clone();
-                            s.spawn(move || svc.sort_many(c).expect("sort"));
+                        for (c, lane) in reqs.chunks(chunk).zip(lanes.iter_mut()) {
+                            s.spawn(move || {
+                                let (client, out) = lane;
+                                client.submit_batch(c, out).expect("sort");
+                            });
                         }
                     });
                 },
             );
             let rps = m.per_second(reqs.len() as u64);
             println!(
-                "  -> {:.1} kreq/s over {} shard(s), mean batch {:.1}, p99 {:.1?}",
+                "  -> {:.1} kreq/s over {} shard(s) / {} client(s), mean batch {:.1}, p99 {:.1?}",
                 rps / 1e3,
                 shards,
+                clients,
                 svc.metrics.mean_batch(),
                 svc.metrics.latency.p99(),
             );
-            per_shard_rps.push((shards, rps));
+            if clients == 8 {
+                per_shard_rps.push((shards, rps));
+            }
             all.push(m);
 
             // sanity: served results are still popcount-sorted permutations
@@ -250,6 +264,14 @@ fn main() {
                     rps / one
                 );
             }
+        }
+        let rps_at = |n: usize| {
+            per_shard_rps.iter().find(|&&(s, _)| s == n).map(|&(_, r)| r)
+        };
+        if let (Some(r4), Some(r8)) = (rps_at(4), rps_at(8)) {
+            let scaling = r8 / r4;
+            println!("  -> serve_shard_scaling_8v4: {scaling:.2}x (8 shards vs 4, 8 clients)");
+            scalars.push(("serve_shard_scaling_8v4", scaling));
         }
     }
 
@@ -273,15 +295,19 @@ fn main() {
                 .expect("spawn service");
             let clients = 8;
             let chunk = reqs.len().div_ceil(clients);
+            let mut lanes: Vec<(SortClient, Vec<SortResponse>)> =
+                (0..clients).map(|_| (svc.client(), Vec::with_capacity(chunk))).collect();
             let m = bench(
                 &format!("serve_telemetry_overhead (probe {tag}, 2 shards, {n_reqs} reqs)"),
                 1,
                 iters(5),
                 || {
                     std::thread::scope(|s| {
-                        for c in reqs.chunks(chunk) {
-                            let svc = svc.clone();
-                            s.spawn(move || svc.sort_many(c).expect("sort"));
+                        for (c, lane) in reqs.chunks(chunk).zip(lanes.iter_mut()) {
+                            s.spawn(move || {
+                                let (client, out) = lane;
+                                client.submit_batch(c, out).expect("sort");
+                            });
                         }
                     });
                 },

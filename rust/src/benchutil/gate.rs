@@ -10,14 +10,22 @@
 //!
 //! * **Measurements** are timings — lower is better. The throughput ratio
 //!   `baseline_median / fresh_median - 1` must not fall below `-tolerance`.
-//! * **Scalars** are gated only when the name marks them as
-//!   higher-is-better (`*_per_s`, `*_speedup`); the ratio
-//!   `fresh / baseline - 1` must not fall below `-tolerance`. All other
-//!   scalars (counts, ratios without a direction) are informational.
+//! * A measurement recorded from fewer than [`GATE_MIN_ITERS`] iterations
+//!   (on either side) is **under-sampled**: its delta is shown but never
+//!   gated — a 2-iteration median is noise, not a baseline. Documents
+//!   predating the `iters` field gate as before.
+//! * **Scalars** are gated only when the name declares a direction:
+//!   higher-is-better for `*_per_s`, `*_speedup`, and `*_scaling_*`
+//!   (delta `fresh / baseline - 1`); lower-is-better for
+//!   `*_overhead_ratio` (delta `baseline / fresh - 1`). Either delta must
+//!   not fall below `-tolerance`. All other scalars (counts, free-form
+//!   ratios) are informational.
 //! * A baseline scenario **missing** from the fresh run is a warning row,
 //!   not a failure (smoke runs may legitimately skip scenarios), but a run
 //!   with **zero** gated comparisons fails outright — an empty fresh file
-//!   must never pass the gate.
+//!   must never pass the gate. Scalars a pipeline cannot afford to lose
+//!   silently are asserted present with [`require_scalars`]
+//!   (`bench-gate --require-scalars`).
 //!
 //! The JSON reader is a minimal hand-rolled parser (this crate vendors no
 //! serde); it handles the full JSON grammar the [`super::json_document`]
@@ -28,6 +36,11 @@ use anyhow::{bail, Context, Result};
 /// Default regression tolerance: a gated scenario may lose up to 10%
 /// throughput before the gate fails.
 pub const DEFAULT_TOLERANCE: f64 = 0.10;
+
+/// Minimum recorded iterations for a measurement to be gated (mirrors
+/// [`super::MIN_BENCH_ITERS`]; kept as f64 because the parser reads all
+/// JSON numbers as f64).
+pub const GATE_MIN_ITERS: f64 = super::MIN_BENCH_ITERS as f64;
 
 // ---------------------------------------------------------------------------
 // Minimal JSON parser
@@ -270,11 +283,23 @@ impl Parser<'_> {
 // Bench documents
 // ---------------------------------------------------------------------------
 
+/// One scenario row of a parsed benchutil document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchMeasurement {
+    /// Scenario name.
+    pub name: String,
+    /// Median per-iteration wall time, nanoseconds.
+    pub median_ns: f64,
+    /// Recorded iteration count; `None` for documents written before the
+    /// field existed (treated as sufficiently sampled).
+    pub iters: Option<f64>,
+}
+
 /// One parsed benchutil document: scenario medians plus free-form scalars.
 #[derive(Debug, Clone, Default)]
 pub struct BenchDoc {
-    /// `(scenario name, median ns)` in file order.
-    pub measurements: Vec<(String, f64)>,
+    /// Scenario rows in file order.
+    pub measurements: Vec<BenchMeasurement>,
     /// `(name, value)` in file order; `None` was a JSON `null` (non-finite).
     pub scalars: Vec<(String, Option<f64>)>,
 }
@@ -291,11 +316,12 @@ impl BenchDoc {
                     .and_then(Json::as_str)
                     .context("measurement without a name")?
                     .to_string();
-                let median = m
+                let median_ns = m
                     .get("median_ns")
                     .and_then(Json::as_f64)
                     .with_context(|| format!("measurement {name:?} without median_ns"))?;
-                doc.measurements.push((name, median));
+                let iters = m.get("iters").and_then(Json::as_f64);
+                doc.measurements.push(BenchMeasurement { name, median_ns, iters });
             }
         }
         if let Some(Json::Obj(ss)) = root.get("scalars") {
@@ -313,8 +339,8 @@ impl BenchDoc {
         Self::parse(&text).with_context(|| format!("parsing {path}"))
     }
 
-    fn measurement(&self, name: &str) -> Option<f64> {
-        self.measurements.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    fn measurement(&self, name: &str) -> Option<&BenchMeasurement> {
+        self.measurements.iter().find(|m| m.name == name)
     }
 
     fn scalar(&self, name: &str) -> Option<Option<f64>> {
@@ -322,10 +348,31 @@ impl BenchDoc {
     }
 }
 
-/// A scalar is gated (higher-is-better) only when its name says so;
-/// everything else is informational (counts, sizes, free-form ratios).
-fn scalar_is_gated(name: &str) -> bool {
-    name.ends_with("_per_s") || name.ends_with("_speedup")
+/// The gating direction a scalar's name declares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ScalarDir {
+    /// Throughput-like: regressions shrink it.
+    Higher,
+    /// Overhead-like: regressions grow it.
+    Lower,
+}
+
+/// A scalar is gated only when its name declares a direction; everything
+/// else is informational (counts, sizes, free-form ratios).
+fn scalar_direction(name: &str) -> Option<ScalarDir> {
+    if name.ends_with("_per_s") || name.ends_with("_speedup") || name.contains("_scaling_") {
+        Some(ScalarDir::Higher)
+    } else if name.ends_with("_overhead_ratio") {
+        Some(ScalarDir::Lower)
+    } else {
+        None
+    }
+}
+
+/// True when a recorded iteration count clears the gating floor
+/// (unknown counts — pre-`iters` documents — are assumed to clear it).
+fn iters_ok(iters: Option<f64>) -> bool {
+    iters.map_or(true, |i| i >= GATE_MIN_ITERS)
 }
 
 // ---------------------------------------------------------------------------
@@ -445,30 +492,36 @@ impl GateReport {
 pub fn compare(baseline: &BenchDoc, fresh: &BenchDoc, tolerance: f64) -> GateReport {
     let mut rows = Vec::new();
     let mut compared = 0usize;
-    for (name, base) in &baseline.measurements {
-        let row = match fresh.measurement(name) {
-            Some(f) if f > 0.0 && *base > 0.0 => {
-                compared += 1;
+    for base in &baseline.measurements {
+        let row = match fresh.measurement(&base.name) {
+            Some(f) if f.median_ns > 0.0 && base.median_ns > 0.0 => {
                 // medians are timings: throughput delta inverts the ratio
-                let delta = base / f - 1.0;
+                let delta = base.median_ns / f.median_ns - 1.0;
+                let verdict = if !iters_ok(base.iters) || !iters_ok(f.iters) {
+                    // under-sampled on either side: show the delta, never gate
+                    Verdict::Info
+                } else {
+                    compared += 1;
+                    if delta < -tolerance { Verdict::Fail } else { Verdict::Pass }
+                };
                 Row {
-                    name: name.clone(),
-                    baseline: Some(*base),
-                    fresh: Some(f),
+                    name: base.name.clone(),
+                    baseline: Some(base.median_ns),
+                    fresh: Some(f.median_ns),
                     delta: Some(delta),
-                    verdict: if delta < -tolerance { Verdict::Fail } else { Verdict::Pass },
+                    verdict,
                 }
             }
             Some(f) => Row {
-                name: name.clone(),
-                baseline: Some(*base),
-                fresh: Some(f),
+                name: base.name.clone(),
+                baseline: Some(base.median_ns),
+                fresh: Some(f.median_ns),
                 delta: None,
                 verdict: Verdict::Info,
             },
             None => Row {
-                name: name.clone(),
-                baseline: Some(*base),
+                name: base.name.clone(),
+                baseline: Some(base.median_ns),
                 fresh: None,
                 delta: None,
                 verdict: Verdict::Missing,
@@ -478,10 +531,14 @@ pub fn compare(baseline: &BenchDoc, fresh: &BenchDoc, tolerance: f64) -> GateRep
     }
     for (name, base) in &baseline.scalars {
         let fresh_v = fresh.scalar(name);
-        let row = match (base, fresh_v) {
-            (Some(b), Some(Some(f))) if scalar_is_gated(name) && *b > 0.0 && f > 0.0 => {
+        let dir = scalar_direction(name);
+        let row = match (base, fresh_v, dir) {
+            (Some(b), Some(Some(f)), Some(dir)) if *b > 0.0 && f > 0.0 => {
                 compared += 1;
-                let delta = f / b - 1.0;
+                let delta = match dir {
+                    ScalarDir::Higher => f / b - 1.0,
+                    ScalarDir::Lower => b / f - 1.0,
+                };
                 Row {
                     name: name.clone(),
                     baseline: Some(*b),
@@ -490,14 +547,14 @@ pub fn compare(baseline: &BenchDoc, fresh: &BenchDoc, tolerance: f64) -> GateRep
                     verdict: if delta < -tolerance { Verdict::Fail } else { Verdict::Pass },
                 }
             }
-            (_, None) => Row {
+            (_, None, _) => Row {
                 name: name.clone(),
                 baseline: *base,
                 fresh: None,
                 delta: None,
                 verdict: Verdict::Missing,
             },
-            (_, Some(f)) => Row {
+            (_, Some(f), _) => Row {
                 name: name.clone(),
                 baseline: *base,
                 fresh: f,
@@ -508,6 +565,24 @@ pub fn compare(baseline: &BenchDoc, fresh: &BenchDoc, tolerance: f64) -> GateRep
         rows.push(row);
     }
     GateReport { rows, compared, tolerance }
+}
+
+/// Assert that `doc` carries every named scalar with a finite value.
+///
+/// The CLI's `bench-gate --require-scalars a,b` entry point: a gated
+/// pipeline must fail loudly when a scalar it depends on silently
+/// disappears from the fresh run (e.g. a bench axis was skipped).
+pub fn require_scalars(doc: &BenchDoc, names: &[&str]) -> Result<()> {
+    let missing: Vec<&str> = names
+        .iter()
+        .copied()
+        .filter(|n| !matches!(doc.scalar(n), Some(Some(_))))
+        .collect();
+    if missing.is_empty() {
+        Ok(())
+    } else {
+        bail!("required scalar(s) missing or null: {}", missing.join(", "));
+    }
 }
 
 /// Load both files and compare; the CLI's `bench-gate` entry point.
@@ -532,7 +607,14 @@ mod tests {
 
     fn doc(measurements: &[(&str, f64)], scalars: &[(&str, Option<f64>)]) -> BenchDoc {
         BenchDoc {
-            measurements: measurements.iter().map(|&(n, v)| (n.to_string(), v)).collect(),
+            measurements: measurements
+                .iter()
+                .map(|&(n, v)| BenchMeasurement {
+                    name: n.to_string(),
+                    median_ns: v,
+                    iters: Some(GATE_MIN_ITERS),
+                })
+                .collect(),
             scalars: scalars.iter().map(|&(n, v)| (n.to_string(), v)).collect(),
         }
     }
@@ -541,19 +623,34 @@ mod tests {
     fn parses_benchutil_documents() {
         let m = crate::benchutil::Measurement {
             name: "sort \"fast\"".into(),
-            iters: 3,
+            iters: 7,
             median: std::time::Duration::from_nanos(1500),
             mean: std::time::Duration::from_nanos(1600),
             min: std::time::Duration::from_nanos(1400),
+            stddev: std::time::Duration::from_nanos(90),
         };
         let text = crate::benchutil::json_document(
             &[m],
             &[("req_per_s", 1234.5), ("bad", f64::NAN)],
         );
         let doc = BenchDoc::parse(&text).unwrap();
-        assert_eq!(doc.measurements, vec![("sort \"fast\"".to_string(), 1500.0)]);
+        assert_eq!(
+            doc.measurements,
+            vec![BenchMeasurement {
+                name: "sort \"fast\"".to_string(),
+                median_ns: 1500.0,
+                iters: Some(7.0),
+            }]
+        );
         assert_eq!(doc.scalar("req_per_s"), Some(Some(1234.5)));
         assert_eq!(doc.scalar("bad"), Some(None), "NaN serializes as null");
+
+        // documents predating the `iters` field parse with iters: None
+        let legacy = BenchDoc::parse(
+            "{\"measurements\":[{\"name\":\"old\",\"median_ns\":10}],\"scalars\":{}}",
+        )
+        .unwrap();
+        assert_eq!(legacy.measurements[0].iters, None);
     }
 
     #[test]
@@ -608,6 +705,69 @@ mod tests {
         let r = compare(&base, &fresh, DEFAULT_TOLERANCE);
         assert_eq!(r.failures(), vec!["bt_speedup"]);
         assert_eq!(r.compared, 1, "counts are informational");
+    }
+
+    #[test]
+    fn scaling_scalars_gate_higher_is_better() {
+        // serve_shard_scaling_8v4 shrinking from 1.3 to 1.0 is a regression.
+        let base = doc(&[], &[("serve_shard_scaling_8v4", 1.3)]);
+        let fresh = doc(&[], &[("serve_shard_scaling_8v4", 1.0)]);
+        let r = compare(&base, &fresh, DEFAULT_TOLERANCE);
+        assert_eq!(r.failures(), vec!["serve_shard_scaling_8v4"]);
+
+        let better = doc(&[], &[("serve_shard_scaling_8v4", 1.6)]);
+        assert!(compare(&base, &better, DEFAULT_TOLERANCE).passed());
+    }
+
+    #[test]
+    fn overhead_ratios_gate_lower_is_better() {
+        // an overhead ratio growing from 1.1 to 1.5 is a regression...
+        let base = doc(&[], &[("serve_telemetry_overhead_ratio", 1.1)]);
+        let worse = doc(&[], &[("serve_telemetry_overhead_ratio", 1.5)]);
+        let r = compare(&base, &worse, DEFAULT_TOLERANCE);
+        assert_eq!(r.failures(), vec!["serve_telemetry_overhead_ratio"]);
+        assert!(r.rows[0].delta.unwrap() < -DEFAULT_TOLERANCE);
+
+        // ...and shrinking toward 1.0 is an improvement, never a failure
+        let better = doc(&[], &[("serve_telemetry_overhead_ratio", 1.01)]);
+        let r = compare(&base, &better, 0.0);
+        assert!(r.passed(), "{}", r.render());
+        assert!(r.rows[0].delta.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn under_sampled_measurements_are_shown_but_not_gated() {
+        let mut base = doc(&[("hot", 1000.0), ("cold", 500.0)], &[]);
+        let mut fresh = doc(&[("hot", 5000.0), ("cold", 505.0)], &[]);
+        // a 2-iteration fresh median for "hot" would otherwise fail the gate
+        fresh.measurements[0].iters = Some(2.0);
+        let r = compare(&base, &fresh, DEFAULT_TOLERANCE);
+        assert!(r.passed(), "{}", r.render());
+        assert_eq!(r.compared, 1, "only the well-sampled row gates");
+        assert_eq!(r.rows[0].verdict, Verdict::Info);
+        assert!(r.rows[0].delta.is_some(), "the delta is still displayed");
+
+        // an under-sampled *baseline* is equally untrustworthy
+        base.measurements[1].iters = Some(1.0);
+        let r = compare(&base, &fresh, DEFAULT_TOLERANCE);
+        assert!(!r.passed(), "zero gated comparisons must still fail");
+
+        // documents without the iters field (legacy baselines) gate normally
+        base.measurements[1].iters = None;
+        fresh.measurements[1].iters = None;
+        let r = compare(&base, &fresh, DEFAULT_TOLERANCE);
+        assert_eq!(r.compared, 1);
+    }
+
+    #[test]
+    fn require_scalars_catches_missing_and_null() {
+        let d = doc(&[], &[("serve_shard_scaling_8v4", 1.3), ("bad", None)]);
+        assert!(require_scalars(&d, &["serve_shard_scaling_8v4"]).is_ok());
+        let err = require_scalars(&d, &["serve_shard_scaling_8v4", "bad", "gone"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bad") && err.contains("gone"), "{err}");
+        assert!(!err.contains("scaling_8v4"), "{err}");
     }
 
     #[test]

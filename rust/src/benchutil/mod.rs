@@ -1,15 +1,26 @@
 //! Minimal benchmarking harness (criterion isn't vendored in this offline
-//! build): warmup + timed iterations, median/mean/min reporting, a
+//! build): warmup + timed iterations, median/mean/min/stddev reporting, a
 //! `black_box` to defeat constant folding, and a hand-rolled JSON dump
 //! (`BENCH_*` trajectory: CI uploads the file as a workflow artifact so
 //! throughput regressions are visible across PRs, and the [`gate`]
 //! submodule compares fresh runs against the committed `BENCH_*.json`
 //! baselines, failing the build on >10% throughput drops).
+//!
+//! Statistical floor: [`bench`] clamps every scenario to at least
+//! [`MIN_BENCH_ITERS`] timed iterations and one warmup run, and every
+//! [`Measurement`] carries its sample standard deviation (`stddev_ns` in
+//! the JSON). The gate side enforces the same floor: measurements whose
+//! recorded iteration count is below it are reported but never gated —
+//! a 2-iteration median is noise, not a baseline.
 
 use std::hint::black_box as bb;
 use std::time::{Duration, Instant};
 
 pub mod gate;
+
+/// Minimum timed iterations any [`bench`] scenario runs, and the floor
+/// below which [`gate`] refuses to gate a measurement.
+pub const MIN_BENCH_ITERS: u32 = 5;
 
 /// Re-export for benches.
 pub fn black_box<T>(x: T) -> T {
@@ -29,14 +40,17 @@ pub struct Measurement {
     pub mean: Duration,
     /// Fastest iteration.
     pub min: Duration,
+    /// Sample standard deviation of the per-iteration wall times.
+    pub stddev: Duration,
 }
 
 impl Measurement {
-    /// One human-readable summary line (name, median/mean/min, iters).
+    /// One human-readable summary line (name, median/mean/min/stddev,
+    /// iters).
     pub fn report(&self) -> String {
         format!(
-            "{:<44} {:>10.3?} median {:>10.3?} mean {:>10.3?} min ({} iters)",
-            self.name, self.median, self.mean, self.min, self.iters
+            "{:<44} {:>10.3?} median {:>10.3?} mean {:>10.3?} min ±{:.3?} ({} iters)",
+            self.name, self.median, self.mean, self.min, self.stddev, self.iters
         )
     }
 
@@ -48,12 +62,13 @@ impl Measurement {
     /// One JSON object (`{:?}` on the name handles quote escaping).
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"name\":{:?},\"iters\":{},\"median_ns\":{},\"mean_ns\":{},\"min_ns\":{}}}",
+            "{{\"name\":{:?},\"iters\":{},\"median_ns\":{},\"mean_ns\":{},\"min_ns\":{},\"stddev_ns\":{}}}",
             self.name,
             self.iters,
             self.median.as_nanos(),
             self.mean.as_nanos(),
-            self.min.as_nanos()
+            self.min.as_nanos(),
+            self.stddev.as_nanos()
         )
     }
 }
@@ -101,8 +116,13 @@ pub fn write_json(
     std::fs::write(path, json_document(measurements, scalars))
 }
 
-/// Time `f` over `iters` iterations after `warmup` untimed runs.
+/// Time `f` over `iters` iterations after `warmup` untimed runs. Both
+/// are clamped to a statistical floor — at least [`MIN_BENCH_ITERS`]
+/// timed iterations and one warmup — so no caller (smoke mode included)
+/// can record a gate-poisoning 2-iteration median.
 pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Measurement {
+    let warmup = warmup.max(1);
+    let iters = iters.max(MIN_BENCH_ITERS);
     for _ in 0..warmup {
         bb(f());
     }
@@ -117,7 +137,22 @@ pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -
     let median = samples[samples.len() / 2];
     let mean = samples.iter().sum::<Duration>() / iters.max(1);
     let min = samples[0];
-    let m = Measurement { name: name.to_string(), iters, median, mean, min };
+    // sample (n−1) standard deviation; zero when a single iteration ran
+    let stddev = if samples.len() < 2 {
+        Duration::ZERO
+    } else {
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|s| {
+                let d = s.as_secs_f64() - mean_s;
+                d * d
+            })
+            .sum::<f64>()
+            / (samples.len() - 1) as f64;
+        Duration::from_secs_f64(var.sqrt())
+    };
+    let m = Measurement { name: name.to_string(), iters, median, mean, min, stddev };
     println!("{}", m.report());
     m
 }
@@ -136,6 +171,14 @@ mod tests {
     }
 
     #[test]
+    fn bench_enforces_the_iteration_floor() {
+        // a caller asking for 2 noisy iterations gets the floor instead
+        let m = bench("clamped", 0, 2, || 7u64);
+        assert_eq!(m.iters, MIN_BENCH_ITERS);
+        assert!(m.to_json().contains("\"stddev_ns\":"));
+    }
+
+    #[test]
     fn json_round_trip_shape() {
         let m = Measurement {
             name: "sort \"fast\"".into(),
@@ -143,10 +186,12 @@ mod tests {
             median: Duration::from_nanos(1500),
             mean: Duration::from_nanos(1600),
             min: Duration::from_nanos(1400),
+            stddev: Duration::from_nanos(90),
         };
         let j = m.to_json();
         assert!(j.starts_with('{') && j.ends_with('}'));
         assert!(j.contains("\"median_ns\":1500"));
+        assert!(j.contains("\"stddev_ns\":90"));
         assert!(j.contains("\\\"fast\\\""), "quotes must be escaped: {j}");
 
         let path = std::env::temp_dir().join("benchutil_json_test.json");

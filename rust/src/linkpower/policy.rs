@@ -23,6 +23,7 @@
 //! bypass path on traffic where sorting pays little.
 
 use crate::hw::Tech;
+use crate::noc::PackedStream;
 use crate::psu::{AccPsu, AppPsu, SorterUnit};
 use crate::sortcore::{BucketMap, ACC_BUCKETS};
 
@@ -234,6 +235,9 @@ pub struct PolicyEngine {
     map: BucketMap,
     probe: LinkProbe,
     scratch: ProbeScratch,
+    /// Reused pack-once word buffer for
+    /// [`PolicyEngine::observe_batch_with_perms`].
+    stream: PackedStream,
     active: StrategyKind,
     switches: u64,
 }
@@ -253,6 +257,7 @@ impl PolicyEngine {
             map,
             probe: LinkProbe::new(window_packets),
             scratch: ProbeScratch::new(),
+            stream: PackedStream::new(),
             active,
             switches: 0,
         }
@@ -303,6 +308,27 @@ impl PolicyEngine {
         app_perms: &[Vec<u16>],
         strategies: &mut Vec<StrategyKind>,
     ) {
+        // pack once into the engine-owned stream, then segment
+        let mut stream = std::mem::take(&mut self.stream);
+        stream.pack(packets);
+        self.observe_batch_with_perms_packed(&stream, packets, acc_perms, app_perms, strategies);
+        self.stream = stream;
+    }
+
+    /// [`PolicyEngine::observe_batch_with_perms`] for callers that
+    /// already packed the batch (the serving loop packs each dispatched
+    /// batch exactly once and shares the stream with the engine):
+    /// `packed.words(i)` must be the raw stream-word image of
+    /// `packets[i]`. Every adaptive run slice prices from the same shared
+    /// stream — the probe never re-frames the raw ordering.
+    pub fn observe_batch_with_perms_packed<P: AsRef<[u8]>>(
+        &mut self,
+        packed: &PackedStream,
+        packets: &[P],
+        acc_perms: &[Vec<u16>],
+        app_perms: &[Vec<u16>],
+        strategies: &mut Vec<StrategyKind>,
+    ) {
         assert_eq!(packets.len(), acc_perms.len(), "one ACC permutation per packet");
         assert_eq!(packets.len(), app_perms.len(), "one APP permutation per packet");
         let mut start = 0usize;
@@ -319,7 +345,9 @@ impl PolicyEngine {
             };
             let used = self.active;
             let end = start + run;
-            self.probe.observe_batch(
+            self.probe.observe_batch_packed(
+                packed,
+                start,
                 &packets[start..end],
                 &acc_perms[start..end],
                 &app_perms[start..end],

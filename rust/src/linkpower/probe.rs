@@ -23,8 +23,8 @@
 //! query — that window is what the adaptive policy scores.
 
 use crate::noc::{
-    pack_permuted_words, pack_stream_words, FrameScratch, Link, MAX_FRAME_BYTES,
-    MAX_FRAME_FLITS,
+    pack_permuted_words, pack_stream_words, FrameScratch, Link, PackedStream, FLIT_WORDS,
+    MAX_FRAME_BYTES, MAX_FRAME_FLITS,
 };
 use crate::sortcore;
 use crate::FLIT_LANES;
@@ -230,6 +230,10 @@ pub struct LinkProbe {
     frames: FrameScratch,
     /// Reused per-packet observation buffer for [`LinkProbe::observe_batch`].
     batch: Vec<PacketBt>,
+    /// Reused pack-once word buffer for [`LinkProbe::observe_batch`];
+    /// callers that already packed the batch hand their own stream to
+    /// [`LinkProbe::observe_batch_packed`] instead.
+    stream: PackedStream,
 }
 
 impl LinkProbe {
@@ -244,6 +248,7 @@ impl LinkProbe {
             packets: 0,
             frames: FrameScratch::new(),
             batch: Vec::new(),
+            stream: PackedStream::new(),
         }
     }
 
@@ -341,20 +346,51 @@ impl LinkProbe {
         app_perms: &[Vec<u16>],
         served: StrategyKind,
     ) -> PacketBt {
+        // pack once into the probe-owned stream, then price from words
+        // (take/put-back so the stream and the links can be borrowed
+        // together)
+        let mut stream = std::mem::take(&mut self.stream);
+        stream.pack(packets);
+        let total =
+            self.observe_batch_packed(&stream, 0, packets, acc_perms, app_perms, served);
+        self.stream = stream;
+        total
+    }
+
+    /// [`LinkProbe::observe_batch`] for callers that already packed the
+    /// batch's raw stream words: `packed.words(first + i)` must hold the
+    /// [`crate::noc::pack_stream_words`] image of `packets[i]` (`None`
+    /// spans take the streaming byte fallback). The serving path packs
+    /// each dispatched batch exactly once and shares the stream across
+    /// every adaptive-policy run slice instead of re-framing per run.
+    ///
+    /// # Panics
+    /// If the permutation slices don't match `packets` in length.
+    pub fn observe_batch_packed<P: AsRef<[u8]>>(
+        &mut self,
+        packed: &PackedStream,
+        first: usize,
+        packets: &[P],
+        acc_perms: &[Vec<u16>],
+        app_perms: &[Vec<u16>],
+        served: StrategyKind,
+    ) -> PacketBt {
         assert_eq!(packets.len(), acc_perms.len(), "one ACC permutation per packet");
         assert_eq!(packets.len(), app_perms.len(), "one APP permutation per packet");
         self.batch.clear();
         self.batch.resize(packets.len(), PacketBt::default());
         let mut words = [0u64; 2 * MAX_FRAME_FLITS];
-        // pass 1: arrival order
-        for (obs, p) in self.batch.iter_mut().zip(packets) {
+        // pass 1: arrival order, priced straight from the shared packed
+        // words — no per-pass re-framing
+        for (i, (obs, p)) in self.batch.iter_mut().zip(packets).enumerate() {
             let p = p.as_ref();
             obs.flits = p.len().div_ceil(FLIT_LANES) as u64;
-            obs.raw = if p.len() <= MAX_FRAME_BYTES {
-                let n = pack_stream_words(p, &mut words);
-                self.raw.send_transfer_words(&words[..n])
-            } else {
-                self.raw.send_transfer_bytes(p)
+            obs.raw = match packed.words(first + i) {
+                Some(w) => {
+                    debug_assert_eq!(w.len() as u64, obs.flits * FLIT_WORDS as u64);
+                    self.raw.send_transfer_words(w)
+                }
+                None => self.raw.send_transfer_bytes(p),
             };
         }
         // pass 2: ACC ordering (gather-fused permutation packing)
@@ -540,6 +576,48 @@ mod tests {
             batched.observe_batch(&packets, &acc_perms, &app_perms, StrategyKind::Approximate);
         assert_eq!(got, want);
         assert_eq!(batched.snapshot(), one.snapshot());
+    }
+
+    #[test]
+    fn prepacked_batch_matches_self_packed_batch() {
+        let map = BucketMap::paper_k4();
+        let mut rng = Rng::new(42);
+        let mut packets: Vec<Vec<u8>> = (0..12).map(|_| random_packet(&mut rng)).collect();
+        packets.push((0..2 * crate::noc::MAX_FRAME_BYTES).map(|_| rng.next_u8()).collect());
+        let (mut acc_perms, mut app_perms) = (Vec::new(), Vec::new());
+        for p in &packets {
+            let mut a = vec![0u16; p.len()];
+            crate::sortcore::popcount_sort_into(p, &mut a);
+            acc_perms.push(a);
+            let mut b = vec![0u16; p.len()];
+            crate::sortcore::bucket_sort_into(p, &map, &mut b);
+            app_perms.push(b);
+        }
+        let mut whole = LinkProbe::new(8);
+        whole.observe_batch(&packets, &acc_perms, &app_perms, StrategyKind::Precise);
+        // pack ONCE, then price the batch as two run slices through the
+        // shared stream — the policy engine's segmentation shape
+        let mut stream = crate::noc::PackedStream::new();
+        stream.pack(&packets);
+        let mut sliced = LinkProbe::new(8);
+        let split = 5;
+        sliced.observe_batch_packed(
+            &stream,
+            0,
+            &packets[..split],
+            &acc_perms[..split],
+            &app_perms[..split],
+            StrategyKind::Precise,
+        );
+        sliced.observe_batch_packed(
+            &stream,
+            split,
+            &packets[split..],
+            &acc_perms[split..],
+            &app_perms[split..],
+            StrategyKind::Precise,
+        );
+        assert_eq!(sliced.snapshot(), whole.snapshot());
     }
 
     #[test]

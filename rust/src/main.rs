@@ -45,8 +45,8 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
         "ablate" => &["ks", "packets"],
         "policy" => &["packets"],
         "report" | "all" => &["only", "out"],
-        "serve" => &["requests", "shards", "max-wait-us", "policy", "stats"],
-        "bench-gate" => &["fresh", "baseline", "tolerance", "bless"],
+        "serve" => &["requests", "shards", "clients", "max-wait-us", "policy", "stats"],
+        "bench-gate" => &["fresh", "baseline", "tolerance", "bless", "require-scalars"],
         "help" | "--help" | "-h" => &[],
         _ => return None,
     })
@@ -65,6 +65,7 @@ fn flag_doc(flag: &str) -> &'static str {
         "out" => "output directory for RESULTS.md and results.json",
         "requests" => "total sort requests to issue",
         "shards" => "worker shards (each owns its own backend)",
+        "clients" => "concurrent client threads issuing batches (default 8)",
         "max-wait-us" => "dynamic-batching wait budget in microseconds",
         "policy" => "ordering policy: passthrough|precise|approx|adaptive",
         "stats" => "write the Prometheus-style snapshot to FILE ('-' = stdout)",
@@ -72,6 +73,7 @@ fn flag_doc(flag: &str) -> &'static str {
         "baseline" => "committed baseline JSON (BENCH_*.json)",
         "tolerance" => "allowed throughput drop as a fraction (default 0.10)",
         "bless" => "copy the fresh file over the baseline instead of gating",
+        "require-scalars" => "comma-separated scalar names the fresh file must carry",
         _ => "",
     }
 }
@@ -197,22 +199,26 @@ report & serving:
   all [--only NAME,...] [--out DIR]
                             `report` plus every experiment's full text
                             rendering on stdout, in paper order
-  serve [--requests N] [--shards S] [--max-wait-us U]
+  serve [--requests N] [--shards S] [--clients C] [--max-wait-us U]
         [--policy passthrough|precise|approx|adaptive] [--stats FILE|-]
                             sharded dynamic-batching sort-service demo.
-                            --policy turns on per-shard link-power telemetry
-                            and the ordering policy; --stats writes the
-                            Prometheus-style telemetry snapshot to FILE
-                            ('-' = stdout). (set BENCHUTIL_JSON=path to dump
-                            JSON metrics)
+                            --clients sets the concurrent client threads
+                            (each submits its share as one batch through
+                            the pooled-reply client); --policy turns on
+                            per-shard link-power telemetry and the ordering
+                            policy; --stats writes the Prometheus-style
+                            telemetry snapshot to FILE ('-' = stdout). (set
+                            BENCHUTIL_JSON=path to dump JSON metrics)
   bench-gate --fresh FILE --baseline FILE [--tolerance 0.10] [--bless]
+             [--require-scalars NAME,...]
                             compare a fresh benchutil JSON dump against a
                             committed BENCH_*.json baseline: prints a
                             per-scenario delta table and exits non-zero when
                             any throughput scenario regresses more than the
-                            tolerance. --bless copies fresh over the
-                            baseline instead (re-bless after intentional
-                            performance changes)
+                            tolerance. --require-scalars fails when the
+                            fresh file is missing any named scalar. --bless
+                            copies fresh over the baseline instead
+                            (re-bless after intentional performance changes)
   help [command]            this overview, or one command's flags
 ";
 
@@ -335,6 +341,7 @@ fn main() -> Result<()> {
         "serve" => {
             let n = args.get_usize("requests")?.unwrap_or(1024);
             let shards = args.get_usize("shards")?.unwrap_or(1);
+            let clients = args.get_usize("clients")?.unwrap_or(8).max(1);
             let wait_us = args.get_usize("max-wait-us")?.unwrap_or(2000);
             // bad --policy values get the same treatment as unknown flags:
             // usage to stderr, exit 2 (not an anyhow exit-1)
@@ -345,7 +352,7 @@ fn main() -> Result<()> {
                     std::process::exit(2);
                 }
             };
-            serve_demo(&cfg, n, shards, wait_us, order_policy, args.get("stats"))?;
+            serve_demo(&cfg, n, shards, clients, wait_us, order_policy, args.get("stats"))?;
         }
         "bench-gate" => {
             use repro::benchutil::gate;
@@ -366,6 +373,15 @@ fn main() -> Result<()> {
                     }
                 },
             };
+            // --require-scalars guards bless and gate alike: a fresh file
+            // missing a required scalar must never pass (or become) a
+            // baseline silently
+            if let Some(list) = args.get("require-scalars") {
+                let names: Vec<&str> =
+                    list.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+                let doc = gate::BenchDoc::load(fresh)?;
+                gate::require_scalars(&doc, &names)?;
+            }
             if args.get("bless").is_some() {
                 gate::bless(fresh, baseline)?;
                 println!("blessed: {fresh} -> {baseline}");
@@ -411,15 +427,17 @@ fn ensure_trailing_newline(mut s: String) -> String {
     s
 }
 
-/// Sharded sort-service demo: N concurrent clients, round-robin admission,
-/// per-shard dynamic batching onto the backend's `psu_sort` entry point,
-/// throughput + batching + latency report, optional link-power telemetry
-/// (`--policy`) with a Prometheus-style snapshot (`--stats`), and a
-/// benchutil JSON dump when `BENCHUTIL_JSON` is set.
+/// Sharded sort-service demo: N concurrent client threads each submitting
+/// its share through a pooled-reply [`SortClient`] batch, least-loaded
+/// admission, per-shard dynamic batching onto the backend's `psu_sort`
+/// entry point, throughput + batching + latency report, optional
+/// link-power telemetry (`--policy`) with a Prometheus-style snapshot
+/// (`--stats`), and a benchutil JSON dump when `BENCHUTIL_JSON` is set.
 fn serve_demo(
     cfg: &Config,
     n_requests: usize,
     shards: usize,
+    clients: usize,
     wait_us: usize,
     order_policy: Option<OrderPolicy>,
     stats: Option<&str>,
@@ -454,21 +472,24 @@ fn serve_demo(
         .collect();
 
     let start = Instant::now();
-    let clients = 8;
-    let chunk = n_requests.div_ceil(clients);
+    let chunk = n_requests.div_ceil(clients).max(1);
     std::thread::scope(|s| {
         for c in packets.chunks(chunk) {
-            let svc = svc.clone();
-            s.spawn(move || svc.sort_many(c).expect("sort"));
+            let mut client = svc.client();
+            s.spawn(move || {
+                let mut out = Vec::with_capacity(c.len());
+                client.submit_batch(c, &mut out).expect("sort");
+            });
         }
     });
     let dt = start.elapsed();
     let m = &svc.metrics;
     let req_per_s = n_requests as f64 / dt.as_secs_f64();
     println!(
-        "served {} sort requests over {} shard(s) in {:.1} ms ({:.0} req/s)",
+        "served {} sort requests over {} shard(s) from {} client(s) in {:.1} ms ({:.0} req/s)",
         n_requests,
         shards,
+        clients,
         dt.as_secs_f64() * 1e3,
         req_per_s,
     );
@@ -522,6 +543,7 @@ fn serve_demo(
         let mut scalars = vec![
             ("serve_requests", n_requests as f64),
             ("serve_shards", shards as f64),
+            ("serve_clients", clients as f64),
             ("serve_req_per_s", req_per_s),
             ("serve_batches", m.batches.load(Ordering::Relaxed) as f64),
             ("serve_mean_batch", m.mean_batch()),
@@ -551,12 +573,17 @@ mod tests {
 
     #[test]
     fn parses_space_and_equals_forms() {
-        let a = args(&["serve", "--requests", "100", "--shards=4", "--max-wait-us=50"]);
+        let a = args(&[
+            "serve", "--requests", "100", "--shards=4", "--clients", "16", "--max-wait-us=50",
+        ]);
         assert_eq!(a.cmd, "serve");
         assert_eq!(a.get_usize("requests").unwrap(), Some(100));
         assert_eq!(a.get_usize("shards").unwrap(), Some(4));
+        assert_eq!(a.get_usize("clients").unwrap(), Some(16));
         assert_eq!(a.get_usize("max-wait-us").unwrap(), Some(50));
         a.validate().unwrap();
+        // --clients stays serve-only
+        assert!(args(&["table1", "--clients", "4"]).validate().is_err());
     }
 
     #[test]
@@ -622,12 +649,27 @@ mod tests {
         a.validate().unwrap();
         assert_eq!(a.get("bless"), Some("true"));
         assert_eq!(a.get("fresh"), Some("f.json"));
+        // --require-scalars takes a comma list and validates
+        let a = args(&[
+            "bench-gate",
+            "--fresh=f.json",
+            "--baseline=b.json",
+            "--require-scalars=serve_shard_scaling_8v4,serve_telemetry_overhead_ratio",
+        ]);
+        a.validate().unwrap();
+        assert_eq!(
+            a.get("require-scalars"),
+            Some("serve_shard_scaling_8v4,serve_telemetry_overhead_ratio")
+        );
         // the gate flags stay bench-gate-only
         assert!(args(&["serve", "--fresh", "x.json"]).validate().is_err());
         assert!(args(&["bench-gate", "--requests", "5"]).validate().is_err());
         // bench-gate appears in the help machinery
         let text = command_help("bench-gate").unwrap();
-        assert!(text.contains("--fresh") && text.contains("--bless"), "{text}");
+        assert!(
+            text.contains("--fresh") && text.contains("--bless") && text.contains("--require-scalars"),
+            "{text}"
+        );
     }
 
     #[test]

@@ -233,6 +233,78 @@ impl PackedFlit {
     }
 }
 
+/// A batch of packets packed once into one contiguous word buffer — the
+/// pack-once side of batch pricing.
+///
+/// The serving path used to pack every packet's raw stream words from
+/// bytes on each pricing pass; a `PackedStream` is packed once per
+/// dispatched batch (via [`pack_stream_words`]) and then shared by every
+/// consumer that needs the raw flit words: the probe's raw-ordering pass
+/// and each adaptive-policy run slice. Permutation orderings still
+/// gather straight from the packet bytes with [`pack_permuted_words`] —
+/// a permuted view is a different word stream, so there is nothing to
+/// share there.
+///
+/// Packets longer than [`super::MAX_FRAME_BYTES`] are recorded with no
+/// span (`words` returns `None`); callers fall back to the streaming
+/// byte path for those. The buffers are retained across [`pack`] calls,
+/// so a long-lived stream allocates only until it has seen its largest
+/// batch.
+///
+/// [`pack`]: PackedStream::pack
+#[derive(Debug, Clone, Default)]
+pub struct PackedStream {
+    words: Vec<u64>,
+    spans: Vec<Option<(u32, u32)>>,
+}
+
+impl PackedStream {
+    /// An empty stream; buffers grow on first [`PackedStream::pack`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pack every in-frame packet's raw stream words, replacing any
+    /// previous contents. Oversized packets get an empty span.
+    pub fn pack<P: AsRef<[u8]>>(&mut self, packets: &[P]) {
+        self.words.clear();
+        self.spans.clear();
+        for p in packets {
+            let bytes = p.as_ref();
+            if bytes.len() > super::MAX_FRAME_BYTES {
+                self.spans.push(None);
+                continue;
+            }
+            let need = bytes.len().div_ceil(FLIT_LANES) * FLIT_WORDS;
+            let at = self.words.len();
+            self.words.resize(at + need, 0);
+            let n = pack_stream_words(bytes, &mut self.words[at..]);
+            debug_assert_eq!(n, need);
+            self.spans.push(Some((at as u32, need as u32)));
+        }
+    }
+
+    /// The packed words of packet `i`, or `None` when the packet was
+    /// oversized (or `i` out of range) and must be priced from bytes.
+    #[inline]
+    pub fn words(&self, i: usize) -> Option<&[u64]> {
+        let (at, n) = (*self.spans.get(i)?)?;
+        Some(&self.words[at as usize..(at + n) as usize])
+    }
+
+    /// Number of packets packed by the last [`PackedStream::pack`].
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// True when no packets are packed.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -365,6 +437,31 @@ mod tests {
             assert_eq!(na, nb, "len {len}");
             assert_eq!(&a[..na], &b[..nb], "len {len}");
         }
+    }
+
+    #[test]
+    fn packed_stream_matches_per_packet_packing() {
+        use super::super::MAX_FRAME_BYTES;
+        let mut rng = Rng::new(8);
+        let packets: Vec<Vec<u8>> = [0usize, 1, 20, 64, 128, MAX_FRAME_BYTES + 1, 33]
+            .iter()
+            .map(|&len| (0..len).map(|_| rng.next_u8()).collect())
+            .collect();
+        let mut stream = PackedStream::new();
+        // pack twice so buffer reuse across batches is exercised
+        stream.pack(&packets[..2]);
+        stream.pack(&packets);
+        assert_eq!(stream.len(), packets.len());
+        for (i, p) in packets.iter().enumerate() {
+            if p.len() > MAX_FRAME_BYTES {
+                assert!(stream.words(i).is_none(), "oversized packet {i} must have no span");
+                continue;
+            }
+            let mut words = [u64::MAX; 2 * 8];
+            let n = pack_stream_words(p, &mut words);
+            assert_eq!(stream.words(i).unwrap(), &words[..n], "packet {i}");
+        }
+        assert!(stream.words(packets.len()).is_none(), "out of range is None");
     }
 
     #[test]

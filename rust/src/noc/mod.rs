@@ -23,7 +23,8 @@ pub mod multihop;
 pub mod packet;
 
 pub use flit::{
-    pack_permuted_words, pack_stream_words, xor_popcount_block, PackedFlit, FLIT_WORDS,
+    pack_permuted_words, pack_stream_words, xor_popcount_block, PackedFlit, PackedStream,
+    FLIT_WORDS,
 };
 pub use frame::{FrameScratch, PacketFrame, MAX_FRAME_BYTES, MAX_FRAME_FLITS};
 pub use link::Link;

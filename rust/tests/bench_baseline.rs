@@ -1,17 +1,21 @@
 //! The committed `BENCH_*.json` baselines stay well-formed: they must
 //! parse through the same reader the `bench-gate` CLI uses, name the
-//! scenarios the gate is meant to protect, and record the tentpole
-//! speedups. (Cargo runs integration tests from the package root, which
-//! is where the baselines are committed.)
+//! scenarios the gate is meant to protect, record the tentpole speedups,
+//! and clear the statistical floor (every committed measurement must be
+//! gateable — an under-sampled baseline row protects nothing). (Cargo
+//! runs integration tests from the package root, which is where the
+//! baselines are committed.)
 
-use repro::benchutil::gate::{compare, BenchDoc, Verdict, DEFAULT_TOLERANCE};
+use repro::benchutil::gate::{
+    compare, require_scalars, BenchDoc, Verdict, DEFAULT_TOLERANCE, GATE_MIN_ITERS,
+};
 
 fn scalar(doc: &BenchDoc, name: &str) -> Option<f64> {
     doc.scalars.iter().find(|(n, _)| n == name).and_then(|(_, v)| *v)
 }
 
 fn has_measurement(doc: &BenchDoc, name: &str) -> bool {
-    doc.measurements.iter().any(|(n, _)| n == name)
+    doc.measurements.iter().any(|m| m.name == name)
 }
 
 #[test]
@@ -24,11 +28,24 @@ fn hotpath_baseline_parses_and_names_the_gated_scenarios() {
         "ReferenceBackend psu_sort (256-packet batch)",
         "ReferenceBackend psu_sort parallel (256-packet batch)",
         "serve_throughput (1 shard(s), 256 reqs, 8 clients)",
+        "serve_throughput (4 shard(s), 256 reqs, 8 clients)",
         "serve_throughput (8 shard(s), 256 reqs, 8 clients)",
+        "serve_throughput (8 shard(s), 256 reqs, 16 clients)",
+        "serve_telemetry_overhead (probe off, 2 shards, 256 reqs)",
+        "serve_telemetry_overhead (probe on, 2 shards, 256 reqs)",
     ] {
         assert!(has_measurement(&doc, name), "baseline lost scenario {name:?}");
     }
-    assert!(doc.measurements.iter().all(|&(_, v)| v > 0.0), "non-positive median");
+    assert!(doc.measurements.iter().all(|m| m.median_ns > 0.0), "non-positive median");
+    // every committed row must clear the gating floor, or it is dead weight
+    for m in &doc.measurements {
+        assert!(
+            m.iters.is_some_and(|i| i >= GATE_MIN_ITERS),
+            "baseline row {:?} is under-sampled ({:?} iters) and would never gate",
+            m.name,
+            m.iters,
+        );
+    }
 }
 
 #[test]
@@ -42,9 +59,32 @@ fn hotpath_baseline_records_the_block_and_parallel_speedups() {
 }
 
 #[test]
+fn hotpath_baseline_gates_the_serving_core_scalars() {
+    let doc = BenchDoc::load("BENCH_hotpath.json").unwrap();
+    // PR 7 acceptance: 8 shards must actually beat 4 under least-loaded
+    // admission, and pack-once pricing must hold telemetry overhead well
+    // below the PR 6 ratio of 1.5
+    let scaling = scalar(&doc, "serve_shard_scaling_8v4").expect("scalar missing");
+    assert!(scaling > 1.15, "8v4 shard scaling regressed into the noise: {scaling}");
+    let overhead = scalar(&doc, "serve_telemetry_overhead_ratio").expect("scalar missing");
+    assert!(overhead < 1.5, "telemetry overhead back at PR 6 levels: {overhead}");
+    assert!(overhead >= 1.0, "an overhead ratio below 1.0 means the probe is free: {overhead}");
+    // and both names must actually be gate-protected (direction inferred
+    // from the name), which require_scalars + a self-compare prove
+    require_scalars(&doc, &["serve_shard_scaling_8v4", "serve_telemetry_overhead_ratio"])
+        .expect("required scalars present");
+    let r = compare(&doc, &doc, DEFAULT_TOLERANCE);
+    for name in ["serve_shard_scaling_8v4", "serve_telemetry_overhead_ratio"] {
+        let row = r.rows.iter().find(|row| row.name == name).expect("row");
+        assert_eq!(row.verdict, Verdict::Pass, "{name} is not gated");
+    }
+}
+
+#[test]
 fn serve_baseline_parses_and_gates_throughput() {
     let doc = BenchDoc::load("BENCH_serve.json").expect("committed baseline must parse");
     assert!(scalar(&doc, "serve_req_per_s").expect("scalar missing") > 0.0);
+    assert!(scalar(&doc, "serve_clients").expect("scalar missing") >= 1.0);
     // exactly the *_per_s scalar is gated: the self-comparison must make
     // at least one gated comparison and pass
     let r = compare(&doc, &doc, DEFAULT_TOLERANCE);

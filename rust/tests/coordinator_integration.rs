@@ -115,7 +115,8 @@ fn sharded_engine_is_byte_identical_to_reference_oracle() {
     for &shards in &[1usize, 2, 8] {
         let svc =
             SortService::spawn_reference_sharded(shards, Duration::from_millis(2)).unwrap();
-        // enough to cross batch boundaries and wrap round-robin admission
+        // enough to cross batch boundaries and rotate admission over every
+        // shard
         let packets = random_packets(BT_BATCH + 17, 0xBEEF ^ shards as u64);
         let responses = svc.sort_many(&packets).unwrap();
         assert_eq!(responses.len(), packets.len());
@@ -158,7 +159,7 @@ fn sharded_engine_under_concurrent_clients_tracks_per_shard_metrics() {
         m.shard_batches.iter().map(|c| c.load(Ordering::Relaxed)).sum::<u64>(),
         m.batches.load(Ordering::Relaxed)
     );
-    // round-robin admission feeds every shard
+    // least-loaded admission (round-robin tie-break) feeds every shard
     for s in 0..shards {
         assert!(
             m.shard_requests[s].load(Ordering::Relaxed) > 0,

@@ -1,0 +1,323 @@
+//! Serving-core equivalence: the pooled-reply, batch-submitting engine of
+//! PR 7 is pinned bit-identical to the per-request semantics it replaced.
+//!
+//! * Responses: across randomized shard counts {1, 2, 8} and randomized
+//!   submission split points, `SortClient::submit_batch` must return
+//!   byte-identical index vectors to the single-request `SortService::sort`
+//!   entry point and to a direct single-threaded
+//!   `ReferenceBackend::psu_sort` oracle.
+//! * Telemetry: per-packet BT is a pure function of packet content (no
+//!   cross-packet link state survives a transfer), so a static policy's
+//!   cumulative ledgers are sum-decomposable — the per-shard ledgers must
+//!   sum to a scalar `PolicyEngine` oracle's no matter how admission
+//!   scattered the batch. With one shard the whole `TelemetrySnapshot`
+//!   (adaptive switches included) must match the oracle exactly.
+//! * `ReplySlot`: stress-threaded state transitions — fulfil/abandon
+//!   races resolve to exactly one winner, parked waiters always wake,
+//!   and client-drop-before-reply never blocks or corrupts the pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use repro::coordinator::{ReplySlot, SortResponse, SortService};
+use repro::linkpower::{OrderPolicy, PolicyEngine, ProbeSnapshot};
+use repro::runtime::{Backend, ReferenceBackend, BT_BATCH, PACKET_ELEMS};
+use repro::workload::Rng;
+
+fn random_packets(n: usize, seed: u64) -> Vec<[u8; PACKET_ELEMS]> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut p = [0u8; PACKET_ELEMS];
+            p.iter_mut().for_each(|b| *b = rng.next_u8());
+            p
+        })
+        .collect()
+}
+
+/// Split `0..n` at `cuts` random points (sorted, deduped) into contiguous
+/// sub-ranges — the randomized submission schedule of the property test.
+fn random_splits(n: usize, cuts: usize, rng: &mut Rng) -> Vec<(usize, usize)> {
+    let mut points: Vec<usize> = (0..cuts).map(|_| (rng.next_u64() as usize) % n).collect();
+    points.push(0);
+    points.push(n);
+    points.sort_unstable();
+    points.dedup();
+    points.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+#[test]
+fn batched_submission_matches_single_requests_and_the_oracle() {
+    let oracle = ReferenceBackend::new();
+    let mut rng = Rng::new(0x7E07151);
+    for &shards in &[1usize, 2, 8] {
+        let svc =
+            SortService::spawn_reference_sharded(shards, Duration::from_millis(2)).unwrap();
+        let packets = random_packets(BT_BATCH + 40, 0xB00 ^ shards as u64);
+        let (acc, app) = oracle.psu_sort(&packets).unwrap();
+
+        // one pooled client, submitting in randomized contiguous slices
+        // with a reused response buffer
+        let mut client = svc.client();
+        let mut out: Vec<SortResponse> = Vec::new();
+        let mut batched: Vec<SortResponse> = Vec::new();
+        for (lo, hi) in random_splits(packets.len(), 5, &mut rng) {
+            client.submit_batch(&packets[lo..hi], &mut out).unwrap();
+            assert_eq!(out.len(), hi - lo, "{shards} shard(s): lost replies in [{lo},{hi})");
+            batched.extend(out.iter().cloned());
+        }
+
+        for (i, resp) in batched.iter().enumerate() {
+            assert_eq!(resp.acc_indices, acc[i], "{shards} shard(s), packet {i}: ACC diverged");
+            assert_eq!(resp.app_indices, app[i], "{shards} shard(s), packet {i}: APP diverged");
+            // and the one-shot entry point agrees with the batched one
+            if i % 97 == 0 {
+                let single = svc.sort(packets[i]).unwrap();
+                assert_eq!(single.acc_indices, resp.acc_indices, "sort() vs submit_batch");
+                assert_eq!(single.app_indices, resp.app_indices, "sort() vs submit_batch");
+            }
+        }
+    }
+}
+
+#[test]
+fn static_policy_ledgers_are_shard_assignment_invariant() {
+    // Precise prices every packet identically wherever it lands, so the
+    // engine-wide ledgers must equal a scalar oracle's regardless of how
+    // least-loaded admission scattered the batch across shards. n stays
+    // under the probe window so window sums equal cumulative sums on
+    // every shard and on the oracle.
+    let n = 600;
+    let packets = random_packets(n, 0x5CA7);
+    let oracle_backend = ReferenceBackend::new();
+    let (acc, app) = oracle_backend.psu_sort(&packets).unwrap();
+    let mut oracle = PolicyEngine::new(OrderPolicy::Precise);
+    for ((p, a), b) in packets.iter().zip(&acc).zip(&app) {
+        oracle.observe_with_perms(p, a, b);
+    }
+    let want = oracle.snapshot().probe;
+
+    for &shards in &[1usize, 2, 8] {
+        let svc = SortService::spawn_reference_policy(
+            shards,
+            Duration::from_millis(2),
+            Some(OrderPolicy::Precise),
+        )
+        .unwrap();
+        let responses = svc.sort_many(&packets).unwrap();
+        assert_eq!(responses.len(), n);
+        let (got, switches) = svc.metrics.linkpower_totals();
+        assert_eq!(switches, 0, "{shards} shard(s): static policy switched");
+        let check = |label: &str, got: u64, want: u64| {
+            assert_eq!(got, want, "{shards} shard(s): {label} ledger diverged");
+        };
+        check("packets", got.packets, want.packets);
+        check("flits", got.flits, want.flits);
+        check("raw_bt", got.raw_bt, want.raw_bt);
+        check("acc_bt", got.acc_bt, want.acc_bt);
+        check("app_bt", got.app_bt, want.app_bt);
+        check("served_bt", got.served_bt, want.served_bt);
+        check("window_raw_bt", got.window_raw_bt, want.window_raw_bt);
+        check("window_acc_bt", got.window_acc_bt, want.window_acc_bt);
+        check("window_app_bt", got.window_app_bt, want.window_app_bt);
+        check("window_served_bt", got.window_served_bt, want.window_served_bt);
+    }
+}
+
+#[test]
+fn single_shard_adaptive_telemetry_equals_the_scalar_oracle() {
+    // With one shard and one client the engine processes packets in exact
+    // submission order, so even the order-sensitive adaptive policy — its
+    // switches depend on which packets filled the window — must reproduce
+    // the scalar oracle's full snapshot, evaluation cadence and all. 600
+    // packets cross the BT_BATCH = 256 dispatch boundary twice, so the
+    // pack-once stream and the run segmentation carry state across
+    // batches.
+    let n = 600;
+    let packets = random_packets(n, 0xADA_57);
+    let oracle_backend = ReferenceBackend::new();
+    let (acc, app) = oracle_backend.psu_sort(&packets).unwrap();
+    let mut oracle = PolicyEngine::new(OrderPolicy::adaptive());
+    let want_strategies: Vec<_> = packets
+        .iter()
+        .zip(&acc)
+        .zip(&app)
+        .map(|((p, a), b)| oracle.observe_with_perms(p, a, b))
+        .collect();
+
+    let svc = SortService::spawn_reference_policy(
+        1,
+        Duration::from_millis(2),
+        Some(OrderPolicy::adaptive()),
+    )
+    .unwrap();
+    let mut client = svc.client();
+    let mut responses = Vec::new();
+    client.submit_batch(&packets, &mut responses).unwrap();
+    assert_eq!(responses.len(), n);
+    for (i, resp) in responses.iter().enumerate() {
+        assert_eq!(
+            resp.strategy,
+            Some(want_strategies[i]),
+            "packet {i}: transmitted strategy diverged from the scalar engine"
+        );
+    }
+    let got = svc.metrics.linkpower[0].load();
+    assert_eq!(got, oracle.snapshot(), "single-shard telemetry diverged");
+    // ledgers are non-trivial: the adaptive engine actually priced traffic
+    assert!(got.probe.raw_bt > 0 && got.probe.served_bt > 0);
+}
+
+#[test]
+fn reply_slot_fulfil_abandon_races_have_exactly_one_winner() {
+    fn resp() -> anyhow::Result<SortResponse> {
+        Ok(SortResponse { acc_indices: vec![7], app_indices: vec![9], strategy: None })
+    }
+    let fulfil_wins = AtomicUsize::new(0);
+    let abandon_wins = AtomicUsize::new(0);
+    for round in 0..200 {
+        let slot = Arc::new(ReplySlot::new());
+        let (a, b) = (slot.clone(), slot.clone());
+        let (won_f, won_a) = std::thread::scope(|s| {
+            let f = s.spawn(move || a.fulfil(resp()));
+            let g = s.spawn(move || b.abandon());
+            (f.join().unwrap(), g.join().unwrap())
+        });
+        assert!(won_f ^ won_a, "round {round}: fulfil={won_f} abandon={won_a}");
+        if won_f {
+            fulfil_wins.fetch_add(1, Ordering::Relaxed);
+            // the stored reply is retrievable without blocking
+            assert_eq!(slot.wait().unwrap().acc_indices, vec![7]);
+            // and the slot is recyclable once consumed
+            slot.reset();
+            assert!(slot.fulfil(resp()));
+            assert_eq!(slot.wait().unwrap().app_indices, vec![9]);
+        } else {
+            abandon_wins.fetch_add(1, Ordering::Relaxed);
+            // an abandoned slot reports the abandonment, never blocks
+            assert!(slot.wait().is_err());
+        }
+    }
+    // the race is real on any multi-core host, but either side winning
+    // every round is still a valid schedule — only the invariants above
+    // are load-bearing
+    assert_eq!(
+        fulfil_wins.load(Ordering::Relaxed) + abandon_wins.load(Ordering::Relaxed),
+        200
+    );
+}
+
+#[test]
+fn parked_waiters_always_wake() {
+    // wait() parks before fulfil() runs: the Condvar handoff must wake it
+    for _ in 0..50 {
+        let slot = Arc::new(ReplySlot::new());
+        let waiter = {
+            let slot = slot.clone();
+            std::thread::spawn(move || slot.wait())
+        };
+        // give the waiter a chance to actually park
+        std::thread::yield_now();
+        assert!(slot.fulfil(Ok(SortResponse {
+            acc_indices: vec![1],
+            app_indices: vec![2],
+            strategy: None,
+        })));
+        let got = waiter.join().unwrap().unwrap();
+        assert_eq!(got.acc_indices, vec![1]);
+    }
+}
+
+/// A backend whose sort path always fails: error propagation through the
+/// pooled path must deliver the backend error to every waiting slot
+/// without wedging the engine.
+struct FailingBackend;
+
+impl Backend for FailingBackend {
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+
+    fn lenet_head(
+        &self,
+        _imgs: &[Vec<f32>],
+        _weights: &[f32],
+        _bias: &[f32],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::bail!("failing backend")
+    }
+
+    fn psu_sort(
+        &self,
+        _packets: &[[u8; PACKET_ELEMS]],
+    ) -> anyhow::Result<(Vec<Vec<u16>>, Vec<Vec<u16>>)> {
+        anyhow::bail!("sort unit on fire")
+    }
+
+    fn packet_bt(
+        &self,
+        _packets: &[[[u8; repro::runtime::FLIT_LANES]; repro::runtime::PACKET_FLITS]],
+    ) -> anyhow::Result<Vec<u32>> {
+        anyhow::bail!("failing backend")
+    }
+}
+
+#[test]
+fn backend_errors_propagate_without_wedging_the_engine() {
+    let svc = SortService::spawn_with(|| Ok(FailingBackend), Duration::from_millis(1)).unwrap();
+    let packets = random_packets(10, 3);
+    let mut client = svc.client();
+    let mut out = Vec::new();
+    let err = client.submit_batch(&packets, &mut out).unwrap_err().to_string();
+    assert!(err.contains("sort unit on fire"), "backend error lost: {err}");
+    assert!(out.is_empty(), "no request may produce a response");
+    // the engine is still serving (and still failing cleanly), and the
+    // drained slots were not poisoned into the free-list
+    assert!(svc.sort(packets[0]).is_err());
+    let err = client.submit_batch(&packets[..3], &mut out).unwrap_err().to_string();
+    assert!(err.contains("sort unit on fire"), "engine wedged after an error: {err}");
+    // nothing left in flight after the error drains (the worker decrements
+    // the gauge just *after* fulfilling the replies, so give it a moment)
+    let drained = (0..1000).any(|_| {
+        if svc.metrics.shard_inflight[0].load(Ordering::Relaxed) == 0 {
+            true
+        } else {
+            std::thread::sleep(Duration::from_millis(1));
+            false
+        }
+    });
+    assert!(drained, "shard_inflight never drained back to zero");
+}
+
+#[test]
+fn telemetry_totals_match_probe_snapshot_identity() {
+    // cross-check ProbeSnapshot::merge against field-wise addition on the
+    // real served ledgers, so linkpower_totals() can't silently drop a
+    // field when the snapshot grows
+    let svc = SortService::spawn_reference_policy(
+        2,
+        Duration::from_millis(2),
+        Some(OrderPolicy::Precise),
+    )
+    .unwrap();
+    svc.sort_many(&random_packets(64, 11)).unwrap();
+    let (total, _) = svc.metrics.linkpower_totals();
+    let mut manual = ProbeSnapshot::default();
+    for lp in &svc.metrics.linkpower {
+        let p = lp.load().probe;
+        manual.packets += p.packets;
+        manual.flits += p.flits;
+        manual.raw_bt += p.raw_bt;
+        manual.acc_bt += p.acc_bt;
+        manual.app_bt += p.app_bt;
+        manual.served_bt += p.served_bt;
+        manual.window_packets += p.window_packets;
+        manual.window_flits += p.window_flits;
+        manual.window_raw_bt += p.window_raw_bt;
+        manual.window_acc_bt += p.window_acc_bt;
+        manual.window_app_bt += p.window_app_bt;
+        manual.window_served_bt += p.window_served_bt;
+    }
+    assert_eq!(total, manual);
+}

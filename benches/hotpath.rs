@@ -7,13 +7,16 @@
 //! `serve_throughput` scenario driving the public sharded `SortService`
 //! API end to end through the pooled-reply `SortClient::submit_batch`
 //! path (1/4/8 shards at 8 clients, plus an 8-shard 16-client row so
-//! client-side contention is a measured axis), and the
+//! client-side contention is a measured axis), the
 //! `serve_telemetry_overhead` scenario pricing the link-power probe +
-//! adaptive policy against the bare serving path.
+//! adaptive policy against the bare serving path, and the
+//! `serve_trace_overhead` scenario pricing stage-span tracing (every
+//! request sampled) against the bare serving path.
 //!
 //! Set `BENCHUTIL_JSON=path.json` to dump every measurement as JSON
 //! (compared against the committed `BENCH_hotpath.json` baseline by the
 //! `bench-gate` CI step; the telemetry `serve_telemetry_overhead_ratio`,
+//! the tracing `serve_trace_overhead_ratio`,
 //! the least-loaded-admission `serve_shard_scaling_8v4`, the
 //! byte-vs-word `packet_bt_throughput_speedup`, the
 //! per-boundary-vs-block `packet_bt_block_speedup`, and the
@@ -329,6 +332,76 @@ fn main() {
             let ratio = on / off;
             println!("  -> serve_telemetry_overhead: {ratio:.3}x (probe on vs off)");
             scalars.push(("serve_telemetry_overhead_ratio", ratio));
+        }
+    }
+
+    // serve_trace_overhead: the same concurrent-client load with stage
+    // tracing on every request (sample_every = 1, the worst case) vs the
+    // bare engine. The ratio of the two medians is the hot-path price of
+    // span recording + stage histograms, tracked across PRs via the
+    // benchutil JSON scalar and floor-asserted by bench_baseline.rs.
+    {
+        use repro::obs::TraceConfig;
+        use repro::runtime::PACKET_ELEMS;
+        let reqs: Vec<[u8; PACKET_ELEMS]> = (0..n_reqs)
+            .map(|i| {
+                let mut a = [0u8; PACKET_ELEMS];
+                a.copy_from_slice(&packets[i % packets.len()]);
+                a
+            })
+            .collect();
+        let mut medians = Vec::new();
+        for (tag, trace) in [("off", None), ("on", Some(TraceConfig::new(1, 1 << 14)))] {
+            let svc =
+                SortService::spawn_reference_traced(2, Duration::from_micros(200), None, trace)
+                    .expect("spawn service");
+            let clients = 8;
+            let chunk = reqs.len().div_ceil(clients);
+            let mut lanes: Vec<(SortClient, Vec<SortResponse>)> =
+                (0..clients).map(|_| (svc.client(), Vec::with_capacity(chunk))).collect();
+            let m = bench(
+                &format!("serve_trace_overhead (trace {tag}, 2 shards, {n_reqs} reqs)"),
+                1,
+                iters(5),
+                || {
+                    std::thread::scope(|s| {
+                        for (c, lane) in reqs.chunks(chunk).zip(lanes.iter_mut()) {
+                            s.spawn(move || {
+                                let (client, out) = lane;
+                                client.submit_batch(c, out).expect("sort");
+                            });
+                        }
+                    });
+                },
+            );
+            medians.push(m.median.as_secs_f64());
+            all.push(m);
+            if tag == "on" {
+                // the per-batch counter event lands just after the last
+                // reply; let the workers settle before draining
+                std::thread::sleep(Duration::from_millis(50));
+                let report = svc.trace_report().expect("tracing was enabled");
+                assert!(report.sampled > 0, "tracer sampled nothing");
+                // the ring may lap under the multi-iteration load, so assert
+                // the accounting identity rather than an exact span count:
+                // every recorded event is either drained or counted dropped
+                assert_eq!(
+                    report.recorded,
+                    (report.span_count() + report.counter_count()) as u64 + report.dropped,
+                    "span ring lost events silently"
+                );
+                println!(
+                    "  -> trace: {} spans from {} sampled request(s), {} dropped",
+                    report.span_count(),
+                    report.sampled,
+                    report.dropped,
+                );
+            }
+        }
+        if let [off, on] = medians[..] {
+            let ratio = on / off;
+            println!("  -> serve_trace_overhead: {ratio:.3}x (trace on vs off)");
+            scalars.push(("serve_trace_overhead_ratio", ratio));
         }
     }
 

@@ -73,8 +73,26 @@
 //! strategy that ordered it, and the shard folds its telemetry into
 //! [`Metrics::linkpower`] after every dispatched batch.
 //! [`Metrics::render_prometheus`] serializes the whole metrics block —
-//! serving counters, latency quantiles, and the link-power telemetry — as
-//! Prometheus-style text lines (`repro serve --stats`).
+//! serving counters, latency histograms, and the link-power telemetry —
+//! in Prometheus exposition format (`repro serve --stats`).
+//!
+//! ## Stage-level tracing
+//!
+//! Spawned with a [`TraceConfig`] ([`SortService::spawn_sharded_traced`]),
+//! the engine owns a [`crate::obs::Tracer`]: every request gets a
+//! monotonic id, every *sampled* request (`id % sample_every == 0`)
+//! records six contiguous stage spans — admission → queue_wait →
+//! batch_form → backend_sort → linkpower_price → reply_fulfil — into its
+//! shard's lock-free [`crate::obs::SpanRing`], and every request (sampled
+//! or not) feeds the per-stage [`Metrics::stage_latency`] histograms.
+//! Span timestamps are nanosecond offsets from the tracer epoch, taken at
+//! the stage boundaries ([`SortClient::submit_batch`] stamps admission,
+//! the batch loop stamps receive/dispatch/sort/price, fulfilment stamps
+//! completion), so a request's stage durations tile its end-to-end
+//! latency exactly. [`SortService::trace_report`] drains the rings for
+//! the Chrome trace-event exporter (`repro serve --trace`). Without a
+//! `TraceConfig` — every pre-existing constructor — none of the extra
+//! timestamps are taken and the serving path is unchanged.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -84,6 +102,7 @@ use std::time::{Duration, Instant};
 
 use crate::linkpower::{OrderPolicy, PolicyEngine, ProbeSnapshot, StrategyKind, TelemetrySnapshot};
 use crate::noc::PackedStream;
+use crate::obs::{SpanEvent, SpanKind, Stage, TraceConfig, TraceReport, Tracer, N_STAGES};
 use crate::runtime::{Backend, ReferenceBackend, BT_BATCH, PACKET_ELEMS};
 
 /// [`ReplySlot`] state: no reply yet (the client may be parked).
@@ -182,12 +201,30 @@ impl ReplySlot {
     }
 }
 
-/// One sort request: a 64-byte packet, its admission timestamp, and its
-/// pooled reply slot.
+/// Per-request tracing context, carried only by sampled requests:
+/// identifies the request in the trace and pins the start of its
+/// `admission` span.
+struct ReqTrace {
+    /// Monotonic id assigned at admission by the [`Tracer`].
+    req_id: u64,
+    /// Submitting client's id (0 for the one-shot [`SortService::sort`]).
+    client: u32,
+    /// When the client entered the submit path (`admission` span start).
+    submitted: Instant,
+}
+
+/// One sort request: a 64-byte packet, its admission timestamp, its
+/// pooled reply slot, and (when tracing) its span context.
 struct SortRequest {
     packet: [u8; PACKET_ELEMS],
     enqueued: Instant,
+    /// When the shard worker received the request group off its channel.
+    /// Equal to `enqueued` until the worker stamps it (and left that way
+    /// when tracing is off — nothing reads it then).
+    received: Instant,
     reply: Arc<ReplySlot>,
+    /// Span context of a sampled request; `None` otherwise.
+    trace: Option<ReqTrace>,
 }
 
 impl Drop for SortRequest {
@@ -223,11 +260,17 @@ pub const LATENCY_BUCKETS: usize = 40;
 #[derive(Debug)]
 pub struct LatencyHistogram {
     counts: [AtomicU64; LATENCY_BUCKETS],
+    /// Sum of every recorded duration in nanoseconds (the Prometheus
+    /// `_sum` series; counts alone can't answer "mean latency").
+    sum_ns: AtomicU64,
 }
 
 impl Default for LatencyHistogram {
     fn default() -> Self {
-        Self { counts: std::array::from_fn(|_| AtomicU64::new(0)) }
+        Self {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+        }
     }
 }
 
@@ -237,11 +280,23 @@ impl LatencyHistogram {
         let ns = latency.as_nanos().max(1) as u64;
         let bucket = (63 - ns.leading_zeros() as usize).min(LATENCY_BUCKETS - 1);
         self.counts[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
     /// Total recorded samples.
     pub fn total(&self) -> u64 {
         self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of every recorded duration, in nanoseconds.
+    pub fn sum_nanos(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// One consistent snapshot of the per-bucket counts (bucket `i` counts
+    /// samples in `[2^i, 2^(i+1))` ns).
+    pub fn snapshot_counts(&self) -> [u64; LATENCY_BUCKETS] {
+        std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed))
     }
 
     /// Approximate quantile (`q` in `[0, 1]`): the upper edge of the first
@@ -320,6 +375,8 @@ pub struct LinkPowerStats {
     pub active: AtomicUsize,
     /// Online strategy switches so far.
     pub switches: AtomicU64,
+    /// Adaptive window re-evaluations so far.
+    pub evals: AtomicU64,
 }
 
 impl LinkPowerStats {
@@ -340,6 +397,7 @@ impl LinkPowerStats {
         self.window_served_bt.store(p.window_served_bt, Ordering::Relaxed);
         self.active.store(t.active.index(), Ordering::Relaxed);
         self.switches.store(t.switches, Ordering::Relaxed);
+        self.evals.store(t.evals, Ordering::Relaxed);
     }
 
     /// Read the last published telemetry back out.
@@ -361,6 +419,7 @@ impl LinkPowerStats {
             },
             active: StrategyKind::from_index(self.active.load(Ordering::Relaxed)),
             switches: self.switches.load(Ordering::Relaxed),
+            evals: self.evals.load(Ordering::Relaxed),
         }
     }
 }
@@ -383,8 +442,16 @@ pub struct Metrics {
     /// after the batch's replies are fulfilled. This is the queue-depth
     /// signal least-loaded admission scans.
     pub shard_inflight: Vec<AtomicU64>,
+    /// High-watermark of [`Metrics::shard_inflight`] per shard: the peak
+    /// queue depth since start (CAS-max maintained at admission), so a
+    /// soak test can see peak backpressure after the gauge has drained.
+    pub shard_inflight_peak: Vec<AtomicU64>,
     /// Queue→reply latency of every successfully answered request.
     pub latency: LatencyHistogram,
+    /// Per-stage latency decomposition, indexed by [`Stage::index`].
+    /// Recorded for *every* request while the engine runs with tracing
+    /// configured (independent of span sampling); all-zero otherwise.
+    pub stage_latency: [LatencyHistogram; N_STAGES],
     /// Link-power telemetry per shard (all-zero while no policy engine has
     /// published — e.g. the engine was spawned without a policy).
     pub linkpower: Vec<LinkPowerStats>,
@@ -400,9 +467,16 @@ impl Metrics {
             shard_requests: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             shard_batches: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             shard_inflight: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            shard_inflight_peak: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             latency: LatencyHistogram::default(),
+            stage_latency: std::array::from_fn(|_| LatencyHistogram::default()),
             linkpower: (0..shards).map(|_| LinkPowerStats::default()).collect(),
         }
+    }
+
+    /// Record one request's duration in `stage`'s decomposition histogram.
+    pub fn record_stage(&self, stage: Stage, latency: Duration) {
+        self.stage_latency[stage.index()].record(latency);
     }
 
     /// Number of shards this metrics block tracks.
@@ -445,9 +519,12 @@ impl Metrics {
         (total, switches)
     }
 
-    /// Render the whole metrics block as Prometheus-style text lines: the
-    /// `serve --stats` snapshot format (also what the CI smoke job uploads
-    /// as an artifact).
+    /// Render the whole metrics block in Prometheus exposition format —
+    /// `# HELP`/`# TYPE` headers per family, cumulative
+    /// `_bucket{le="..."}`/`_sum`/`_count` series for the latency
+    /// histograms — the `serve --stats` snapshot (also what the CI smoke
+    /// job uploads as an artifact). Samples of one family are emitted
+    /// consecutively, as the format requires.
     pub fn render_prometheus(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::new();
@@ -456,20 +533,109 @@ impl Metrics {
         let max_batch = self.max_batch.load(Ordering::Relaxed);
         let p50 = self.latency.p50().as_secs_f64();
         let p99 = self.latency.p99().as_secs_f64();
+        write_family(&mut out, "sortservice_shards", "gauge", "Worker shards in the engine.");
         let _ = writeln!(out, "sortservice_shards {}", self.shards());
+        write_family(
+            &mut out,
+            "sortservice_requests_total",
+            "counter",
+            "Requests admitted to a backend batch.",
+        );
         let _ = writeln!(out, "sortservice_requests_total {requests}");
+        write_family(&mut out, "sortservice_batches_total", "counter", "Backend dispatches.");
         let _ = writeln!(out, "sortservice_batches_total {batches}");
+        write_family(
+            &mut out,
+            "sortservice_mean_batch",
+            "gauge",
+            "Mean requests per backend dispatch.",
+        );
         let _ = writeln!(out, "sortservice_mean_batch {}", self.mean_batch());
+        write_family(
+            &mut out,
+            "sortservice_max_batch",
+            "gauge",
+            "Largest batch observed on any shard.",
+        );
         let _ = writeln!(out, "sortservice_max_batch {max_batch}");
+        write_family(
+            &mut out,
+            "sortservice_latency_p50_seconds",
+            "gauge",
+            "Median end-to-end latency (histogram bucket upper edge).",
+        );
         let _ = writeln!(out, "sortservice_latency_p50_seconds {p50}");
+        write_family(
+            &mut out,
+            "sortservice_latency_p99_seconds",
+            "gauge",
+            "99th-percentile end-to-end latency (histogram bucket upper edge).",
+        );
         let _ = writeln!(out, "sortservice_latency_p99_seconds {p99}");
+        write_family(
+            &mut out,
+            "sortservice_latency_seconds",
+            "histogram",
+            "End-to-end queue-to-reply latency of answered requests.",
+        );
+        write_histogram(&mut out, "sortservice_latency_seconds", "", &self.latency);
+        // the per-stage decomposition exists only when tracing has been on
+        if self.stage_latency.iter().any(|h| h.total() > 0) {
+            write_family(
+                &mut out,
+                "sortservice_stage_seconds",
+                "histogram",
+                "Per-stage latency decomposition of served requests.",
+            );
+            for stage in Stage::ALL {
+                let labels = format!("stage=\"{}\",", stage.label());
+                write_histogram(
+                    &mut out,
+                    "sortservice_stage_seconds",
+                    &labels,
+                    &self.stage_latency[stage.index()],
+                );
+            }
+        }
+        write_family(
+            &mut out,
+            "sortservice_shard_requests_total",
+            "counter",
+            "Requests per shard.",
+        );
         for s in 0..self.shards() {
             let sr = self.shard_requests[s].load(Ordering::Relaxed);
-            let sb = self.shard_batches[s].load(Ordering::Relaxed);
-            let si = self.shard_inflight[s].load(Ordering::Relaxed);
             let _ = writeln!(out, "sortservice_shard_requests_total{{shard=\"{s}\"}} {sr}");
+        }
+        write_family(
+            &mut out,
+            "sortservice_shard_batches_total",
+            "counter",
+            "Backend dispatches per shard.",
+        );
+        for s in 0..self.shards() {
+            let sb = self.shard_batches[s].load(Ordering::Relaxed);
             let _ = writeln!(out, "sortservice_shard_batches_total{{shard=\"{s}\"}} {sb}");
+        }
+        write_family(
+            &mut out,
+            "sortservice_shard_inflight",
+            "gauge",
+            "In-flight requests per shard (the least-loaded admission signal).",
+        );
+        for s in 0..self.shards() {
+            let si = self.shard_inflight[s].load(Ordering::Relaxed);
             let _ = writeln!(out, "sortservice_shard_inflight{{shard=\"{s}\"}} {si}");
+        }
+        write_family(
+            &mut out,
+            "sortservice_shard_inflight_peak",
+            "gauge",
+            "Peak in-flight depth per shard since start (high-watermark).",
+        );
+        for s in 0..self.shards() {
+            let sp = self.shard_inflight_peak[s].load(Ordering::Relaxed);
+            let _ = writeln!(out, "sortservice_shard_inflight_peak{{shard=\"{s}\"}} {sp}");
         }
         // load each shard once and derive both the per-shard lines and the
         // aggregates from the same snapshots, so a worker publishing
@@ -482,37 +648,111 @@ impl Metrics {
             switches += t.switches;
         }
         if total.packets > 0 {
+            write_family(
+                &mut out,
+                "linkpower_packets_total",
+                "counter",
+                "Packets priced by the link-power probe, per shard.",
+            );
+            for (s, t) in snaps.iter().enumerate() {
+                let _ =
+                    writeln!(out, "linkpower_packets_total{{shard=\"{s}\"}} {}", t.probe.packets);
+            }
+            write_family(
+                &mut out,
+                "linkpower_bt_total",
+                "counter",
+                "Cumulative bit transitions per shard and byte ordering.",
+            );
             for (s, t) in snaps.iter().enumerate() {
                 let p = &t.probe;
-                let _ = writeln!(out, "linkpower_packets_total{{shard=\"{s}\"}} {}", p.packets);
-                for (order, bt, wbt) in [
-                    ("raw", p.raw_bt, p.window_raw_bt),
-                    ("acc", p.acc_bt, p.window_acc_bt),
-                    ("app", p.app_bt, p.window_app_bt),
-                    ("served", p.served_bt, p.window_served_bt),
+                for (order, bt) in [
+                    ("raw", p.raw_bt),
+                    ("acc", p.acc_bt),
+                    ("app", p.app_bt),
+                    ("served", p.served_bt),
                 ] {
                     let _ = writeln!(
                         out,
                         "linkpower_bt_total{{shard=\"{s}\",order=\"{order}\"}} {bt}"
                     );
+                }
+            }
+            write_family(
+                &mut out,
+                "linkpower_window_bt",
+                "gauge",
+                "Sliding-window bit transitions per shard and byte ordering.",
+            );
+            for (s, t) in snaps.iter().enumerate() {
+                let p = &t.probe;
+                for (order, wbt) in [
+                    ("raw", p.window_raw_bt),
+                    ("acc", p.window_acc_bt),
+                    ("app", p.window_app_bt),
+                    ("served", p.window_served_bt),
+                ] {
                     let _ = writeln!(
                         out,
                         "linkpower_window_bt{{shard=\"{s}\",order=\"{order}\"}} {wbt}"
                     );
                 }
+            }
+            write_family(
+                &mut out,
+                "linkpower_active_strategy",
+                "gauge",
+                "Ordering strategy each shard currently transmits under.",
+            );
+            for (s, t) in snaps.iter().enumerate() {
                 let active = t.active.label();
                 let _ = writeln!(
                     out,
                     "linkpower_active_strategy{{shard=\"{s}\",strategy=\"{active}\"}} 1"
                 );
+            }
+            write_family(
+                &mut out,
+                "linkpower_switches_total",
+                "counter",
+                "Online strategy switches per shard.",
+            );
+            for (s, t) in snaps.iter().enumerate() {
                 let _ = writeln!(out, "linkpower_switches_total{{shard=\"{s}\"}} {}", t.switches);
             }
+            write_family(
+                &mut out,
+                "linkpower_evals_total",
+                "counter",
+                "Adaptive window re-evaluations per shard.",
+            );
+            for (s, t) in snaps.iter().enumerate() {
+                let _ = writeln!(out, "linkpower_evals_total{{shard=\"{s}\"}} {}", t.evals);
+            }
+            write_family(
+                &mut out,
+                "linkpower_savings_ratio",
+                "gauge",
+                "Cumulative BT saved vs raw order, engine-wide.",
+            );
             let _ = writeln!(out, "linkpower_savings_ratio {}", total.savings_ratio());
+            write_family(
+                &mut out,
+                "linkpower_window_savings_ratio",
+                "gauge",
+                "Sliding-window BT saved vs raw order, engine-wide.",
+            );
             let window_savings = total.window_savings_ratio();
             let _ = writeln!(out, "linkpower_window_savings_ratio {window_savings}");
             // distinct name from the per-shard linkpower_switches_total
             // family: mixing labeled and unlabeled samples in one family
             // breaks Prometheus aggregation (sum() would double-count)
+            write_family(
+                &mut out,
+                "linkpower_switches_sum",
+                "counter",
+                "Online strategy switches, engine-wide.",
+            );
             let _ = writeln!(out, "linkpower_switches_sum {switches}");
         }
         out
@@ -551,6 +791,44 @@ impl Default for Metrics {
     }
 }
 
+/// Append one family's `# HELP` + `# TYPE` header pair.
+fn write_family(out: &mut String, name: &str, kind: &str, help: &str) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Render one [`LatencyHistogram`] as a Prometheus histogram: cumulative
+/// `_bucket{le="..."}` series over the power-of-two nanosecond edges
+/// (expressed in seconds), then `_sum` and `_count`. `labels` is either
+/// empty or a `key="value",` fragment (trailing comma) merged into each
+/// bucket's label set. The last power-of-two bucket absorbs every larger
+/// sample, so it is folded into `+Inf` rather than given a finite edge.
+fn write_histogram(out: &mut String, name: &str, labels: &str, h: &LatencyHistogram) {
+    use std::fmt::Write as _;
+    let counts = h.snapshot_counts();
+    let mut cum = 0u64;
+    for (i, c) in counts.iter().enumerate() {
+        cum += c;
+        if i + 1 < counts.len() {
+            let le = (1u64 << (i + 1)) as f64 / 1e9;
+            let _ = writeln!(out, "{name}_bucket{{{labels}le=\"{le}\"}} {cum}");
+        }
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels}le=\"+Inf\"}} {cum}");
+    let sum = h.sum_nanos() as f64 / 1e9;
+    match labels.strip_suffix(',') {
+        None | Some("") => {
+            let _ = writeln!(out, "{name}_sum {sum}");
+            let _ = writeln!(out, "{name}_count {cum}");
+        }
+        Some(base) => {
+            let _ = writeln!(out, "{name}_sum{{{base}}} {sum}");
+            let _ = writeln!(out, "{name}_count{{{base}}} {cum}");
+        }
+    }
+}
+
 /// Handle for submitting requests; clone freely across threads. Dropping
 /// every handle (and every [`SortClient`]) disconnects the shard queues
 /// and stops the workers.
@@ -560,6 +838,9 @@ pub struct SortService {
     cursor: Arc<AtomicUsize>,
     /// Shared engine metrics (counters, latency histogram, telemetry).
     pub metrics: Arc<Metrics>,
+    /// Stage-level tracing context; `None` (every pre-existing
+    /// constructor) leaves the serving path untouched.
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl SortService {
@@ -572,12 +853,13 @@ impl SortService {
         F: FnOnce() -> anyhow::Result<B> + Send + 'static,
     {
         let metrics = Arc::new(Metrics::new(1));
-        let (tx, ready) = spawn_shard(0, make, max_wait, metrics.clone(), None);
+        let (tx, ready) = spawn_shard(0, make, max_wait, metrics.clone(), None, None);
         ready.recv().map_err(|_| anyhow::anyhow!("worker died"))??;
         Ok(Self {
             shards: Arc::new(vec![tx]),
             cursor: Arc::new(AtomicUsize::new(0)),
             metrics,
+            tracer: None,
         })
     }
 
@@ -623,6 +905,28 @@ impl SortService {
         B: Backend + 'static,
         F: Fn(usize) -> anyhow::Result<B> + Send + Sync + 'static,
     {
+        Self::spawn_sharded_traced(make, shards, max_wait, policy, None)
+    }
+
+    /// [`SortService::spawn_sharded_with_policy`] plus stage-level
+    /// tracing: with `Some(trace)` the engine owns a
+    /// [`crate::obs::Tracer`] — every request is stamped at its stage
+    /// boundaries, every `trace.sample_every`-th request records its six
+    /// spans into its shard's ring, and the per-stage
+    /// [`Metrics::stage_latency`] histograms fill. `None` takes none of
+    /// the extra timestamps (the `serve_trace_overhead` bench tracks the
+    /// enabled-vs-off gap).
+    pub fn spawn_sharded_traced<B, F>(
+        make: F,
+        shards: usize,
+        max_wait: Duration,
+        policy: Option<OrderPolicy>,
+        trace: Option<TraceConfig>,
+    ) -> anyhow::Result<Self>
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> anyhow::Result<B> + Send + Sync + 'static,
+    {
         anyhow::ensure!(shards >= 1, "need at least one shard");
         if let Some(p) = &policy {
             anyhow::ensure!(
@@ -635,6 +939,7 @@ impl SortService {
         }
         let make = Arc::new(make);
         let metrics = Arc::new(Metrics::new(shards));
+        let tracer = trace.map(|cfg| Arc::new(Tracer::new(cfg, shards)));
         let mut txs = Vec::with_capacity(shards);
         let mut readies = Vec::with_capacity(shards);
         for shard in 0..shards {
@@ -645,6 +950,7 @@ impl SortService {
                 max_wait,
                 metrics.clone(),
                 policy.clone(),
+                tracer.clone(),
             );
             txs.push(tx);
             readies.push(ready);
@@ -658,6 +964,7 @@ impl SortService {
             shards: Arc::new(txs),
             cursor: Arc::new(AtomicUsize::new(0)),
             metrics,
+            tracer,
         })
     }
 
@@ -688,12 +995,25 @@ impl SortService {
         max_wait: Duration,
         policy: Option<OrderPolicy>,
     ) -> anyhow::Result<Self> {
+        Self::spawn_reference_traced(shards, max_wait, policy, None)
+    }
+
+    /// Reference-backend shards with optional link-power telemetry *and*
+    /// optional stage-level tracing (see
+    /// [`SortService::spawn_sharded_traced`]).
+    pub fn spawn_reference_traced(
+        shards: usize,
+        max_wait: Duration,
+        policy: Option<OrderPolicy>,
+        trace: Option<TraceConfig>,
+    ) -> anyhow::Result<Self> {
         let workers = crate::sortcore::workers_per_shard(shards);
-        Self::spawn_sharded_with_policy(
+        Self::spawn_sharded_traced(
             move |_| Ok(ReferenceBackend::with_workers(workers)),
             shards,
             max_wait,
             policy,
+            trace,
         )
     }
 
@@ -723,12 +1043,35 @@ impl SortService {
         self.shards.len()
     }
 
+    /// The engine's tracer, when it was spawned with a [`TraceConfig`].
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_deref()
+    }
+
+    /// Drain the span rings into a [`TraceReport`] (the Chrome-trace
+    /// exporter's input). `None` when the engine runs untraced.
+    pub fn trace_report(&self) -> Option<TraceReport> {
+        self.tracer.as_deref().map(Tracer::report)
+    }
+
+    /// The `serve --stats` snapshot: the metrics block in Prometheus
+    /// exposition format plus, when tracing is on, the tracer's
+    /// sample/drop counters.
+    pub fn render_stats(&self) -> String {
+        let mut out = self.metrics.render_prometheus();
+        if let Some(t) = self.tracer.as_deref() {
+            out.push_str(&t.render_prometheus());
+        }
+        out
+    }
+
     /// A submission handle with its own reply-slot free-list. One client
     /// per submitting thread; steady-state [`SortClient::submit_batch`]
     /// calls allocate no slots once the list has grown to the caller's
     /// largest batch.
     pub fn client(&self) -> SortClient {
-        SortClient { svc: self.clone(), free: Vec::new(), pending: Vec::new() }
+        let id = self.tracer.as_deref().map_or(0, Tracer::next_client_id);
+        SortClient { svc: self.clone(), id, free: Vec::new(), pending: Vec::new() }
     }
 
     /// The explicitly wrapping round-robin cursor: `fetch_add` on an
@@ -760,7 +1103,17 @@ impl SortService {
                 best_depth = d;
             }
         }
-        inflight[best].fetch_add(1, Ordering::Relaxed);
+        let depth = inflight[best].fetch_add(1, Ordering::Relaxed) + 1;
+        // high-watermark CAS-max (same idiom as `Metrics::max_batch`):
+        // concurrent admitters can never lose a larger observed depth
+        let peak = &self.metrics.shard_inflight_peak[best];
+        let mut seen = peak.load(Ordering::Relaxed);
+        while depth > seen {
+            match peak.compare_exchange_weak(seen, depth, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(now) => seen = now,
+            }
+        }
         best
     }
 
@@ -771,7 +1124,14 @@ impl SortService {
     pub fn sort(&self, packet: [u8; PACKET_ELEMS]) -> anyhow::Result<SortResponse> {
         let slot = Arc::new(ReplySlot::new());
         let shard = self.pick_shard();
-        let req = SortRequest { packet, enqueued: Instant::now(), reply: slot.clone() };
+        let enqueued = Instant::now();
+        // the one-shot path has no pre-admission work: its admission span
+        // is zero-length by construction (client id 0)
+        let trace = self.tracer.as_deref().and_then(|t| {
+            self.metrics.record_stage(Stage::Admission, Duration::ZERO);
+            t.admit().map(|req_id| ReqTrace { req_id, client: 0, submitted: enqueued })
+        });
+        let req = SortRequest { packet, enqueued, received: enqueued, reply: slot.clone(), trace };
         if let Err(e) = self.shards[shard].send(vec![req]) {
             self.metrics.shard_inflight[shard].fetch_sub(1, Ordering::Relaxed);
             drop(e.0); // poisons the slot; nothing is waiting yet
@@ -798,6 +1158,8 @@ impl SortService {
 /// of reallocated. Create one per thread via [`SortService::client`].
 pub struct SortClient {
     svc: SortService,
+    /// Tracer-assigned client id (Chrome `tid`); 0 when tracing is off.
+    id: u32,
     /// Recycled, reset slots ready for reuse.
     free: Vec<Arc<ReplySlot>>,
     /// In-flight slots of the current batch, in submission order.
@@ -826,14 +1188,38 @@ impl SortClient {
         let n_shards = self.svc.shards.len();
         let mut groups: Vec<Vec<SortRequest>> = (0..n_shards).map(|_| Vec::new()).collect();
         self.pending.clear();
-        let enqueued = Instant::now();
+        let submitted = Instant::now();
+        let tracer = self.svc.tracer.as_deref();
         for &packet in packets {
             let slot = match self.free.pop() {
                 Some(s) => s,
                 None => Arc::new(ReplySlot::new()),
             };
             let shard = self.svc.pick_shard();
-            groups[shard].push(SortRequest { packet, enqueued, reply: slot.clone() });
+            // Untraced, every request of the batch shares the submit
+            // stamp (the pre-tracing behaviour: no extra clock reads on
+            // the hot path). Traced, each request gets its own enqueue
+            // stamp so `admission` covers its share of the submit loop.
+            let (enqueued, trace) = match tracer {
+                None => (submitted, None),
+                Some(t) => {
+                    let now = Instant::now();
+                    self.svc
+                        .metrics
+                        .record_stage(Stage::Admission, now.saturating_duration_since(submitted));
+                    let trace = t
+                        .admit()
+                        .map(|req_id| ReqTrace { req_id, client: self.id, submitted });
+                    (now, trace)
+                }
+            };
+            groups[shard].push(SortRequest {
+                packet,
+                enqueued,
+                received: enqueued,
+                reply: slot.clone(),
+                trace,
+            });
             self.pending.push(slot);
         }
         for (shard, group) in groups.into_iter().enumerate() {
@@ -881,6 +1267,7 @@ fn spawn_shard<B, F>(
     max_wait: Duration,
     metrics: Arc<Metrics>,
     policy: Option<OrderPolicy>,
+    tracer: Option<Arc<Tracer>>,
 ) -> (SyncSender<Vec<SortRequest>>, Receiver<anyhow::Result<()>>)
 where
     B: Backend + 'static,
@@ -902,11 +1289,75 @@ where
             }
         };
         let engine = policy.map(PolicyEngine::new);
-        batch_loop(&backend, shard, rx, max_wait, metrics, engine);
+        batch_loop(&backend, shard, rx, max_wait, metrics, engine, tracer);
     });
     (tx, ready_rx)
 }
 
+/// Stamp the worker-side receive time on a freshly dequeued request group
+/// (only when tracing is on — untraced, nothing reads the field), then
+/// append it to the pending queue.
+fn extend_received(
+    pending: &mut VecDeque<SortRequest>,
+    mut group: Vec<SortRequest>,
+    tracer: Option<&Tracer>,
+) {
+    if tracer.is_some() {
+        let now = Instant::now();
+        for req in &mut group {
+            req.received = now;
+        }
+    }
+    pending.extend(group);
+}
+
+/// Record one fulfilled request's stage decomposition: the worker-side
+/// stage histograms for every request, plus — for sampled requests — the
+/// six contiguous span events. Span timestamps are epoch offsets, and
+/// each duration is the difference of adjacent offsets, so a request's
+/// spans tile `submitted → fulfilled` exactly.
+#[allow(clippy::too_many_arguments)]
+fn record_request_trace(
+    tracer: &Tracer,
+    metrics: &Metrics,
+    shard: usize,
+    req: &SortRequest,
+    t_exec: Instant,
+    t_sorted: Instant,
+    t_priced: Instant,
+    t_fulfil: Instant,
+) {
+    metrics.record_stage(Stage::QueueWait, req.received.saturating_duration_since(req.enqueued));
+    metrics.record_stage(Stage::BatchForm, t_exec.saturating_duration_since(req.received));
+    metrics.record_stage(Stage::BackendSort, t_sorted.saturating_duration_since(t_exec));
+    metrics.record_stage(Stage::LinkpowerPrice, t_priced.saturating_duration_since(t_sorted));
+    metrics.record_stage(Stage::ReplyFulfil, t_fulfil.saturating_duration_since(t_priced));
+    let Some(rt) = &req.trace else {
+        return;
+    };
+    let offsets = [
+        tracer.offset_ns(rt.submitted),
+        tracer.offset_ns(req.enqueued),
+        tracer.offset_ns(req.received),
+        tracer.offset_ns(t_exec),
+        tracer.offset_ns(t_sorted),
+        tracer.offset_ns(t_priced),
+        tracer.offset_ns(t_fulfil),
+    ];
+    let ring = tracer.ring(shard);
+    for (i, stage) in Stage::ALL.iter().enumerate() {
+        ring.record(&SpanEvent {
+            kind: SpanKind::Stage(*stage),
+            req_id: rt.req_id,
+            shard: shard as u16,
+            client: rt.client,
+            start_ns: offsets[i],
+            dur_ns: offsets[i + 1].saturating_sub(offsets[i]),
+        });
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn batch_loop(
     backend: &dyn Backend,
     shard: usize,
@@ -914,7 +1365,9 @@ fn batch_loop(
     max_wait: Duration,
     metrics: Arc<Metrics>,
     mut engine: Option<PolicyEngine>,
+    tracer: Option<Arc<Tracer>>,
 ) {
+    let tracer = tracer.as_deref();
     // Every per-batch buffer is hoisted out of the loop and reused, so the
     // serving path performs zero per-packet heap allocation: the only
     // allocations left are the response index vectors themselves, which
@@ -931,7 +1384,7 @@ fn batch_loop(
         // from an oversized client batch opens the next batch instantly)
         if pending.is_empty() {
             match rx.recv() {
-                Ok(group) => pending.extend(group),
+                Ok(group) => extend_received(&mut pending, group, tracer),
                 Err(_) => return, // all senders gone
             }
         }
@@ -942,7 +1395,7 @@ fn batch_loop(
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(group) => pending.extend(group),
+                Ok(group) => extend_received(&mut pending, group, tracer),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
@@ -954,9 +1407,13 @@ fn batch_loop(
 
         packets.clear();
         packets.extend(batch.iter().map(|r| r.packet));
+        // stage-boundary stamps are taken only when tracing is on: the
+        // untraced loop reads the clock exactly as often as before
+        let t_exec = tracer.map(|_| Instant::now());
         // one backend execution per batch — the fixed batch shape pads
         match backend.psu_sort(&packets) {
             Ok((acc, app)) if acc.len() == batch.len() && app.len() == batch.len() => {
+                let t_sorted = tracer.map(|_| Instant::now());
                 // price the whole batch with the backend's permutations and
                 // publish telemetry *before* any reply unblocks a client —
                 // a caller that reads Metrics right after its reply must
@@ -977,16 +1434,40 @@ fn batch_loop(
                     );
                     metrics.linkpower[shard].publish(&e.snapshot());
                 }
+                let t_priced = tracer.map(|_| Instant::now());
                 // move each index vector straight into its reply — the
                 // backend's outputs are the response payloads (zero-copy)
                 for (i, ((req, acc_indices), app_indices)) in
                     batch.drain(..).zip(acc).zip(app).enumerate()
                 {
-                    metrics.latency.record(req.enqueued.elapsed());
+                    if let (Some(tr), Some(t_exec), Some(t_sorted), Some(t_priced)) =
+                        (tracer, t_exec, t_sorted, t_priced)
+                    {
+                        let t_fulfil = Instant::now();
+                        metrics.latency.record(t_fulfil.saturating_duration_since(req.enqueued));
+                        record_request_trace(
+                            tr, &metrics, shard, &req, t_exec, t_sorted, t_priced, t_fulfil,
+                        );
+                    } else {
+                        metrics.latency.record(req.enqueued.elapsed());
+                    }
                     // empty without a policy engine: no stamp
                     let strategy = strategies.get(i).copied();
                     let resp = SortResponse { acc_indices, app_indices, strategy };
                     let _ = req.reply.fulfil(Ok(resp));
+                }
+                // one queue-depth sample per dispatched batch, so Perfetto
+                // draws the shard_inflight counter track next to the spans
+                if let (Some(tr), Some(t_exec)) = (tracer, t_exec) {
+                    let depth = metrics.shard_inflight[shard].load(Ordering::Relaxed);
+                    tr.ring(shard).record(&SpanEvent {
+                        kind: SpanKind::InflightCounter,
+                        req_id: 0,
+                        shard: shard as u16,
+                        client: 0,
+                        start_ns: tr.offset_ns(t_exec),
+                        dur_ns: depth,
+                    });
                 }
             }
             Ok(_) => {
@@ -1128,6 +1609,7 @@ mod tests {
             },
             active: StrategyKind::Approximate,
             switches: 2,
+            evals: 5,
         };
         stats.publish(&t);
         assert_eq!(stats.load(), t);
@@ -1164,6 +1646,7 @@ mod tests {
             },
             active: StrategyKind::Precise,
             switches: 1,
+            evals: 4,
         });
         let text = m.render_prometheus();
         assert!(text.contains("linkpower_packets_total{shard=\"1\"} 10"));
@@ -1172,11 +1655,55 @@ mod tests {
         assert!(text.contains("linkpower_active_strategy{shard=\"1\",strategy=\"precise\"} 1"));
         assert!(text.contains("linkpower_savings_ratio 0.25"));
         assert!(text.contains("linkpower_switches_total{shard=\"1\"} 1"));
+        assert!(text.contains("linkpower_evals_total{shard=\"1\"} 4"));
         assert!(text.contains("linkpower_switches_sum 1"));
-        // every line is a bare `name{labels} value` pair
+        // exposition format: every sample line is a bare
+        // `name{labels} value` pair, and every family is announced
         for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(
+                    line.starts_with("# HELP ") || line.starts_with("# TYPE "),
+                    "malformed comment line: {line}"
+                );
+                continue;
+            }
             assert_eq!(line.split_whitespace().count(), 2, "malformed line: {line}");
         }
+        assert!(text.contains("# TYPE sortservice_requests_total counter"));
+        assert!(text.contains("# HELP linkpower_bt_total "));
+    }
+
+    #[test]
+    fn prometheus_histogram_exposition_is_cumulative_and_consistent() {
+        let m = Metrics::new(1);
+        m.latency.record(Duration::from_nanos(3)); // bucket [2, 4) → le 4e-9
+        m.latency.record(Duration::from_nanos(3));
+        m.latency.record(Duration::from_micros(5)); // [4096, 8192) ns
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE sortservice_latency_seconds histogram"));
+        assert!(text.contains("sortservice_latency_seconds_bucket{le=\"0.000000004\"} 2"));
+        assert!(text.contains("sortservice_latency_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("sortservice_latency_seconds_count 3"));
+        // _sum carries the recorded nanoseconds in seconds
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("sortservice_latency_seconds_sum "))
+            .expect("missing _sum");
+        let sum: f64 = sum_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        assert!((sum - 5006e-9).abs() < 1e-12, "wrong _sum: {sum}");
+        // cumulative: counts never decrease across le edges
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("sortservice_latency_seconds_bucket")) {
+            let v: u64 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+            assert!(v >= last, "bucket counts must be cumulative: {line}");
+            last = v;
+        }
+        // the stage decomposition stays absent until something records
+        assert!(!text.contains("sortservice_stage_seconds"));
+        m.record_stage(Stage::BackendSort, Duration::from_micros(2));
+        let text = m.render_prometheus();
+        assert!(text.contains("sortservice_stage_seconds_bucket{stage=\"backend_sort\",le=\""));
+        assert!(text.contains("sortservice_stage_seconds_count{stage=\"backend_sort\"} 1"));
     }
 
     #[test]
@@ -1317,10 +1844,13 @@ mod tests {
     #[test]
     fn dropped_request_poisons_its_slot() {
         let slot = Arc::new(ReplySlot::new());
+        let now = Instant::now();
         let req = SortRequest {
             packet: [0u8; PACKET_ELEMS],
-            enqueued: Instant::now(),
+            enqueued: now,
+            received: now,
             reply: slot.clone(),
+            trace: None,
         };
         drop(req); // worker died / queue dropped before any fulfil
         let err = slot.wait().unwrap_err().to_string();

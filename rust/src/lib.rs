@@ -35,6 +35,10 @@
 //!   (`artifacts/*.hlo.txt`); Python never runs at request time.
 //! * [`coordinator`] — the sharded dynamic-batching serving engine,
 //!   generic over the execution backend.
+//! * [`obs`] — stage-level request tracing: per-shard lock-free span
+//!   rings ([`obs::SpanRing`]), the sampling [`obs::Tracer`], and the
+//!   Chrome trace-event exporter ([`obs::chrome`]) behind
+//!   `repro serve --trace`.
 //! * [`linkpower`] — streaming BT telemetry ([`linkpower::LinkProbe`])
 //!   and the runtime ordering-policy engine
 //!   ([`linkpower::OrderPolicy`], passthrough / precise / approximate /
@@ -62,6 +66,7 @@ pub mod experiments;
 pub mod hw;
 pub mod linkpower;
 pub mod noc;
+pub mod obs;
 pub mod pe;
 pub mod platform;
 pub mod power;

@@ -216,6 +216,9 @@ pub struct TelemetrySnapshot {
     pub active: StrategyKind,
     /// Number of online strategy switches so far.
     pub switches: u64,
+    /// Adaptive window re-evaluations performed so far (0 under the
+    /// static policies).
+    pub evals: u64,
 }
 
 impl Default for TelemetrySnapshot {
@@ -224,6 +227,7 @@ impl Default for TelemetrySnapshot {
             probe: ProbeSnapshot::default(),
             active: StrategyKind::Passthrough,
             switches: 0,
+            evals: 0,
         }
     }
 }
@@ -240,6 +244,7 @@ pub struct PolicyEngine {
     stream: PackedStream,
     active: StrategyKind,
     switches: u64,
+    evals: u64,
 }
 
 impl PolicyEngine {
@@ -260,6 +265,7 @@ impl PolicyEngine {
             stream: PackedStream::new(),
             active,
             switches: 0,
+            evals: 0,
         }
     }
 
@@ -379,6 +385,9 @@ impl PolicyEngine {
         if s.window_flits == 0 {
             return;
         }
+        // Every pass beyond this point scores the window: count it, so the
+        // pricing span in the trace can be cross-checked against telemetry.
+        self.evals += 1;
         let k = cfg.map.k();
         let mut best = self.active;
         let mut best_score = f64::INFINITY;
@@ -395,12 +404,18 @@ impl PolicyEngine {
         }
     }
 
+    /// Adaptive window re-evaluations performed so far.
+    pub fn evaluations(&self) -> u64 {
+        self.evals
+    }
+
     /// Probe + decision state, cheap to copy out for publication.
     pub fn snapshot(&self) -> TelemetrySnapshot {
         TelemetrySnapshot {
             probe: self.probe.snapshot(),
             active: self.active,
             switches: self.switches,
+            evals: self.evals,
         }
     }
 }

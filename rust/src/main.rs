@@ -45,7 +45,7 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
         "ablate" => &["ks", "packets"],
         "policy" => &["packets"],
         "report" | "all" => &["only", "out"],
-        "serve" => &["requests", "shards", "clients", "max-wait-us", "policy", "stats"],
+        "serve" => &["requests", "shards", "clients", "max-wait-us", "policy", "stats", "trace"],
         "bench-gate" => &["fresh", "baseline", "tolerance", "bless", "require-scalars"],
         "help" | "--help" | "-h" => &[],
         _ => return None,
@@ -68,7 +68,8 @@ fn flag_doc(flag: &str) -> &'static str {
         "clients" => "concurrent client threads issuing batches (default 8)",
         "max-wait-us" => "dynamic-batching wait budget in microseconds",
         "policy" => "ordering policy: passthrough|precise|approx|adaptive",
-        "stats" => "write the Prometheus-style snapshot to FILE ('-' = stdout)",
+        "stats" => "write the Prometheus snapshot to FILE ('-' = stdout)",
+        "trace" => "record every request's stage spans and write Chrome trace JSON to FILE",
         "fresh" => "benchutil JSON from the run under test",
         "baseline" => "committed baseline JSON (BENCH_*.json)",
         "tolerance" => "allowed throughput drop as a fraction (default 0.10)",
@@ -201,13 +202,18 @@ report & serving:
                             rendering on stdout, in paper order
   serve [--requests N] [--shards S] [--clients C] [--max-wait-us U]
         [--policy passthrough|precise|approx|adaptive] [--stats FILE|-]
+        [--trace FILE]
                             sharded dynamic-batching sort-service demo.
                             --clients sets the concurrent client threads
                             (each submits its share as one batch through
                             the pooled-reply client); --policy turns on
                             per-shard link-power telemetry and the ordering
-                            policy; --stats writes the Prometheus-style
-                            telemetry snapshot to FILE ('-' = stdout). (set
+                            policy; --stats writes the Prometheus snapshot
+                            (per-stage latency histograms included when
+                            tracing) to FILE ('-' = stdout); --trace
+                            records every request's stage spans and writes
+                            Chrome trace-event JSON to FILE (open in
+                            Perfetto or chrome://tracing). (set
                             BENCHUTIL_JSON=path to dump JSON metrics)
   bench-gate --fresh FILE --baseline FILE [--tolerance 0.10] [--bless]
              [--require-scalars NAME,...]
@@ -352,7 +358,16 @@ fn main() -> Result<()> {
                     std::process::exit(2);
                 }
             };
-            serve_demo(&cfg, n, shards, clients, wait_us, order_policy, args.get("stats"))?;
+            serve_demo(
+                &cfg,
+                n,
+                shards,
+                clients,
+                wait_us,
+                order_policy,
+                args.get("stats"),
+                args.get("trace"),
+            )?;
         }
         "bench-gate" => {
             use repro::benchutil::gate;
@@ -431,8 +446,11 @@ fn ensure_trailing_newline(mut s: String) -> String {
 /// its share through a pooled-reply [`SortClient`] batch, least-loaded
 /// admission, per-shard dynamic batching onto the backend's `psu_sort`
 /// entry point, throughput + batching + latency report, optional
-/// link-power telemetry (`--policy`) with a Prometheus-style snapshot
-/// (`--stats`), and a benchutil JSON dump when `BENCHUTIL_JSON` is set.
+/// link-power telemetry (`--policy`) with a Prometheus snapshot
+/// (`--stats`), optional stage-span tracing with Chrome trace-event
+/// export (`--trace`), and a benchutil JSON dump when `BENCHUTIL_JSON`
+/// is set.
+#[allow(clippy::too_many_arguments)]
 fn serve_demo(
     cfg: &Config,
     n_requests: usize,
@@ -441,9 +459,11 @@ fn serve_demo(
     wait_us: usize,
     order_policy: Option<OrderPolicy>,
     stats: Option<&str>,
+    trace: Option<&str>,
 ) -> Result<()> {
     use repro::benchutil;
     use repro::coordinator::SortService;
+    use repro::obs::{self, TraceConfig};
     use repro::runtime::PACKET_ELEMS;
     use repro::workload::Rng;
     use std::sync::atomic::Ordering;
@@ -454,11 +474,15 @@ fn serve_demo(
     // split the machine's threads across shards: each shard's reference
     // backend fans its sort batches out over its own worker budget
     let workers = repro::sortcore::workers_per_shard(shards);
-    let svc = SortService::spawn_sharded_with_policy(
+    // the demo traces every request (sample_every = 1): its span count is
+    // exactly checkable against the sampled counter
+    let trace_cfg = trace.map(|_| TraceConfig::default());
+    let svc = SortService::spawn_sharded_traced(
         move |_| Ok(make_backend_with_workers(&dir, workers)),
         shards,
         Duration::from_micros(wait_us as u64),
         order_policy,
+        trace_cfg,
     )?;
     let mut rng = Rng::new(cfg.seed);
     let packets: Vec<[u8; PACKET_ELEMS]> = (0..n_requests)
@@ -529,8 +553,23 @@ fn serve_demo(
             );
         }
     }
+    let report = match trace {
+        None => None,
+        Some(path) => {
+            let report = svc.trace_report().expect("tracing was enabled");
+            println!(
+                "  trace: {} stage spans from {} sampled request(s), {} event(s) dropped",
+                report.span_count(),
+                report.sampled,
+                report.dropped,
+            );
+            obs::chrome::write(path, &report)?;
+            eprintln!("(chrome trace written to {path}; open in Perfetto or chrome://tracing)");
+            Some(report)
+        }
+    };
     if let Some(path) = stats {
-        let text = m.render_prometheus();
+        let text = svc.render_stats();
         if path == "-" {
             print!("{text}");
         } else {
@@ -556,6 +595,11 @@ fn serve_demo(
             scalars.push(("serve_linkpower_savings_ratio", lp.savings_ratio()));
             scalars.push(("serve_linkpower_window_savings_ratio", lp.window_savings_ratio()));
             scalars.push(("serve_linkpower_switches", switches as f64));
+        }
+        if let Some(r) = &report {
+            scalars.push(("serve_trace_sampled", r.sampled as f64));
+            scalars.push(("serve_trace_spans", r.span_count() as f64));
+            scalars.push(("serve_trace_dropped", r.dropped as f64));
         }
         benchutil::write_json(&path, &[], &scalars)?;
         eprintln!("(benchutil JSON written to {path})");
@@ -628,6 +672,21 @@ mod tests {
         assert!(args(&["table1", "--policy", "adaptive"]).validate().is_err());
         assert!(args(&["policy", "--packets", "100"]).validate().is_ok());
         assert!(args(&["policy", "--stats", "-"]).validate().is_err());
+    }
+
+    #[test]
+    fn serve_trace_flag_validates_and_is_serve_only() {
+        let a = args(&["serve", "--trace", "trace.json", "--requests", "100"]);
+        a.validate().unwrap();
+        assert_eq!(a.get("trace"), Some("trace.json"));
+        // combines with the other serve flags
+        args(&["serve", "--trace", "t.json", "--stats", "-", "--policy", "adaptive"])
+            .validate()
+            .unwrap();
+        // rejected everywhere else
+        assert!(args(&["table1", "--trace", "t.json"]).validate().is_err());
+        assert!(args(&["policy", "--trace", "t.json"]).validate().is_err());
+        assert!(args(&["report", "--trace", "t.json"]).validate().is_err());
     }
 
     #[test]

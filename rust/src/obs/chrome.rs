@@ -1,0 +1,121 @@
+//! Chrome trace-event JSON export.
+//!
+//! Serializes a [`TraceReport`] in the trace-event format that Perfetto
+//! (<https://ui.perfetto.dev>) and `chrome://tracing` load directly: a
+//! JSON array with one event object per line. Stage spans become
+//! `ph:"X"` complete events (`pid` = shard, `tid` = client, `ts`/`dur`
+//! in microseconds with nanosecond precision); queue-depth samples
+//! become `ph:"C"` counter events so Perfetto draws the per-shard
+//! `shard_inflight` track alongside the spans.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use super::{SpanKind, TraceReport};
+
+/// Render the report as a Chrome trace-event JSON array, one event per
+/// line.
+pub fn render(report: &TraceReport) -> String {
+    let mut out = String::from("[\n");
+    for (i, ev) in report.events.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        let ts = ev.start_ns as f64 / 1e3;
+        match ev.kind {
+            SpanKind::Stage(stage) => {
+                let _ = write!(
+                    out,
+                    "{{\"name\":\"{}\",\"cat\":\"stage\",\"ph\":\"X\",\"ts\":{ts:.3},\
+                     \"dur\":{:.3},\"pid\":{},\"tid\":{},\"args\":{{\"req_id\":{}}}}}",
+                    stage.label(),
+                    ev.dur_ns as f64 / 1e3,
+                    ev.shard,
+                    ev.client,
+                    ev.req_id,
+                );
+            }
+            SpanKind::InflightCounter => {
+                let _ = write!(
+                    out,
+                    "{{\"name\":\"shard_inflight\",\"cat\":\"queue\",\"ph\":\"C\",\
+                     \"ts\":{ts:.3},\"dur\":0,\"pid\":{},\"tid\":0,\
+                     \"args\":{{\"inflight\":{}}}}}",
+                    ev.shard,
+                    ev.dur_ns,
+                );
+            }
+        }
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Write the rendered trace to `path`.
+pub fn write<P: AsRef<Path>>(path: P, report: &TraceReport) -> std::io::Result<()> {
+    std::fs::write(path, render(report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{SpanEvent, Stage};
+    use super::*;
+
+    #[test]
+    fn renders_spans_and_counters_one_event_per_line() {
+        let report = TraceReport {
+            events: vec![
+                SpanEvent {
+                    kind: SpanKind::Stage(Stage::QueueWait),
+                    req_id: 7,
+                    shard: 1,
+                    client: 3,
+                    start_ns: 1_500,
+                    dur_ns: 250,
+                },
+                SpanEvent {
+                    kind: SpanKind::InflightCounter,
+                    req_id: 0,
+                    shard: 1,
+                    client: 0,
+                    start_ns: 2_000,
+                    dur_ns: 42,
+                },
+            ],
+            requests: 12,
+            sampled: 1,
+            recorded: 2,
+            dropped: 0,
+            shards: 2,
+        };
+        let text = render(&report);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.first(), Some(&"["));
+        assert_eq!(lines.last(), Some(&"]"));
+        assert_eq!(lines.len(), 4, "one event per line inside the array");
+        assert_eq!(
+            lines[1],
+            "{\"name\":\"queue_wait\",\"cat\":\"stage\",\"ph\":\"X\",\"ts\":1.500,\
+             \"dur\":0.250,\"pid\":1,\"tid\":3,\"args\":{\"req_id\":7}},"
+        );
+        assert_eq!(
+            lines[2],
+            "{\"name\":\"shard_inflight\",\"cat\":\"queue\",\"ph\":\"C\",\"ts\":2.000,\
+             \"dur\":0,\"pid\":1,\"tid\":0,\"args\":{\"inflight\":42}}"
+        );
+    }
+
+    #[test]
+    fn empty_report_is_still_a_valid_array() {
+        let report = TraceReport {
+            events: Vec::new(),
+            requests: 0,
+            sampled: 0,
+            recorded: 0,
+            dropped: 0,
+            shards: 1,
+        };
+        let text = render(&report);
+        assert_eq!(text, "[\n\n]\n");
+    }
+}

@@ -1,0 +1,493 @@
+//! Stage-level request tracing for the serving engine.
+//!
+//! The serving path can say *how long* a request took (the end-to-end
+//! latency histogram in [`crate::coordinator::Metrics`]) but not *where*
+//! the time went. This module is the attribution layer: every served
+//! request is decomposed into six contiguous stages —
+//!
+//! ```text
+//! admission → queue_wait → batch_form → backend_sort
+//!           → linkpower_price → reply_fulfil
+//! ```
+//!
+//! — and a sampled fraction of requests additionally records one
+//! [`SpanEvent`] per stage into a per-shard, fixed-capacity, lock-free
+//! [`SpanRing`] (atomic write cursor, overwrite-oldest, exact drop
+//! accounting so truncation is never silent). Request ids are assigned
+//! monotonically by the [`Tracer`]; the sampling gate is a single modulo
+//! ([`TraceConfig::sample_every`]), so tracing entirely off is exactly the
+//! pre-tracing hot path.
+//!
+//! Export goes two ways: [`chrome`] serializes a drained [`TraceReport`]
+//! as Chrome trace-event JSON (`repro serve --trace FILE`, loadable in
+//! Perfetto or `chrome://tracing`), and the per-stage
+//! [`crate::coordinator::LatencyHistogram`]s land in the Prometheus
+//! snapshot so the latency decomposition is always on even when span
+//! recording samples sparsely.
+//!
+//! The module is deliberately standalone (no dependency on the
+//! coordinator): the coming mesh-NoC and network-front-door work record
+//! their per-link / per-connection spans through the same ring and
+//! exporter.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+pub mod chrome;
+mod ring;
+
+pub use ring::SpanRing;
+
+/// Number of pipeline stages a served request is decomposed into.
+pub const N_STAGES: usize = 6;
+
+/// Default per-shard span-ring capacity (events, not requests).
+pub const DEFAULT_RING_CAPACITY: usize = 16_384;
+
+/// One stage of a served request's lifecycle, in pipeline order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Client-side admission work: reply-slot acquisition and least-loaded
+    /// shard selection, up to the moment the request is stamped for its
+    /// shard queue.
+    Admission,
+    /// Waiting in the shard's channel until the worker received it.
+    QueueWait,
+    /// Waiting on the worker while its dynamic batch filled (plus the
+    /// batch drain and packet copy), up to backend dispatch.
+    BatchForm,
+    /// The backend's `psu_sort` execution over the whole batch.
+    BackendSort,
+    /// Link-power pricing and policy evaluation for the batch (zero-length
+    /// when the engine runs without an ordering policy).
+    LinkpowerPrice,
+    /// Response construction and reply-slot fulfilment.
+    ReplyFulfil,
+}
+
+impl Stage {
+    /// Every stage, in pipeline order (the order spans tile a request).
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::Admission,
+        Stage::QueueWait,
+        Stage::BatchForm,
+        Stage::BackendSort,
+        Stage::LinkpowerPrice,
+        Stage::ReplyFulfil,
+    ];
+
+    /// Stable snake_case label (Prometheus `stage` label, Chrome span
+    /// name).
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchForm => "batch_form",
+            Stage::BackendSort => "backend_sort",
+            Stage::LinkpowerPrice => "linkpower_price",
+            Stage::ReplyFulfil => "reply_fulfil",
+        }
+    }
+
+    /// Dense index into [`Stage::ALL`].
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`Stage::index`]; `None` for out-of-range values.
+    pub fn from_index(i: usize) -> Option<Stage> {
+        Stage::ALL.get(i).copied()
+    }
+}
+
+/// What a recorded [`SpanEvent`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// A stage span of one sampled request (`dur_ns` is its duration).
+    Stage(Stage),
+    /// A shard queue-depth sample taken at batch dispatch (`dur_ns`
+    /// carries the in-flight gauge value; exported as a Chrome counter
+    /// event).
+    InflightCounter,
+}
+
+/// Tag value in the packed meta word marking an inflight-counter event
+/// (stage spans use their dense stage index).
+const COUNTER_TAG: u64 = 0xFF;
+
+/// One recorded trace event: a stage span of a sampled request, or a
+/// shard queue-depth counter sample. Timestamps are nanosecond offsets
+/// from the owning [`Tracer`]'s epoch, so span arithmetic is exact u64
+/// math and a request's six stage spans tile its end-to-end latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Stage span or counter sample.
+    pub kind: SpanKind,
+    /// Monotonic request id (0 for counter samples).
+    pub req_id: u64,
+    /// Shard that served the request (Chrome `pid`).
+    pub shard: u16,
+    /// Submitting client's id (Chrome `tid`; 0 for one-shot `sort` calls
+    /// and counter samples).
+    pub client: u32,
+    /// Start offset from the tracer epoch, nanoseconds.
+    pub start_ns: u64,
+    /// Span duration in nanoseconds (counter samples: the gauge value).
+    pub dur_ns: u64,
+}
+
+impl SpanEvent {
+    /// End offset (`start_ns + dur_ns`), saturating.
+    pub fn end_ns(&self) -> u64 {
+        self.start_ns.saturating_add(self.dur_ns)
+    }
+
+    /// True for stage spans (false for counter samples).
+    pub fn is_span(&self) -> bool {
+        matches!(self.kind, SpanKind::Stage(_))
+    }
+
+    /// Pack kind/shard/client into one word for the ring's atomic slots:
+    /// `client << 32 | shard << 16 | tag`.
+    pub(crate) fn meta_word(&self) -> u64 {
+        let tag = match self.kind {
+            SpanKind::Stage(s) => s.index() as u64,
+            SpanKind::InflightCounter => COUNTER_TAG,
+        };
+        ((self.client as u64) << 32) | ((self.shard as u64) << 16) | tag
+    }
+
+    /// Rebuild an event from the ring's four payload words.
+    pub(crate) fn from_words(req_id: u64, start_ns: u64, dur_ns: u64, meta: u64) -> Self {
+        let kind = match Stage::from_index((meta & 0xFFFF) as usize) {
+            Some(s) => SpanKind::Stage(s),
+            None => SpanKind::InflightCounter,
+        };
+        Self {
+            kind,
+            req_id,
+            shard: ((meta >> 16) & 0xFFFF) as u16,
+            client: (meta >> 32) as u32,
+            start_ns,
+            dur_ns,
+        }
+    }
+
+    /// Sort key for deterministic export order: start time, then request,
+    /// then pipeline position.
+    fn order_key(&self) -> (u64, u64, u64) {
+        let tag = match self.kind {
+            SpanKind::Stage(s) => s.index() as u64,
+            SpanKind::InflightCounter => COUNTER_TAG,
+        };
+        (self.start_ns, self.req_id, tag)
+    }
+}
+
+/// Tracing knobs: how often to sample and how much history each shard
+/// ring keeps. Constructed via [`TraceConfig::new`] (which clamps both
+/// fields to at least 1); absence of a `TraceConfig` — the default
+/// everywhere — means tracing is off and the serving path is unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Record spans for every `sample_every`-th request (1 = every
+    /// request). Request ids are assigned to *all* requests either way,
+    /// so sampled ids stay comparable across runs.
+    pub sample_every: u64,
+    /// Capacity of each per-shard [`SpanRing`], in events. A request
+    /// contributes [`N_STAGES`] span events plus the occasional counter
+    /// sample; when the ring wraps, the oldest events are overwritten and
+    /// counted in [`SpanRing::dropped`].
+    pub ring_capacity: usize,
+}
+
+impl Default for TraceConfig {
+    /// Sample every request into [`DEFAULT_RING_CAPACITY`]-event rings.
+    fn default() -> Self {
+        Self { sample_every: 1, ring_capacity: DEFAULT_RING_CAPACITY }
+    }
+}
+
+impl TraceConfig {
+    /// Config with both knobs clamped to at least 1.
+    pub fn new(sample_every: u64, ring_capacity: usize) -> Self {
+        Self { sample_every: sample_every.max(1), ring_capacity: ring_capacity.max(1) }
+    }
+
+    /// Default-capacity rings with an explicit sampling period.
+    pub fn sampled(sample_every: u64) -> Self {
+        Self::new(sample_every, DEFAULT_RING_CAPACITY)
+    }
+}
+
+/// The engine-wide tracing context: the epoch all span offsets are
+/// measured from, the monotonic request-id allocator, the sampling gate,
+/// and one [`SpanRing`] per shard. Shared read-only across clients and
+/// shard workers (all state is atomic).
+#[derive(Debug)]
+pub struct Tracer {
+    cfg: TraceConfig,
+    epoch: Instant,
+    rings: Vec<SpanRing>,
+    next_req: AtomicU64,
+    next_client: AtomicU64,
+    sampled: AtomicU64,
+}
+
+impl Tracer {
+    /// Tracer for an engine with `shards` workers (clamped to ≥ 1).
+    pub fn new(cfg: TraceConfig, shards: usize) -> Self {
+        let cfg = TraceConfig::new(cfg.sample_every, cfg.ring_capacity);
+        Self {
+            cfg,
+            epoch: Instant::now(),
+            rings: (0..shards.max(1)).map(|_| SpanRing::new(cfg.ring_capacity)).collect(),
+            next_req: AtomicU64::new(0),
+            next_client: AtomicU64::new(1),
+            sampled: AtomicU64::new(0),
+        }
+    }
+
+    /// The active configuration (post-clamp).
+    pub fn config(&self) -> TraceConfig {
+        self.cfg
+    }
+
+    /// The instant all span offsets are measured from.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Nanosecond offset of `t` from the epoch (0 for pre-epoch instants).
+    pub fn offset_ns(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// Admit one request: assign its monotonic id and decide sampling.
+    /// Returns `Some(req_id)` when the request's spans should be
+    /// recorded.
+    pub fn admit(&self) -> Option<u64> {
+        let id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        if id % self.cfg.sample_every == 0 {
+            self.sampled.fetch_add(1, Ordering::Relaxed);
+            Some(id)
+        } else {
+            None
+        }
+    }
+
+    /// Allocate a client id (Chrome `tid`). Ids start at 1; 0 marks the
+    /// clientless one-shot `sort` path.
+    pub fn next_client_id(&self) -> u32 {
+        self.next_client.fetch_add(1, Ordering::Relaxed) as u32
+    }
+
+    /// The span ring of `shard`.
+    pub fn ring(&self, shard: usize) -> &SpanRing {
+        &self.rings[shard]
+    }
+
+    /// Number of per-shard rings.
+    pub fn shards(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// Total request ids assigned so far.
+    pub fn requests(&self) -> u64 {
+        self.next_req.load(Ordering::Relaxed)
+    }
+
+    /// Requests whose spans were selected for recording.
+    pub fn sampled(&self) -> u64 {
+        self.sampled.load(Ordering::Relaxed)
+    }
+
+    /// Total events recorded into any ring (including later-dropped ones).
+    pub fn recorded(&self) -> u64 {
+        self.rings.iter().map(|r| r.recorded()).sum()
+    }
+
+    /// Total events lost to ring overwrites or write conflicts.
+    pub fn dropped(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped()).sum()
+    }
+
+    /// Drain every shard ring into one deterministic, time-sorted report.
+    pub fn report(&self) -> TraceReport {
+        let mut events: Vec<SpanEvent> = Vec::new();
+        for ring in &self.rings {
+            events.extend(ring.drain());
+        }
+        events.sort_unstable_by_key(|e| e.order_key());
+        TraceReport {
+            events,
+            requests: self.requests(),
+            sampled: self.sampled(),
+            recorded: self.recorded(),
+            dropped: self.dropped(),
+            shards: self.rings.len(),
+        }
+    }
+
+    /// The tracer's counters as Prometheus exposition lines (appended to
+    /// the engine metrics by `SortService::render_stats`).
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, kind, help, value) in [
+            (
+                "sortservice_trace_requests_total",
+                "counter",
+                "Request ids assigned by the tracer.",
+                self.requests(),
+            ),
+            (
+                "sortservice_trace_sampled_total",
+                "counter",
+                "Requests whose stage spans were selected for recording.",
+                self.sampled(),
+            ),
+            (
+                "sortservice_trace_events_total",
+                "counter",
+                "Trace events recorded into the span rings.",
+                self.recorded(),
+            ),
+            (
+                "sortservice_trace_dropped_total",
+                "counter",
+                "Trace events lost to ring overwrites or write conflicts.",
+                self.dropped(),
+            ),
+        ] {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            let _ = writeln!(out, "{name} {value}");
+        }
+        out
+    }
+}
+
+/// A drained trace: every surviving event plus the counters needed to
+/// account for what is *not* in it (sampling and drops are never silent).
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    /// Surviving events, sorted by start time (then request, then stage).
+    pub events: Vec<SpanEvent>,
+    /// Request ids assigned over the tracer's lifetime.
+    pub requests: u64,
+    /// Requests selected for span recording.
+    pub sampled: u64,
+    /// Events recorded into the rings (including later-dropped ones).
+    pub recorded: u64,
+    /// Events lost to overwrites or write conflicts.
+    pub dropped: u64,
+    /// Number of shard rings drained.
+    pub shards: usize,
+}
+
+impl TraceReport {
+    /// Number of stage spans in the report.
+    pub fn span_count(&self) -> usize {
+        self.events.iter().filter(|e| e.is_span()).count()
+    }
+
+    /// Number of queue-depth counter samples in the report.
+    pub fn counter_count(&self) -> usize {
+        self.events.iter().filter(|e| !e.is_span()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_indices_round_trip_in_pipeline_order() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert_eq!(Stage::from_index(i), Some(*s));
+        }
+        assert_eq!(Stage::from_index(N_STAGES), None);
+        let labels: Vec<&str> = Stage::ALL.iter().map(|s| s.label()).collect();
+        assert_eq!(
+            labels,
+            [
+                "admission",
+                "queue_wait",
+                "batch_form",
+                "backend_sort",
+                "linkpower_price",
+                "reply_fulfil",
+            ],
+        );
+    }
+
+    #[test]
+    fn span_event_meta_word_round_trips() {
+        for kind in [SpanKind::Stage(Stage::LinkpowerPrice), SpanKind::InflightCounter] {
+            let ev = SpanEvent {
+                kind,
+                req_id: 0xDEAD_BEEF,
+                shard: 513,
+                client: 0xFEED_F00D,
+                start_ns: 123,
+                dur_ns: 456,
+            };
+            let back =
+                SpanEvent::from_words(ev.req_id, ev.start_ns, ev.dur_ns, ev.meta_word());
+            assert_eq!(back, ev);
+        }
+    }
+
+    #[test]
+    fn trace_config_clamps_to_valid_values() {
+        let cfg = TraceConfig::new(0, 0);
+        assert_eq!(cfg.sample_every, 1);
+        assert_eq!(cfg.ring_capacity, 1);
+        assert_eq!(TraceConfig::default().sample_every, 1);
+        assert_eq!(TraceConfig::sampled(8).ring_capacity, DEFAULT_RING_CAPACITY);
+    }
+
+    #[test]
+    fn tracer_samples_every_nth_request_and_counts() {
+        let t = Tracer::new(TraceConfig::new(4, 64), 2);
+        let sampled: Vec<bool> = (0..16).map(|_| t.admit().is_some()).collect();
+        for (i, s) in sampled.iter().enumerate() {
+            assert_eq!(*s, i % 4 == 0, "request {i}");
+        }
+        assert_eq!(t.requests(), 16);
+        assert_eq!(t.sampled(), 4);
+        assert_eq!(t.shards(), 2);
+        // client ids start at 1 (0 is the clientless one-shot path)
+        assert_eq!(t.next_client_id(), 1);
+        assert_eq!(t.next_client_id(), 2);
+    }
+
+    #[test]
+    fn report_merges_rings_sorted_by_time() {
+        let t = Tracer::new(TraceConfig::default(), 2);
+        let ev = |shard: u16, req: u64, start: u64| SpanEvent {
+            kind: SpanKind::Stage(Stage::Admission),
+            req_id: req,
+            shard,
+            client: 1,
+            start_ns: start,
+            dur_ns: 5,
+        };
+        t.ring(1).record(&ev(1, 2, 300));
+        t.ring(0).record(&ev(0, 1, 100));
+        t.ring(0).record(&ev(0, 3, 200));
+        let r = t.report();
+        assert_eq!(r.events.len(), 3);
+        assert_eq!(r.span_count(), 3);
+        assert_eq!(r.counter_count(), 0);
+        let starts: Vec<u64> = r.events.iter().map(|e| e.start_ns).collect();
+        assert_eq!(starts, [100, 200, 300]);
+        assert_eq!(r.recorded, 3);
+        assert_eq!(r.dropped, 0);
+        let prom = t.render_prometheus();
+        assert!(prom.contains("sortservice_trace_events_total 3"));
+        assert!(prom.contains("# TYPE sortservice_trace_dropped_total counter"));
+    }
+}

@@ -33,6 +33,8 @@ fn hotpath_baseline_parses_and_names_the_gated_scenarios() {
         "serve_throughput (8 shard(s), 256 reqs, 16 clients)",
         "serve_telemetry_overhead (probe off, 2 shards, 256 reqs)",
         "serve_telemetry_overhead (probe on, 2 shards, 256 reqs)",
+        "serve_trace_overhead (trace off, 2 shards, 256 reqs)",
+        "serve_trace_overhead (trace on, 2 shards, 256 reqs)",
     ] {
         assert!(has_measurement(&doc, name), "baseline lost scenario {name:?}");
     }
@@ -69,12 +71,26 @@ fn hotpath_baseline_gates_the_serving_core_scalars() {
     let overhead = scalar(&doc, "serve_telemetry_overhead_ratio").expect("scalar missing");
     assert!(overhead < 1.5, "telemetry overhead back at PR 6 levels: {overhead}");
     assert!(overhead >= 1.0, "an overhead ratio below 1.0 means the probe is free: {overhead}");
-    // and both names must actually be gate-protected (direction inferred
-    // from the name), which require_scalars + a self-compare prove
-    require_scalars(&doc, &["serve_shard_scaling_8v4", "serve_telemetry_overhead_ratio"])
-        .expect("required scalars present");
+    // PR 8 acceptance: full-rate span tracing must stay cheap too —
+    // gated under the same 1.5 ceiling as telemetry
+    let trace = scalar(&doc, "serve_trace_overhead_ratio").expect("scalar missing");
+    assert!(trace < 1.5, "trace overhead exceeds the acceptance ceiling: {trace}");
+    assert!(trace >= 1.0, "an overhead ratio below 1.0 means tracing is free: {trace}");
+    // and all three names must actually be gate-protected (direction
+    // inferred from the name), which require_scalars + a self-compare prove
+    require_scalars(
+        &doc,
+        &[
+            "serve_shard_scaling_8v4",
+            "serve_telemetry_overhead_ratio",
+            "serve_trace_overhead_ratio",
+        ],
+    )
+    .expect("required scalars present");
     let r = compare(&doc, &doc, DEFAULT_TOLERANCE);
-    for name in ["serve_shard_scaling_8v4", "serve_telemetry_overhead_ratio"] {
+    for name in
+        ["serve_shard_scaling_8v4", "serve_telemetry_overhead_ratio", "serve_trace_overhead_ratio"]
+    {
         let row = r.rows.iter().find(|row| row.name == name).expect("row");
         assert_eq!(row.verdict, Verdict::Pass, "{name} is not gated");
     }
@@ -85,6 +101,13 @@ fn serve_baseline_parses_and_gates_throughput() {
     let doc = BenchDoc::load("BENCH_serve.json").expect("committed baseline must parse");
     assert!(scalar(&doc, "serve_req_per_s").expect("scalar missing") > 0.0);
     assert!(scalar(&doc, "serve_clients").expect("scalar missing") >= 1.0);
+    // the CI serve smoke traces every request: the baseline records the
+    // expected sampling outcome (6 spans per request, nothing dropped)
+    let sampled = scalar(&doc, "serve_trace_sampled").expect("scalar missing");
+    let spans = scalar(&doc, "serve_trace_spans").expect("scalar missing");
+    assert!(sampled > 0.0, "CI smoke trace sampled nothing");
+    assert_eq!(spans, sampled * 6.0, "trace spans must tile each sampled request exactly");
+    assert_eq!(scalar(&doc, "serve_trace_dropped"), Some(0.0), "CI smoke trace must not drop");
     // exactly the *_per_s scalar is gated: the self-comparison must make
     // at least one gated comparison and pass
     let r = compare(&doc, &doc, DEFAULT_TOLERANCE);

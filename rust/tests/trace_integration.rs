@@ -1,0 +1,251 @@
+//! End-to-end tests for the stage-level tracing subsystem: the traced
+//! serving engine must account for every sampled request exactly (six
+//! spans tiling `submitted → fulfilled`, drops counted never silent),
+//! the Chrome trace-event export must be structurally valid, and the
+//! untraced engine must expose none of it.
+
+use std::time::Duration;
+
+use repro::coordinator::{SortResponse, SortService};
+use repro::obs::{chrome, SpanEvent, SpanKind, SpanRing, Stage, TraceConfig};
+use repro::runtime::PACKET_ELEMS;
+
+fn packets(n: usize) -> Vec<[u8; PACKET_ELEMS]> {
+    (0..n)
+        .map(|i| {
+            let mut a = [0u8; PACKET_ELEMS];
+            for (j, b) in a.iter_mut().enumerate() {
+                *b = (i * 7 + j * 13) as u8;
+            }
+            a
+        })
+        .collect()
+}
+
+/// Serve `reqs` through one pooled client on a traced service and drain
+/// the report after the workers settle (the per-batch counter event
+/// lands just after the batch's last reply is fulfilled).
+fn serve_traced(
+    shards: usize,
+    cfg: TraceConfig,
+    reqs: &[[u8; PACKET_ELEMS]],
+) -> (SortService, repro::obs::TraceReport) {
+    let svc =
+        SortService::spawn_reference_traced(shards, Duration::from_micros(200), None, Some(cfg))
+            .expect("spawn traced service");
+    let mut out: Vec<SortResponse> = Vec::new();
+    let mut client = svc.client();
+    client.submit_batch(reqs, &mut out).expect("serve");
+    assert_eq!(out.len(), reqs.len());
+    std::thread::sleep(Duration::from_millis(100));
+    let report = svc.trace_report().expect("tracing was enabled");
+    (svc, report)
+}
+
+/// Extract the raw text of a top-level `"key":value` field from a
+/// single-line JSON object (enough for the hand-rolled exporter).
+fn field<'a>(line: &'a str, key: &str) -> &'a str {
+    let pat = format!("\"{key}\":");
+    let i = line
+        .find(&pat)
+        .unwrap_or_else(|| panic!("event {line:?} is missing field {key:?}"))
+        + pat.len();
+    let rest = &line[i..];
+    let end = rest
+        .find(|c: char| c == ',' || c == '}')
+        .unwrap_or_else(|| panic!("unterminated field {key:?} in {line:?}"));
+    &rest[..end]
+}
+
+#[test]
+fn chrome_trace_export_is_structurally_valid_and_complete() {
+    let (_, report) = serve_traced(2, TraceConfig::default(), &packets(300));
+    // sample_every = 1 and a capacity far above the load: every request
+    // is sampled, every span survives, nothing drops
+    assert_eq!(report.requests, 300);
+    assert_eq!(report.sampled, 300);
+    assert_eq!(report.span_count(), 6 * 300, "spans must tile every sampled request");
+    assert_eq!(report.dropped, 0);
+    assert!(report.counter_count() >= 1, "each dispatched batch samples the queue depth");
+
+    let text = chrome::render(&report);
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.first(), Some(&"["));
+    assert_eq!(lines.last(), Some(&"]"));
+    let events = &lines[1..lines.len() - 1];
+    assert_eq!(events.len(), report.events.len(), "one event per line");
+    let (mut spans, mut counters) = (0usize, 0usize);
+    for line in events {
+        let line = line.strip_suffix(',').unwrap_or(line);
+        assert!(line.starts_with('{') && line.ends_with('}'), "not an object: {line:?}");
+        assert!(field(line, "name").starts_with('"'));
+        let ts: f64 = field(line, "ts").parse().expect("ts is a number");
+        let dur: f64 = field(line, "dur").parse().expect("dur is a number");
+        assert!(ts >= 0.0 && dur >= 0.0, "negative time in {line:?}");
+        let _pid: u64 = field(line, "pid").parse().expect("pid is a number");
+        let _tid: u64 = field(line, "tid").parse().expect("tid is a number");
+        match field(line, "ph") {
+            "\"X\"" => spans += 1,
+            "\"C\"" => counters += 1,
+            ph => panic!("unexpected phase {ph} in {line:?}"),
+        }
+    }
+    assert_eq!(spans, report.span_count());
+    assert_eq!(counters, report.counter_count());
+}
+
+#[test]
+fn sampled_request_spans_tile_its_latency_exactly() {
+    let (_, report) = serve_traced(2, TraceConfig::default(), &packets(200));
+    let mut req_ids: Vec<u64> =
+        report.events.iter().filter(|e| e.is_span()).map(|e| e.req_id).collect();
+    req_ids.sort_unstable();
+    req_ids.dedup();
+    assert_eq!(req_ids.len(), 200);
+    for id in req_ids {
+        let spans: Vec<&SpanEvent> = report
+            .events
+            .iter()
+            .filter(|e| e.is_span() && e.req_id == id)
+            .collect();
+        assert_eq!(spans.len(), 6, "request {id} is missing stages");
+        for (i, (span, stage)) in spans.iter().zip(Stage::ALL).enumerate() {
+            // report order is time order; zero-length spans tie-break on
+            // the stage index, so the pipeline order is always recovered
+            assert_eq!(span.kind, SpanKind::Stage(stage), "request {id} stage {i} out of order");
+        }
+        // epoch offsets telescope: each span starts exactly where the
+        // previous one ended, so the six durations sum to the recorded
+        // end-to-end latency with no gap and no overlap — in exact u64 ns
+        for w in spans.windows(2) {
+            assert_eq!(w[0].end_ns(), w[1].start_ns, "gap inside request {id}");
+        }
+        let total: u64 = spans.iter().map(|s| s.dur_ns).sum();
+        assert_eq!(
+            total,
+            spans[5].end_ns() - spans[0].start_ns,
+            "request {id} stage durations do not sum to its latency"
+        );
+        // all six spans ride the same client and the serving shard
+        assert!(spans.iter().all(|s| s.client == spans[0].client));
+        assert!(spans.iter().all(|s| s.shard == spans[0].shard));
+    }
+}
+
+#[test]
+fn sampling_gate_keeps_every_nth_request_and_histograms_keep_all() {
+    let reqs = packets(64);
+    let (svc, report) = serve_traced(1, TraceConfig::new(4, 1 << 14), &reqs);
+    assert_eq!(report.requests, 64);
+    assert_eq!(report.sampled, 16, "every 4th request is sampled");
+    assert_eq!(report.span_count(), 6 * 16);
+    assert_eq!(report.dropped, 0);
+    // the latency decomposition is always-on while tracing is configured:
+    // every request lands in every stage histogram, sampled or not
+    for stage in Stage::ALL {
+        assert_eq!(
+            svc.metrics.stage_latency[stage.index()].total(),
+            64,
+            "stage {} histogram missed requests",
+            stage.label()
+        );
+    }
+    // and the tracer's own counters are exported for scrape
+    let stats = svc.render_stats();
+    for family in [
+        "sortservice_trace_requests_total 64",
+        "sortservice_trace_sampled_total 16",
+        "sortservice_trace_dropped_total 0",
+        "sortservice_stage_seconds_bucket{stage=\"backend_sort\",le=\"",
+        "sortservice_shard_inflight_peak{shard=\"0\"}",
+    ] {
+        assert!(stats.contains(family), "stats snapshot is missing {family:?}:\n{stats}");
+    }
+}
+
+#[test]
+fn shard_inflight_peak_watermark_is_recorded() {
+    let (svc, _) = serve_traced(2, TraceConfig::default(), &packets(128));
+    let peak: u64 = svc
+        .metrics
+        .shard_inflight_peak
+        .iter()
+        .map(|p| p.load(std::sync::atomic::Ordering::Relaxed))
+        .max()
+        .unwrap();
+    assert!(peak >= 1, "admission never raised the high watermark");
+    let now: u64 = svc
+        .metrics
+        .shard_inflight
+        .iter()
+        .map(|p| p.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    assert_eq!(now, 0, "all requests fulfilled, nothing should remain charged");
+}
+
+#[test]
+fn untraced_service_exposes_no_trace_surface() {
+    let svc = SortService::spawn_reference_sharded(1, Duration::from_micros(200)).expect("spawn");
+    let reqs = packets(32);
+    let mut out = Vec::new();
+    svc.client().submit_batch(&reqs, &mut out).expect("serve");
+    assert_eq!(out.len(), 32);
+    assert!(svc.tracer().is_none());
+    assert!(svc.trace_report().is_none(), "untraced engine must not fabricate a report");
+    let stats = svc.render_stats();
+    assert!(!stats.contains("sortservice_trace_"), "trace counters leaked:\n{stats}");
+    assert!(
+        !stats.contains("sortservice_stage_seconds"),
+        "stage histograms must stay silent until tracing records into them:\n{stats}"
+    );
+    // the plain inflight gauge and peak are always-on serving metrics
+    assert!(stats.contains("sortservice_shard_inflight{shard=\"0\"}"));
+    assert!(stats.contains("sortservice_shard_inflight_peak{shard=\"0\"}"));
+}
+
+#[test]
+fn span_ring_survives_a_many_writer_hammer_with_exact_accounting() {
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    fn ev(req_id: u64) -> SpanEvent {
+        SpanEvent {
+            kind: match req_id % 7 {
+                6 => SpanKind::InflightCounter,
+                i => SpanKind::Stage(Stage::ALL[i as usize]),
+            },
+            req_id,
+            shard: (req_id % 11) as u16,
+            client: (req_id % 13) as u32,
+            start_ns: req_id.wrapping_mul(3),
+            dur_ns: req_id % 97,
+        }
+    }
+
+    let ring = Arc::new(SpanRing::new(512));
+    let threads = 8u64;
+    let per = 4_000u64;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let ring = Arc::clone(&ring);
+            s.spawn(move || {
+                for i in 0..per {
+                    ring.record(&ev(t * per + i));
+                }
+            });
+        }
+    });
+    // exact accounting at rest: every ticket either survived the drain or
+    // was counted dropped — overwrites and write conflicts alike
+    assert_eq!(ring.recorded(), threads * per);
+    let got = ring.drain();
+    assert_eq!(ring.recorded(), got.len() as u64 + ring.dropped());
+    assert!(got.len() <= 512);
+    let mut seen = HashSet::new();
+    for e in &got {
+        assert!(seen.insert(e.req_id), "request {} drained twice", e.req_id);
+        // every payload field is derived from req_id, so any mismatch is
+        // a torn write leaking through the seqlock
+        assert_eq!(*e, ev(e.req_id));
+    }
+}

@@ -19,8 +19,9 @@
 //! the tracing `serve_trace_overhead_ratio`,
 //! the least-loaded-admission `serve_shard_scaling_8v4`, the
 //! byte-vs-word `packet_bt_throughput_speedup`, the
-//! per-boundary-vs-block `packet_bt_block_speedup`, and the
-//! sequential-vs-parallel `psu_sort_parallel_speedup` also land there as
+//! per-boundary-vs-block `packet_bt_block_speedup`, the
+//! sequential-vs-parallel `psu_sort_parallel_speedup`, and the
+//! front-door wire-codec `net_codec_frames_per_s` also land there as
 //! scalars, so all are tracked across PRs). Set `BENCH_SMOKE=1` to
 //! shrink every scenario to CI-smoke sizes (trajectory, not precision).
 
@@ -403,6 +404,57 @@ fn main() {
             println!("  -> serve_trace_overhead: {ratio:.3}x (trace on vs off)");
             scalars.push(("serve_trace_overhead_ratio", ratio));
         }
+    }
+
+    // net_codec_roundtrip: the front-door wire codec on a server-shaped
+    // frame mix (half requests, half full replies — the two frames that
+    // dominate a serving connection). Encode the stream and decode it
+    // back; the frames/s rate lands in the benchutil JSON as
+    // `net_codec_frames_per_s` and is floor-gated so codec regressions
+    // show up before they surface as loadgen throughput losses.
+    {
+        use repro::net::{decode, encode, Frame};
+        use repro::runtime::PACKET_ELEMS;
+        let n_frames: usize = if smoke { 512 } else { 4096 };
+        let mut rng = Rng::new(29);
+        let frames: Vec<Frame> = (0..n_frames)
+            .map(|i| {
+                if i % 2 == 0 {
+                    let mut packet = [0u8; PACKET_ELEMS];
+                    for b in packet.iter_mut() {
+                        *b = rng.next_u8();
+                    }
+                    Frame::Request { id: i as u64, packet }
+                } else {
+                    let acc: Vec<u16> = (0..PACKET_ELEMS as u16).collect();
+                    Frame::Reply {
+                        id: i as u64,
+                        strategy: None,
+                        acc_indices: acc.clone(),
+                        app_indices: acc,
+                    }
+                }
+            })
+            .collect();
+        let mut wire: Vec<u8> = Vec::new();
+        let m = bench("net codec encode+decode (request/reply mix)", 2, iters(20), || {
+            wire.clear();
+            for f in &frames {
+                encode(f, &mut wire);
+            }
+            let mut at = 0usize;
+            let mut ids = 0u64;
+            while let Some((f, used)) = decode(&wire[at..]).expect("valid stream") {
+                ids = ids.wrapping_add(f.id());
+                at += used;
+            }
+            assert_eq!(at, wire.len(), "decode must consume the stream exactly");
+            ids
+        });
+        let fps = m.per_second(n_frames as u64);
+        println!("  -> {:.2} Mframes/s codec roundtrip", fps / 1e6);
+        scalars.push(("net_codec_frames_per_s", fps));
+        all.push(m);
     }
 
     // XLA twin through PJRT, when compiled in and artifacts are present

@@ -95,7 +95,7 @@
 //! timestamps are taken and the serving path is unchanged.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -455,6 +455,18 @@ pub struct Metrics {
     /// Link-power telemetry per shard (all-zero while no policy engine has
     /// published — e.g. the engine was spawned without a policy).
     pub linkpower: Vec<LinkPowerStats>,
+    /// Requests admitted through the front-door [`Admission`] gate.
+    /// Stays zero for purely in-process callers that bypass the gate.
+    pub accepted: AtomicU64,
+    /// Requests shed with a typed `Overloaded` error because the bounded
+    /// admission queue was full.
+    pub shed_overloaded: AtomicU64,
+    /// Requests shed with a typed `Draining` error because they arrived
+    /// after graceful shutdown began.
+    pub shed_draining: AtomicU64,
+    /// Admitted requests that were still fulfilled *after* drain began —
+    /// the "in-flight requests complete" half of the drain contract.
+    pub drained: AtomicU64,
 }
 
 impl Metrics {
@@ -471,7 +483,33 @@ impl Metrics {
             latency: LatencyHistogram::default(),
             stage_latency: std::array::from_fn(|_| LatencyHistogram::default()),
             linkpower: (0..shards).map(|_| LinkPowerStats::default()).collect(),
+            accepted: AtomicU64::new(0),
+            shed_overloaded: AtomicU64::new(0),
+            shed_draining: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
         }
+    }
+
+    /// Account one request admitted through the front-door gate.
+    pub fn record_accepted(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account one request shed at the front door for `why`.
+    pub fn record_shed(&self, why: &AdmitError) {
+        match why {
+            AdmitError::Overloaded { .. } => {
+                self.shed_overloaded.fetch_add(1, Ordering::Relaxed);
+            }
+            AdmitError::Draining => {
+                self.shed_draining.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Account one admitted request fulfilled after drain began.
+    pub fn record_drained(&self) {
+        self.drained.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one request's duration in `stage`'s decomposition histogram.
@@ -558,6 +596,47 @@ impl Metrics {
             "Largest batch observed on any shard.",
         );
         let _ = writeln!(out, "sortservice_max_batch {max_batch}");
+        // front-door admission counters: always emitted (zero for purely
+        // in-process callers) so dashboards and the stats-snapshot test can
+        // rely on the families existing before the first rejection
+        write_family(
+            &mut out,
+            "sortservice_accepted_total",
+            "counter",
+            "Requests admitted through the front-door gate.",
+        );
+        let _ = writeln!(
+            out,
+            "sortservice_accepted_total {}",
+            self.accepted.load(Ordering::Relaxed)
+        );
+        write_family(
+            &mut out,
+            "sortservice_shed_total",
+            "counter",
+            "Requests rejected at the front door, by reason.",
+        );
+        let _ = writeln!(
+            out,
+            "sortservice_shed_total{{reason=\"overloaded\"}} {}",
+            self.shed_overloaded.load(Ordering::Relaxed)
+        );
+        let _ = writeln!(
+            out,
+            "sortservice_shed_total{{reason=\"draining\"}} {}",
+            self.shed_draining.load(Ordering::Relaxed)
+        );
+        write_family(
+            &mut out,
+            "sortservice_drained_total",
+            "counter",
+            "Admitted requests fulfilled after graceful drain began.",
+        );
+        let _ = writeln!(
+            out,
+            "sortservice_drained_total {}",
+            self.drained.load(Ordering::Relaxed)
+        );
         write_family(
             &mut out,
             "sortservice_latency_p50_seconds",
@@ -788,6 +867,126 @@ impl Metrics {
 impl Default for Metrics {
     fn default() -> Self {
         Self::new(1)
+    }
+}
+
+/// Why the front-door [`Admission`] gate refused a request. Each variant
+/// maps 1:1 onto a typed error frame on the wire
+/// ([`crate::net::ErrorCode`]), so a shed request always carries a
+/// machine-readable reason back to the caller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The bounded admission queue was at capacity; the request was shed
+    /// instead of growing the queue without bound.
+    Overloaded {
+        /// The configured in-flight bound the gate enforced.
+        capacity: usize,
+    },
+    /// Graceful drain has begun: in-flight requests will complete, but no
+    /// new work is admitted.
+    Draining,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::Overloaded { capacity } => {
+                write!(f, "overloaded: admission queue full (capacity {capacity})")
+            }
+            AdmitError::Draining => write!(f, "draining: server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// Bounded front-door admission gate with a drain signal.
+///
+/// The gate holds an in-flight permit count against a fixed capacity:
+/// [`Admission::try_admit`] either takes a permit (CAS on the count, so
+/// concurrent connection threads can never overshoot the bound) or
+/// returns a typed [`AdmitError`] — the caller sheds the request with an
+/// error frame instead of queueing it. [`Admission::release`] returns the
+/// permit once the request has reached its one outcome (reply or internal
+/// error). [`Admission::begin_drain`] flips a sticky flag: every
+/// subsequent `try_admit` fails with [`AdmitError::Draining`] while
+/// already-admitted requests run to completion — the two halves of the
+/// graceful-drain contract.
+///
+/// This bounds *front-door* concurrency; the per-shard least-loaded
+/// admission below it ([`Metrics::shard_inflight`]) still balances the
+/// admitted work across workers.
+#[derive(Debug)]
+pub struct Admission {
+    capacity: usize,
+    inflight: AtomicUsize,
+    draining: AtomicBool,
+}
+
+impl Admission {
+    /// Gate admitting at most `capacity` in-flight requests. A zero
+    /// capacity is clamped to 1 so the gate can always make progress.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            inflight: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+        }
+    }
+
+    /// The configured in-flight bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Requests currently holding a permit.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Take one permit, or say why not. Never blocks.
+    pub fn try_admit(&self) -> Result<(), AdmitError> {
+        if self.draining.load(Ordering::Acquire) {
+            return Err(AdmitError::Draining);
+        }
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.capacity {
+                return Err(AdmitError::Overloaded { capacity: self.capacity });
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    // a drain racing this admit is benign: the permit is
+                    // counted, so shutdown still waits for this request
+                    return Ok(());
+                }
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Return one permit taken by [`Admission::try_admit`]. Calling it
+    /// without a matching admit is a bug; debug builds assert.
+    pub fn release(&self) {
+        let prev = self.inflight.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "Admission::release without a matching try_admit");
+    }
+
+    /// Begin graceful drain: all future admits fail with
+    /// [`AdmitError::Draining`]; permits already out stay valid. Sticky
+    /// and idempotent.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    /// Whether drain has begun.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
     }
 }
 
@@ -1671,6 +1870,104 @@ mod tests {
         }
         assert!(text.contains("# TYPE sortservice_requests_total counter"));
         assert!(text.contains("# HELP linkpower_bt_total "));
+    }
+
+    #[test]
+    fn prometheus_render_covers_admission_counters() {
+        let m = Metrics::new(1);
+        // the families exist before any front-door traffic (all-zero)…
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE sortservice_accepted_total counter"));
+        assert!(text.contains("# HELP sortservice_shed_total "));
+        assert!(text.contains("sortservice_accepted_total 0"));
+        assert!(text.contains("sortservice_shed_total{reason=\"overloaded\"} 0"));
+        assert!(text.contains("sortservice_shed_total{reason=\"draining\"} 0"));
+        assert!(text.contains("sortservice_drained_total 0"));
+        // …and track the record_* methods exactly
+        m.record_accepted();
+        m.record_accepted();
+        m.record_shed(&AdmitError::Overloaded { capacity: 8 });
+        m.record_shed(&AdmitError::Draining);
+        m.record_shed(&AdmitError::Draining);
+        m.record_drained();
+        let text = m.render_prometheus();
+        assert!(text.contains("sortservice_accepted_total 2"));
+        assert!(text.contains("sortservice_shed_total{reason=\"overloaded\"} 1"));
+        assert!(text.contains("sortservice_shed_total{reason=\"draining\"} 2"));
+        assert!(text.contains("sortservice_drained_total 1"));
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            assert_eq!(line.split_whitespace().count(), 2, "malformed line: {line}");
+        }
+    }
+
+    #[test]
+    fn admission_gate_bounds_and_drains() {
+        let gate = Admission::new(2);
+        assert_eq!(gate.capacity(), 2);
+        assert_eq!(gate.inflight(), 0);
+        assert!(gate.try_admit().is_ok());
+        assert!(gate.try_admit().is_ok());
+        assert_eq!(gate.inflight(), 2);
+        // at capacity: typed Overloaded, queue never grows past the bound
+        assert_eq!(gate.try_admit(), Err(AdmitError::Overloaded { capacity: 2 }));
+        gate.release();
+        assert!(gate.try_admit().is_ok());
+        // drain is sticky: admits fail even with free permits
+        gate.begin_drain();
+        assert!(gate.is_draining());
+        gate.release();
+        gate.release();
+        assert_eq!(gate.inflight(), 0);
+        assert_eq!(gate.try_admit(), Err(AdmitError::Draining));
+        gate.begin_drain(); // idempotent
+        assert_eq!(gate.try_admit(), Err(AdmitError::Draining));
+    }
+
+    #[test]
+    fn admission_gate_never_overshoots_under_contention() {
+        let gate = Arc::new(Admission::new(7));
+        let admitted = Arc::new(AtomicU64::new(0));
+        let shed = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let gate = gate.clone();
+                let admitted = admitted.clone();
+                let shed = shed.clone();
+                s.spawn(move || {
+                    for _ in 0..500 {
+                        match gate.try_admit() {
+                            Ok(()) => {
+                                let depth = gate.inflight();
+                                assert!(depth <= 7, "bound overshot: {depth}");
+                                admitted.fetch_add(1, Ordering::Relaxed);
+                                gate.release();
+                            }
+                            Err(AdmitError::Overloaded { capacity }) => {
+                                assert_eq!(capacity, 7);
+                                shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(AdmitError::Draining) => unreachable!("nobody drains"),
+                        }
+                    }
+                });
+            }
+        });
+        // every attempt resolved to exactly one outcome
+        let total =
+            admitted.load(Ordering::Relaxed) + shed.load(Ordering::Relaxed);
+        assert_eq!(total, 4 * 500);
+        assert_eq!(gate.inflight(), 0);
+    }
+
+    #[test]
+    fn admit_error_display_is_typed() {
+        let o = AdmitError::Overloaded { capacity: 16 };
+        assert!(o.to_string().contains("overloaded"));
+        assert!(o.to_string().contains("16"));
+        assert!(AdmitError::Draining.to_string().contains("draining"));
     }
 
     #[test]

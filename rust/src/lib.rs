@@ -35,6 +35,11 @@
 //!   (`artifacts/*.hlo.txt`); Python never runs at request time.
 //! * [`coordinator`] — the sharded dynamic-batching serving engine,
 //!   generic over the execution backend.
+//! * [`net`] — the network front door: the length-prefixed binary frame
+//!   codec ([`net::Frame`]), the TCP server ([`net::NetServer`]) with
+//!   bounded admission, typed load-shedding error frames, and graceful
+//!   drain (`repro serve --listen`), and the windowed-pipelining load
+//!   generator (`repro loadgen`).
 //! * [`obs`] — stage-level request tracing: per-shard lock-free span
 //!   rings ([`obs::SpanRing`]), the sampling [`obs::Tracer`], and the
 //!   Chrome trace-event exporter ([`obs::chrome`]) behind
@@ -65,6 +70,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod hw;
 pub mod linkpower;
+pub mod net;
 pub mod noc;
 pub mod obs;
 pub mod pe;

@@ -23,7 +23,7 @@ use repro::runtime::make_backend_with_workers;
 const GLOBAL_FLAGS: &[&str] = &["config", "seed"];
 
 /// Flags that take no value (their presence means "yes").
-const BARE_FLAGS: &[&str] = &["bless"];
+const BARE_FLAGS: &[&str] = &["bless", "drain"];
 
 /// Map CLI aliases onto registry names (`fig6`/`fig7` predate the merged
 /// `fig67` module; `ablate-k` predates the registry).
@@ -45,7 +45,19 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
         "ablate" => &["ks", "packets"],
         "policy" => &["packets"],
         "report" | "all" => &["only", "out"],
-        "serve" => &["requests", "shards", "clients", "max-wait-us", "policy", "stats", "trace"],
+        "serve" => &[
+            "requests",
+            "shards",
+            "clients",
+            "max-wait-us",
+            "policy",
+            "stats",
+            "trace",
+            "listen",
+            "admission-capacity",
+            "serve-for-s",
+        ],
+        "loadgen" => &["addr", "connections", "requests", "window", "drain"],
         "bench-gate" => &["fresh", "baseline", "tolerance", "bless", "require-scalars"],
         "help" | "--help" | "-h" => &[],
         _ => return None,
@@ -70,6 +82,13 @@ fn flag_doc(flag: &str) -> &'static str {
         "policy" => "ordering policy: passthrough|precise|approx|adaptive",
         "stats" => "write the Prometheus snapshot to FILE ('-' = stdout)",
         "trace" => "record every request's stage spans and write Chrome trace JSON to FILE",
+        "listen" => "serve over TCP on ADDR (e.g. 127.0.0.1:7411) instead of the local demo",
+        "admission-capacity" => "front-door in-flight bound; full queue sheds with Overloaded",
+        "serve-for-s" => "stop the TCP server after S seconds even without a drain",
+        "addr" => "server address to drive (default 127.0.0.1:7411)",
+        "connections" => "concurrent loadgen connections (default 4)",
+        "window" => "max in-flight requests per loadgen connection (default 32)",
+        "drain" => "send a Drain frame after the run (gracefully stops the server)",
         "fresh" => "benchutil JSON from the run under test",
         "baseline" => "committed baseline JSON (BENCH_*.json)",
         "tolerance" => "allowed throughput drop as a fraction (default 0.10)",
@@ -215,6 +234,25 @@ report & serving:
                             Chrome trace-event JSON to FILE (open in
                             Perfetto or chrome://tracing). (set
                             BENCHUTIL_JSON=path to dump JSON metrics)
+        [--listen ADDR] [--admission-capacity N] [--serve-for-s S]
+                            with --listen, serve over TCP instead of the
+                            local demo: length-prefixed binary frames into
+                            the pooled-client path, at most N in-flight
+                            requests (default 4096; a full queue sheds
+                            with a typed Overloaded error frame), graceful
+                            drain on a Drain frame (in-flight work
+                            completes, new connections refused, sockets
+                            closed); --serve-for-s bounds the run
+  loadgen [--addr HOST:PORT] [--connections C] [--requests N]
+          [--window W] [--drain]
+                            drive a running `serve --listen` server:
+                            C connections each keep up to W requests on
+                            the wire; every request must resolve to a
+                            reply or a typed error frame (a lost reply
+                            fails the run); prints throughput and
+                            p50/p99/p999 and writes them to
+                            BENCHUTIL_JSON; --drain stops the server
+                            afterwards
   bench-gate --fresh FILE --baseline FILE [--tolerance 0.10] [--bless]
              [--require-scalars NAME,...]
                             compare a fresh benchutil JSON dump against a
@@ -358,16 +396,42 @@ fn main() -> Result<()> {
                     std::process::exit(2);
                 }
             };
-            serve_demo(
-                &cfg,
-                n,
-                shards,
-                clients,
-                wait_us,
-                order_policy,
-                args.get("stats"),
-                args.get("trace"),
-            )?;
+            if let Some(listen) = args.get("listen") {
+                let capacity = args.get_usize("admission-capacity")?.unwrap_or(4096);
+                let serve_for_s = args.get_usize("serve-for-s")?;
+                serve_listen(
+                    &cfg,
+                    listen,
+                    shards,
+                    wait_us,
+                    order_policy,
+                    capacity,
+                    serve_for_s,
+                    args.get("stats"),
+                )?;
+            } else {
+                serve_demo(
+                    &cfg,
+                    n,
+                    shards,
+                    clients,
+                    wait_us,
+                    order_policy,
+                    args.get("stats"),
+                    args.get("trace"),
+                )?;
+            }
+        }
+        "loadgen" => {
+            let lg = repro::net::LoadgenConfig {
+                addr: args.get("addr").unwrap_or("127.0.0.1:7411").to_string(),
+                connections: args.get_usize("connections")?.unwrap_or(4).max(1),
+                requests: args.get_usize("requests")?.unwrap_or(10_000).max(1) as u64,
+                window: args.get_usize("window")?.unwrap_or(32).max(1),
+                drain: args.get("drain").is_some(),
+                seed: cfg.seed,
+            };
+            loadgen_cmd(&lg)?;
         }
         "bench-gate" => {
             use repro::benchutil::gate;
@@ -607,6 +671,126 @@ fn serve_demo(
     Ok(())
 }
 
+/// TCP front-door mode of `serve`: bind `--listen ADDR`, feed the frame
+/// protocol into the pooled-client path behind a bounded admission gate,
+/// and run until a `Drain` frame arrives (or `--serve-for-s` elapses),
+/// then shut down gracefully — in-flight requests complete, new
+/// connections are refused, sockets close, and every thread joins.
+#[allow(clippy::too_many_arguments)]
+fn serve_listen(
+    cfg: &Config,
+    listen: &str,
+    shards: usize,
+    wait_us: usize,
+    order_policy: Option<OrderPolicy>,
+    capacity: usize,
+    serve_for_s: Option<usize>,
+    stats: Option<&str>,
+) -> Result<()> {
+    use repro::coordinator::SortService;
+    use repro::net::NetServer;
+    use std::sync::atomic::Ordering;
+    use std::time::{Duration, Instant};
+
+    let dir = cfg.artifacts_dir.clone();
+    let workers = repro::sortcore::workers_per_shard(shards);
+    let svc = SortService::spawn_sharded_with_policy(
+        move |_| Ok(make_backend_with_workers(&dir, workers)),
+        shards,
+        Duration::from_micros(wait_us as u64),
+        order_policy,
+    )?;
+    let mut server = NetServer::spawn(svc, listen, capacity)?;
+    println!(
+        "listening on {} ({} shard(s), admission capacity {}); send a Drain frame \
+         (`repro loadgen --drain`) to stop",
+        server.local_addr(),
+        shards,
+        capacity,
+    );
+    let deadline = serve_for_s.map(|s| Instant::now() + Duration::from_secs(s as u64));
+    while !server.draining() {
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            eprintln!("(--serve-for-s elapsed; draining)");
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    server.shutdown();
+    let m = &server.service().metrics;
+    println!(
+        "drained: {} accepted, {} shed (overloaded {}, draining {}), {} fulfilled after drain",
+        m.accepted.load(Ordering::Relaxed),
+        m.shed_overloaded.load(Ordering::Relaxed) + m.shed_draining.load(Ordering::Relaxed),
+        m.shed_overloaded.load(Ordering::Relaxed),
+        m.shed_draining.load(Ordering::Relaxed),
+        m.drained.load(Ordering::Relaxed),
+    );
+    if let Some(path) = stats {
+        let text = server.service().render_stats();
+        if path == "-" {
+            print!("{text}");
+        } else {
+            std::fs::write(path, &text)?;
+            eprintln!("(stats snapshot written to {path})");
+        }
+    }
+    Ok(())
+}
+
+/// The `loadgen` command: soak a running `serve --listen` server and
+/// report throughput + tail latency (recorded into BENCHUTIL_JSON when
+/// set). [`repro::net::loadgen::run`] fails on any lost reply, so a
+/// summary printing here means every request resolved exactly once.
+fn loadgen_cmd(lg: &repro::net::LoadgenConfig) -> Result<()> {
+    use repro::benchutil;
+
+    let report = repro::net::run_loadgen(lg)?;
+    let shed = report.shed_overloaded + report.shed_draining;
+    let p50 = report.latency.quantile(0.50);
+    let p99 = report.latency.quantile(0.99);
+    let p999 = report.latency.quantile(0.999);
+    println!(
+        "loadgen: {} requests over {} connection(s) (window {}) in {:.1} ms \
+         ({:.0} req/s)",
+        report.sent,
+        lg.connections,
+        lg.window,
+        report.elapsed.as_secs_f64() * 1e3,
+        report.throughput_per_s(),
+    );
+    println!(
+        "  outcomes: {} replies, {} shed (overloaded {}, draining {}), {} failed \
+         — every request resolved exactly once",
+        report.ok,
+        shed,
+        report.shed_overloaded,
+        report.shed_draining,
+        report.failed,
+    );
+    println!("  latency p50 {p50:.1?} p99 {p99:.1?} p999 {p999:.1?} (histogram upper edges)");
+    if lg.drain {
+        eprintln!("(drain frame sent; the server is shutting down)");
+    }
+    if let Some(path) = benchutil::json_path_from_env() {
+        let scalars = vec![
+            ("loadgen_requests", report.sent as f64),
+            ("loadgen_connections", lg.connections as f64),
+            ("loadgen_window", lg.window as f64),
+            ("loadgen_ok", report.ok as f64),
+            ("loadgen_shed", shed as f64),
+            ("loadgen_failed", report.failed as f64),
+            ("loadgen_throughput_per_s", report.throughput_per_s()),
+            ("loadgen_p50_us", p50.as_secs_f64() * 1e6),
+            ("loadgen_p99_us", p99.as_secs_f64() * 1e6),
+            ("loadgen_p999_us", p999.as_secs_f64() * 1e6),
+        ];
+        benchutil::write_json(&path, &[], &scalars)?;
+        eprintln!("(benchutil JSON written to {path})");
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -687,6 +871,63 @@ mod tests {
         assert!(args(&["table1", "--trace", "t.json"]).validate().is_err());
         assert!(args(&["policy", "--trace", "t.json"]).validate().is_err());
         assert!(args(&["report", "--trace", "t.json"]).validate().is_err());
+    }
+
+    #[test]
+    fn serve_listen_flags_validate_and_stay_serve_only() {
+        let a = args(&[
+            "serve",
+            "--listen",
+            "127.0.0.1:7411",
+            "--admission-capacity",
+            "64",
+            "--serve-for-s=120",
+            "--shards",
+            "4",
+        ]);
+        a.validate().unwrap();
+        assert_eq!(a.get("listen"), Some("127.0.0.1:7411"));
+        assert_eq!(a.get_usize("admission-capacity").unwrap(), Some(64));
+        assert_eq!(a.get_usize("serve-for-s").unwrap(), Some(120));
+        // the front-door flags are meaningless off the serve command
+        assert!(args(&["table1", "--listen", "x:1"]).validate().is_err());
+        assert!(args(&["loadgen", "--listen", "x:1"]).validate().is_err());
+        assert!(args(&["report", "--admission-capacity", "8"]).validate().is_err());
+        // and show up in the help machinery
+        let text = command_help("serve").unwrap();
+        assert!(text.contains("--listen") && text.contains("--admission-capacity"), "{text}");
+    }
+
+    #[test]
+    fn loadgen_flags_validate_and_drain_is_bare() {
+        let a = args(&[
+            "loadgen",
+            "--addr",
+            "127.0.0.1:7411",
+            "--connections",
+            "8",
+            "--requests=100000",
+            "--window",
+            "64",
+            "--drain",
+        ]);
+        a.validate().unwrap();
+        assert_eq!(a.get("addr"), Some("127.0.0.1:7411"));
+        assert_eq!(a.get_usize("connections").unwrap(), Some(8));
+        assert_eq!(a.get_usize("requests").unwrap(), Some(100_000));
+        assert_eq!(a.get_usize("window").unwrap(), Some(64));
+        // --drain takes no value: the next token parses as a flag
+        assert_eq!(a.get("drain"), Some("true"));
+        let a = args(&["loadgen", "--drain", "--addr", "h:1"]);
+        a.validate().unwrap();
+        assert_eq!(a.get("addr"), Some("h:1"));
+        // loadgen flags stay loadgen-scoped (except the shared --requests)
+        assert!(args(&["serve", "--addr", "h:1"]).validate().is_err());
+        assert!(args(&["serve", "--window", "4"]).validate().is_err());
+        assert!(args(&["table1", "--drain"]).validate().is_err());
+        args(&["serve", "--requests", "5"]).validate().unwrap();
+        let text = command_help("loadgen").unwrap();
+        assert!(text.contains("--window") && text.contains("--drain"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Length-prefixed binary frame codec for the front-door wire protocol.
+//!
+//! Every frame is a fixed 17-byte little-endian header followed by a
+//! kind-specific payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"PSU1"
+//! 4       1     kind   1=Request 2=Reply 3=Error 4=Drain
+//! 5       8     req_id u64 LE (caller-chosen correlation id)
+//! 13      4     len    u32 LE payload length (bounded by MAX_PAYLOAD)
+//! 17      len   payload
+//! ```
+//!
+//! [`decode`] is incremental and total: it either yields a complete frame
+//! plus the exact byte count it consumed, asks for more bytes
+//! (`Ok(None)` — every strict prefix of a valid frame), or returns a
+//! typed [`DecodeError`]. It never panics on any input and never reads
+//! past the bytes required by the declared length — the two properties
+//! `rust/tests/net_protocol.rs` fuzzes.
+
+use crate::linkpower::StrategyKind;
+use crate::runtime::PACKET_ELEMS;
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"PSU1";
+/// Fixed header size: magic + kind + req_id + payload length.
+pub const HEADER_LEN: usize = 17;
+/// Hard bound on the declared payload length. The largest legitimate
+/// payload is a full reply (`3 + 4 * PACKET_ELEMS` bytes), so 4 KiB
+/// leaves headroom while keeping a corrupt length field from ever
+/// provoking a large allocation.
+pub const MAX_PAYLOAD: usize = 4096;
+
+/// Wire kind byte for a request frame.
+const KIND_REQUEST: u8 = 1;
+/// Wire kind byte for a reply frame.
+const KIND_REPLY: u8 = 2;
+/// Wire kind byte for a typed error frame.
+const KIND_ERROR: u8 = 3;
+/// Wire kind byte for a drain-control frame.
+const KIND_DRAIN: u8 = 4;
+
+/// Strategy byte meaning "the response carried no strategy stamp".
+const STRATEGY_NONE: u8 = 0xFF;
+
+/// Typed reason carried by an error frame — the wire image of
+/// [`crate::coordinator::AdmitError`] plus the two server-side failure
+/// modes (malformed frame, backend error).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Shed: the bounded admission queue was full.
+    Overloaded,
+    /// Shed: the server is draining; no new work is admitted.
+    Draining,
+    /// The request frame failed payload validation.
+    Malformed,
+    /// The backend failed; the request was admitted but not answered.
+    Internal,
+}
+
+impl ErrorCode {
+    /// Wire byte for this code.
+    pub fn code(self) -> u8 {
+        match self {
+            ErrorCode::Overloaded => 1,
+            ErrorCode::Draining => 2,
+            ErrorCode::Malformed => 3,
+            ErrorCode::Internal => 4,
+        }
+    }
+
+    /// Inverse of [`ErrorCode::code`]; `None` for unknown bytes.
+    pub fn from_code(b: u8) -> Option<ErrorCode> {
+        match b {
+            1 => Some(ErrorCode::Overloaded),
+            2 => Some(ErrorCode::Draining),
+            3 => Some(ErrorCode::Malformed),
+            4 => Some(ErrorCode::Internal),
+            _ => None,
+        }
+    }
+
+    /// Stable label (logs, loadgen summaries).
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Draining => "draining",
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One decoded wire frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Frame {
+    /// Client → server: sort one packet of [`PACKET_ELEMS`] bytes.
+    Request {
+        /// Caller-chosen correlation id, echoed on the outcome frame.
+        id: u64,
+        /// The packet to sort.
+        packet: [u8; PACKET_ELEMS],
+    },
+    /// Server → client: the sorted index vectors for request `id`.
+    Reply {
+        /// The request this reply answers.
+        id: u64,
+        /// Ordering strategy the policy engine stamped, if any.
+        strategy: Option<StrategyKind>,
+        /// ACC (exact popcount) transmission order.
+        acc_indices: Vec<u16>,
+        /// APP (bucketed popcount) transmission order.
+        app_indices: Vec<u16>,
+    },
+    /// Server → client: request `id` resolved to a typed error.
+    Error {
+        /// The request this error answers (0 for connection-level errors).
+        id: u64,
+        /// Why the request was not answered with a reply.
+        code: ErrorCode,
+    },
+    /// Client → server: begin graceful drain. The server answers nothing;
+    /// it stops admitting, finishes in-flight work, and closes sockets.
+    Drain {
+        /// Correlation id (unused by the server; echoed nowhere).
+        id: u64,
+    },
+}
+
+impl Frame {
+    /// The correlation id carried by any frame kind.
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::Request { id, .. }
+            | Frame::Reply { id, .. }
+            | Frame::Error { id, .. }
+            | Frame::Drain { id } => *id,
+        }
+    }
+}
+
+/// Why a byte sequence cannot be (the start of) a valid frame. Returned
+/// as soon as the offending bytes arrive — a corrupt stream fails fast
+/// instead of waiting for a length that may never come.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The first bytes do not match [`MAGIC`].
+    BadMagic {
+        /// The bytes actually seen (length-MAGIC prefix of the buffer).
+        seen: [u8; 4],
+    },
+    /// The kind byte names no known frame kind.
+    UnknownKind {
+        /// The kind byte actually seen.
+        kind: u8,
+    },
+    /// The declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized {
+        /// The declared payload length.
+        len: u32,
+    },
+    /// The payload disagrees with its frame kind (wrong size, unknown
+    /// strategy or error byte, reply vectors inconsistent with count).
+    BadPayload {
+        /// The offending frame kind byte.
+        kind: u8,
+        /// What the validator objected to.
+        why: &'static str,
+    },
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::BadMagic { seen } => write!(f, "bad magic {seen:02x?}"),
+            DecodeError::UnknownKind { kind } => write!(f, "unknown frame kind {kind}"),
+            DecodeError::Oversized { len } => {
+                write!(f, "declared payload {len} exceeds max {MAX_PAYLOAD}")
+            }
+            DecodeError::BadPayload { kind, why } => {
+                write!(f, "bad payload for kind {kind}: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Append one frame's wire encoding to `out`. The encoding is the exact
+/// inverse of [`decode`] (pinned by the roundtrip property test).
+pub fn encode(frame: &Frame, out: &mut Vec<u8>) {
+    let (kind, id) = match frame {
+        Frame::Request { id, .. } => (KIND_REQUEST, *id),
+        Frame::Reply { id, .. } => (KIND_REPLY, *id),
+        Frame::Error { id, .. } => (KIND_ERROR, *id),
+        Frame::Drain { id } => (KIND_DRAIN, *id),
+    };
+    out.extend_from_slice(&MAGIC);
+    out.push(kind);
+    out.extend_from_slice(&id.to_le_bytes());
+    let len_at = out.len();
+    out.extend_from_slice(&[0u8; 4]); // payload length backpatched below
+    match frame {
+        Frame::Request { packet, .. } => out.extend_from_slice(packet),
+        Frame::Reply { strategy, acc_indices, app_indices, .. } => {
+            debug_assert_eq!(acc_indices.len(), app_indices.len());
+            out.push(strategy.map_or(STRATEGY_NONE, |s| s.index() as u8));
+            out.extend_from_slice(&(acc_indices.len() as u16).to_le_bytes());
+            for v in acc_indices {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for v in app_indices {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Frame::Error { code, .. } => out.push(code.code()),
+        Frame::Drain { .. } => {}
+    }
+    let plen = (out.len() - len_at - 4) as u32;
+    out[len_at..len_at + 4].copy_from_slice(&plen.to_le_bytes());
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// - `Ok(Some((frame, consumed)))`: `buf[..consumed]` was a complete,
+///   valid frame. The caller drains `consumed` bytes and calls again.
+/// - `Ok(None)`: `buf` is a strict prefix of a possibly-valid frame —
+///   read more bytes. Validation is incremental, so a stream that is
+///   already provably corrupt errors without waiting for its length.
+/// - `Err(_)`: the stream is corrupt at the current frame boundary; the
+///   connection should answer `Malformed` (if addressable) and close.
+pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, DecodeError> {
+    // magic: reject as soon as any present byte disagrees
+    let check = buf.len().min(MAGIC.len());
+    if buf[..check] != MAGIC[..check] {
+        let mut seen = [0u8; 4];
+        seen[..check].copy_from_slice(&buf[..check]);
+        return Err(DecodeError::BadMagic { seen });
+    }
+    if buf.len() > MAGIC.len() {
+        let kind = buf[MAGIC.len()];
+        if !(KIND_REQUEST..=KIND_DRAIN).contains(&kind) {
+            return Err(DecodeError::UnknownKind { kind });
+        }
+    }
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let kind = buf[4];
+    let id = u64::from_le_bytes(buf[5..13].try_into().expect("8-byte slice"));
+    let plen = u32::from_le_bytes(buf[13..17].try_into().expect("4-byte slice"));
+    if plen as usize > MAX_PAYLOAD {
+        return Err(DecodeError::Oversized { len: plen });
+    }
+    let total = HEADER_LEN + plen as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let payload = &buf[HEADER_LEN..total];
+    let frame = match kind {
+        KIND_REQUEST => {
+            if payload.len() != PACKET_ELEMS {
+                return Err(DecodeError::BadPayload {
+                    kind,
+                    why: "request payload must be exactly PACKET_ELEMS bytes",
+                });
+            }
+            let mut packet = [0u8; PACKET_ELEMS];
+            packet.copy_from_slice(payload);
+            Frame::Request { id, packet }
+        }
+        KIND_REPLY => {
+            if payload.len() < 3 {
+                return Err(DecodeError::BadPayload {
+                    kind,
+                    why: "reply payload shorter than strategy + count",
+                });
+            }
+            let strategy = match payload[0] {
+                STRATEGY_NONE => None,
+                b @ 0..=2 => Some(StrategyKind::from_index(b as usize)),
+                _ => {
+                    return Err(DecodeError::BadPayload { kind, why: "unknown strategy byte" });
+                }
+            };
+            let count = u16::from_le_bytes(payload[1..3].try_into().expect("2-byte slice")) as usize;
+            if payload.len() != 3 + 4 * count {
+                return Err(DecodeError::BadPayload {
+                    kind,
+                    why: "reply payload length disagrees with index count",
+                });
+            }
+            let words = |at: usize| {
+                payload[at..at + 2 * count]
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().expect("2-byte chunk")))
+                    .collect::<Vec<u16>>()
+            };
+            Frame::Reply { id, strategy, acc_indices: words(3), app_indices: words(3 + 2 * count) }
+        }
+        KIND_ERROR => {
+            if payload.len() != 1 {
+                return Err(DecodeError::BadPayload {
+                    kind,
+                    why: "error payload must be one code byte",
+                });
+            }
+            let code = ErrorCode::from_code(payload[0])
+                .ok_or(DecodeError::BadPayload { kind, why: "unknown error code byte" })?;
+            Frame::Error { id, code }
+        }
+        KIND_DRAIN => {
+            if !payload.is_empty() {
+                return Err(DecodeError::BadPayload { kind, why: "drain carries no payload" });
+            }
+            Frame::Drain { id }
+        }
+        // the kind byte was range-checked the moment it arrived
+        _ => unreachable!("kind validated above"),
+    };
+    Ok(Some((frame, total)))
+}

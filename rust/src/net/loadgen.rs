@@ -1,0 +1,274 @@
+//! Load generator for the TCP front door: windowed pipelining over N
+//! connections, per-request latency capture, and an exactly-one-outcome
+//! audit.
+//!
+//! Each connection thread keeps up to `window` requests on the wire and
+//! matches outcome frames to requests with a FIFO — valid because the
+//! server writes outcomes in arrival order per connection. Every sent
+//! request must resolve to a reply or a typed error frame; a missing or
+//! misordered outcome fails the run, which is what makes the CI soak's
+//! "zero lost replies" criterion self-enforcing.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::LatencyHistogram;
+use crate::net::codec::{decode, encode, ErrorCode, Frame};
+use crate::runtime::PACKET_ELEMS;
+use crate::workload::Rng;
+
+/// How long a loadgen connection waits for an outcome before declaring
+/// the reply lost. Generous: the server's dynamic batcher waits at most
+/// milliseconds, so seconds of silence means a dropped request.
+const OUTCOME_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One loadgen run's shape.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:7411`.
+    pub addr: String,
+    /// Concurrent connections (each gets its own thread).
+    pub connections: usize,
+    /// Total requests across all connections.
+    pub requests: u64,
+    /// Max in-flight requests per connection (pipelining window).
+    pub window: usize,
+    /// Send a `Drain` frame on a control connection after the run.
+    pub drain: bool,
+    /// Seed for the per-connection packet generators.
+    pub seed: u64,
+}
+
+/// Aggregated outcome of a loadgen run. `ok + shed == sent` always holds
+/// — [`run`] fails instead of returning a report that lost replies.
+#[derive(Debug)]
+pub struct LoadgenReport {
+    /// Requests sent (and resolved — see the struct invariant).
+    pub sent: u64,
+    /// Requests answered with a reply frame.
+    pub ok: u64,
+    /// Requests answered with a typed error frame, by wire code.
+    pub shed_overloaded: u64,
+    /// Requests answered with a `Draining` error frame.
+    pub shed_draining: u64,
+    /// Requests answered with a `Malformed` or `Internal` error frame.
+    pub failed: u64,
+    /// Wall-clock of the request phase (excludes the drain frame).
+    pub elapsed: Duration,
+    /// End-to-end request→outcome latency across every connection.
+    pub latency: Arc<LatencyHistogram>,
+}
+
+impl LoadgenReport {
+    /// Resolved outcomes per second over the run.
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            0.0
+        } else {
+            self.sent as f64 / self.elapsed.as_secs_f64()
+        }
+    }
+}
+
+/// Drive `cfg.requests` requests at the server and audit the outcomes.
+///
+/// Fails if any connection cannot connect, observes a misordered or
+/// corrupt outcome stream, or waits [`OUTCOME_TIMEOUT`] without the next
+/// outcome arriving (a lost reply).
+pub fn run(cfg: &LoadgenConfig) -> anyhow::Result<LoadgenReport> {
+    anyhow::ensure!(cfg.connections >= 1, "need at least one connection");
+    anyhow::ensure!(cfg.window >= 1, "window must be at least 1");
+    anyhow::ensure!(cfg.requests >= 1, "need at least one request");
+    let latency = Arc::new(LatencyHistogram::default());
+    let ok = AtomicU64::new(0);
+    let shed_overloaded = AtomicU64::new(0);
+    let shed_draining = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    let started = Instant::now();
+    let per_conn = cfg.requests / cfg.connections as u64;
+    let remainder = cfg.requests % cfg.connections as u64;
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let mut workers = Vec::with_capacity(cfg.connections);
+        for conn in 0..cfg.connections {
+            // spread the remainder over the first connections so the
+            // quotas sum to exactly cfg.requests
+            let quota = per_conn + u64::from((conn as u64) < remainder);
+            let latency = latency.clone();
+            let (ok, over, drain, fail) = (&ok, &shed_overloaded, &shed_draining, &failed);
+            let cfg = cfg.clone();
+            workers.push(s.spawn(move || -> anyhow::Result<()> {
+                if quota == 0 {
+                    return Ok(());
+                }
+                let counts = connection_run(&cfg, conn, quota, &latency)?;
+                ok.fetch_add(counts.ok, Ordering::Relaxed);
+                over.fetch_add(counts.shed_overloaded, Ordering::Relaxed);
+                drain.fetch_add(counts.shed_draining, Ordering::Relaxed);
+                fail.fetch_add(counts.failed, Ordering::Relaxed);
+                Ok(())
+            }));
+        }
+        let mut first_err = None;
+        for w in workers {
+            match w.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err =
+                        first_err.or_else(|| Some(anyhow::anyhow!("loadgen worker panicked")))
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    })?;
+    let elapsed = started.elapsed();
+    if cfg.drain {
+        send_drain(&cfg.addr)?;
+    }
+    let report = LoadgenReport {
+        sent: cfg.requests,
+        ok: ok.into_inner(),
+        shed_overloaded: shed_overloaded.into_inner(),
+        shed_draining: shed_draining.into_inner(),
+        failed: failed.into_inner(),
+        elapsed,
+        latency,
+    };
+    // the exactly-one-outcome audit: every request resolved exactly once
+    let resolved = report.ok + report.shed_overloaded + report.shed_draining + report.failed;
+    anyhow::ensure!(
+        resolved == report.sent,
+        "lost replies: sent {} but resolved {}",
+        report.sent,
+        resolved,
+    );
+    Ok(report)
+}
+
+/// Per-connection outcome tallies.
+#[derive(Debug, Default)]
+struct ConnCounts {
+    ok: u64,
+    shed_overloaded: u64,
+    shed_draining: u64,
+    failed: u64,
+}
+
+/// One connection's windowed request/outcome loop.
+fn connection_run(
+    cfg: &LoadgenConfig,
+    conn: usize,
+    quota: u64,
+    latency: &LatencyHistogram,
+) -> anyhow::Result<ConnCounts> {
+    let mut stream = TcpStream::connect(&cfg.addr)
+        .map_err(|e| anyhow::anyhow!("connect {}: {e}", cfg.addr))?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_millis(25)))?;
+    let mut rng = Rng::new(cfg.seed ^ (conn as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut counts = ConnCounts::default();
+    let mut inflight: VecDeque<(u64, Instant)> = VecDeque::with_capacity(cfg.window);
+    let mut wire: Vec<u8> = Vec::new();
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut sent = 0u64;
+    let mut resolved = 0u64;
+    let mut last_progress = Instant::now();
+    while resolved < quota {
+        // fill the window
+        wire.clear();
+        while sent < quota && inflight.len() < cfg.window {
+            let mut packet = [0u8; PACKET_ELEMS];
+            for b in packet.iter_mut() {
+                *b = rng.next_u8();
+            }
+            // ids are per-connection sequence numbers; outcomes must echo
+            // them back in this exact order
+            let id = sent;
+            encode(&Frame::Request { id, packet }, &mut wire);
+            inflight.push_back((id, Instant::now()));
+            sent += 1;
+        }
+        if !wire.is_empty() {
+            stream.write_all(&wire)?;
+        }
+        // drain outcomes
+        match stream.read(&mut chunk) {
+            Ok(0) => anyhow::bail!(
+                "server closed connection {conn} with {} outcomes outstanding",
+                inflight.len()
+            ),
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                last_progress = Instant::now();
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                if last_progress.elapsed() > OUTCOME_TIMEOUT {
+                    anyhow::bail!(
+                        "lost reply: connection {conn} waited {OUTCOME_TIMEOUT:?} with {} \
+                         outcomes outstanding",
+                        inflight.len()
+                    );
+                }
+                continue;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+        let mut consumed = 0usize;
+        loop {
+            match decode(&buf[consumed..]) {
+                Ok(Some((frame, used))) => {
+                    consumed += used;
+                    let (id, sent_at) = inflight
+                        .pop_front()
+                        .ok_or_else(|| anyhow::anyhow!("outcome with nothing in flight"))?;
+                    anyhow::ensure!(
+                        frame.id() == id,
+                        "misordered outcome on connection {conn}: expected id {id}, got {}",
+                        frame.id(),
+                    );
+                    latency.record(sent_at.elapsed());
+                    match frame {
+                        Frame::Reply { .. } => counts.ok += 1,
+                        Frame::Error { code: ErrorCode::Overloaded, .. } => {
+                            counts.shed_overloaded += 1
+                        }
+                        Frame::Error { code: ErrorCode::Draining, .. } => {
+                            counts.shed_draining += 1
+                        }
+                        Frame::Error { .. } => counts.failed += 1,
+                        Frame::Request { .. } | Frame::Drain { .. } => {
+                            anyhow::bail!("server sent a client-side frame")
+                        }
+                    }
+                    resolved += 1;
+                }
+                Ok(None) => break,
+                Err(e) => anyhow::bail!("corrupt outcome stream on connection {conn}: {e}"),
+            }
+        }
+        buf.drain(..consumed);
+    }
+    Ok(counts)
+}
+
+/// Open a control connection and send one `Drain` frame.
+fn send_drain(addr: &str) -> anyhow::Result<()> {
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let mut wire = Vec::new();
+    encode(&Frame::Drain { id: 0 }, &mut wire);
+    stream.write_all(&wire)?;
+    stream.flush()?;
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! The network front door: wire codec, TCP server, and load generator.
+//!
+//! This is how the sharded serving engine ([`crate::coordinator`])
+//! becomes a process you can hit over a socket:
+//!
+//! * [`codec`] — the length-prefixed binary frame protocol ([`Frame`],
+//!   [`encode`], [`decode`]) with typed decode errors; total on arbitrary
+//!   input (fuzzed by `rust/tests/net_protocol.rs`).
+//! * [`server`] — [`NetServer`]: nonblocking accept loop, one thread per
+//!   connection, bounded admission through
+//!   [`crate::coordinator::Admission`] (full queue → typed `Overloaded`
+//!   error frame, never unbounded growth), and graceful drain (in-flight
+//!   requests complete, new connections refused, sockets closed, threads
+//!   joined).
+//! * [`loadgen`] — the `repro loadgen` client: windowed pipelining over N
+//!   connections with an exactly-one-outcome audit and a shared latency
+//!   histogram (throughput + p50/p99/p999 for benchutil JSON).
+//!
+//! `repro serve --listen ADDR` starts the server; `repro loadgen --addr
+//! ADDR` soaks it (the CI serve-smoke job does both).
+
+pub mod codec;
+pub mod loadgen;
+pub mod server;
+
+pub use codec::{decode, encode, DecodeError, ErrorCode, Frame, HEADER_LEN, MAGIC, MAX_PAYLOAD};
+pub use loadgen::{run as run_loadgen, LoadgenConfig, LoadgenReport};
+pub use server::NetServer;

@@ -1,0 +1,326 @@
+//! TCP front door: accept loop, per-connection framing, bounded
+//! admission, and graceful drain.
+//!
+//! One [`NetServer`] owns a listening socket plus one thread per accepted
+//! connection. Each connection thread reads request frames, passes every
+//! request through the shared [`Admission`] gate — shed requests get a
+//! typed error frame *immediately*, admitted ones are batched through a
+//! per-connection [`SortClient`] — and writes exactly one outcome frame
+//! per request, in arrival order. The arrival-order guarantee is what
+//! lets a pipelining client ([`crate::net::loadgen`]) match outcomes to
+//! requests with a FIFO instead of a map.
+//!
+//! ## Shed / drain state machine
+//!
+//! ```text
+//!            try_admit ok                    outcome written
+//!  SERVING ───────────────▶ permit held ──────────────────▶ released
+//!     │  └─ queue full → Error{Overloaded} frame (shed, no permit)
+//!     │
+//!     │ Drain frame / begin_drain()
+//!     ▼
+//!  DRAINING: accept loop stops (listener closed; new connections
+//!     │      refused), admits fail → Error{Draining} frames, permits
+//!     │      already out run to completion (counted as drained)
+//!     │ shutdown()
+//!     ▼
+//!  CLOSED: connection threads told to finish, every socket closed,
+//!          every thread joined
+//! ```
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{Admission, Metrics, SortClient, SortResponse, SortService};
+use crate::net::codec::{decode, encode, ErrorCode, Frame};
+use crate::runtime::PACKET_ELEMS;
+
+/// How long a blocked connection read waits before re-checking the
+/// close flag — the latency bound on noticing `shutdown()`.
+const READ_TICK: Duration = Duration::from_millis(25);
+/// How long the accept loop sleeps when no connection is pending.
+const ACCEPT_TICK: Duration = Duration::from_millis(5);
+
+/// A running TCP front door over a [`SortService`].
+///
+/// Dropping the server shuts it down ([`NetServer::shutdown`] is
+/// idempotent): drain begins, the listener closes, connection threads
+/// finish their in-flight work, sockets close, and every thread joins.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    svc: SortService,
+    admission: Arc<Admission>,
+    closing: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7411`; port `0` picks an ephemeral
+    /// port — tests read it back via [`NetServer::local_addr`]) and start
+    /// accepting connections over `svc`, admitting at most
+    /// `admission_capacity` in-flight requests.
+    pub fn spawn(
+        svc: SortService,
+        addr: impl ToSocketAddrs,
+        admission_capacity: usize,
+    ) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let admission = Arc::new(Admission::new(admission_capacity));
+        let closing = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let svc = svc.clone();
+            let admission = admission.clone();
+            let closing = closing.clone();
+            let conns = conns.clone();
+            std::thread::spawn(move || {
+                accept_loop(listener, svc, admission, closing, conns);
+            })
+        };
+        Ok(Self { local_addr, svc, admission, closing, accept: Some(accept), conns })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The engine behind the front door (metrics live here).
+    pub fn service(&self) -> &SortService {
+        &self.svc
+    }
+
+    /// The front-door admission gate.
+    pub fn admission(&self) -> &Admission {
+        &self.admission
+    }
+
+    /// Begin graceful drain (also reachable over the wire via a `Drain`
+    /// frame): stop accepting connections and admitting requests; work
+    /// already admitted runs to completion.
+    pub fn begin_drain(&self) {
+        self.admission.begin_drain();
+    }
+
+    /// Whether drain has begun.
+    pub fn draining(&self) -> bool {
+        self.admission.is_draining()
+    }
+
+    /// Drain, close, and join everything. Idempotent; also runs on drop.
+    /// Returns once the accept thread and every connection thread have
+    /// joined — afterwards no socket of this server is open.
+    pub fn shutdown(&mut self) {
+        self.admission.begin_drain();
+        self.closing.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // the accept thread is gone, so nobody pushes new handles; drain
+        // the vec in a loop anyway in case a handle lands between lock
+        // drops on some future refactor
+        loop {
+            let drained: Vec<JoinHandle<()>> = {
+                let mut guard = self.conns.lock().expect("conns mutex poisoned");
+                std::mem::take(&mut *guard)
+            };
+            if drained.is_empty() {
+                break;
+            }
+            for h in drained {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Accept until drain begins, spawning one handler thread per connection.
+fn accept_loop(
+    listener: TcpListener,
+    svc: SortService,
+    admission: Arc<Admission>,
+    closing: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    while !admission.is_draining() && !closing.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let client = svc.client();
+                let metrics = svc.metrics.clone();
+                let admission = admission.clone();
+                let closing = closing.clone();
+                let handle = std::thread::spawn(move || {
+                    connection_loop(stream, client, metrics, admission, closing);
+                });
+                conns.lock().expect("conns mutex poisoned").push(handle);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_TICK);
+            }
+            Err(_) => {
+                // transient accept failure (EMFILE, ECONNABORTED…): back
+                // off instead of spinning or dying
+                std::thread::sleep(ACCEPT_TICK);
+            }
+        }
+    }
+    // dropping the listener here closes the socket: post-drain
+    // connection attempts are refused by the OS
+}
+
+/// How one parsed request resolved at the admission gate, in arrival
+/// order. The index ties an admitted request back to its slot in the
+/// dispatched batch.
+enum Parsed {
+    /// Admitted: the `usize` is its index into the batch being built.
+    Admitted { id: u64, index: usize },
+    /// Shed at the gate with a typed reason.
+    Shed { id: u64, code: ErrorCode },
+}
+
+/// Serve one connection: read frames, gate + batch + dispatch requests,
+/// write exactly one outcome frame per request in arrival order.
+fn connection_loop(
+    mut stream: TcpStream,
+    mut client: SortClient,
+    metrics: Arc<Metrics>,
+    admission: Arc<Admission>,
+    closing: Arc<AtomicBool>,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut batch: Vec<[u8; PACKET_ELEMS]> = Vec::new();
+    let mut parsed: Vec<Parsed> = Vec::new();
+    let mut responses: Vec<SortResponse> = Vec::new();
+    let mut wire: Vec<u8> = Vec::new();
+    'serve: loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break, // peer closed: in-flight work is already answered
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                if closing.load(Ordering::Acquire) {
+                    break;
+                }
+                continue;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+        // parse every complete frame, gating requests as they arrive
+        batch.clear();
+        parsed.clear();
+        let mut consumed = 0usize;
+        let mut malformed = false;
+        loop {
+            match decode(&buf[consumed..]) {
+                Ok(Some((frame, used))) => {
+                    consumed += used;
+                    match frame {
+                        Frame::Request { id, packet } => match admission.try_admit() {
+                            Ok(()) => {
+                                metrics.record_accepted();
+                                parsed.push(Parsed::Admitted { id, index: batch.len() });
+                                batch.push(packet);
+                            }
+                            Err(why) => {
+                                metrics.record_shed(&why);
+                                let code = match why {
+                                    crate::coordinator::AdmitError::Overloaded { .. } => {
+                                        ErrorCode::Overloaded
+                                    }
+                                    crate::coordinator::AdmitError::Draining => {
+                                        ErrorCode::Draining
+                                    }
+                                };
+                                parsed.push(Parsed::Shed { id, code });
+                            }
+                        },
+                        Frame::Drain { .. } => admission.begin_drain(),
+                        // clients must not send server-side frames; treat
+                        // them as protocol corruption and close below
+                        Frame::Reply { .. } | Frame::Error { .. } => {
+                            malformed = true;
+                            break;
+                        }
+                    }
+                }
+                Ok(None) => break, // partial frame: wait for more bytes
+                Err(_) => {
+                    malformed = true;
+                    break;
+                }
+            }
+        }
+        buf.drain(..consumed);
+        // dispatch the admitted requests as one batch and resolve every
+        // parsed request to exactly one outcome frame, in arrival order
+        let dispatch_ok = if batch.is_empty() {
+            true
+        } else {
+            client.submit_batch(&batch, &mut responses).is_ok()
+                && responses.len() == batch.len()
+        };
+        let draining_now = admission.is_draining();
+        wire.clear();
+        for p in parsed.drain(..) {
+            match p {
+                Parsed::Admitted { id, index } => {
+                    if dispatch_ok {
+                        let r = &responses[index];
+                        encode(
+                            &Frame::Reply {
+                                id,
+                                strategy: r.strategy,
+                                acc_indices: r.acc_indices.clone(),
+                                app_indices: r.app_indices.clone(),
+                            },
+                            &mut wire,
+                        );
+                    } else {
+                        // a backend failure loses the per-request reply
+                        // mapping, so every request of the batch resolves
+                        // to a typed internal error — never zero or two
+                        // outcomes for one request
+                        encode(&Frame::Error { id, code: ErrorCode::Internal }, &mut wire);
+                    }
+                    if draining_now {
+                        metrics.record_drained();
+                    }
+                    admission.release();
+                }
+                Parsed::Shed { id, code } => {
+                    encode(&Frame::Error { id, code }, &mut wire);
+                }
+            }
+        }
+        responses.clear();
+        if malformed {
+            // answer what we can, flag the corruption, and hang up
+            encode(&Frame::Error { id: 0, code: ErrorCode::Malformed }, &mut wire);
+        }
+        if !wire.is_empty() && stream.write_all(&wire).is_err() {
+            break 'serve;
+        }
+        if malformed {
+            break;
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}

@@ -76,7 +76,10 @@ fn hotpath_baseline_gates_the_serving_core_scalars() {
     let trace = scalar(&doc, "serve_trace_overhead_ratio").expect("scalar missing");
     assert!(trace < 1.5, "trace overhead exceeds the acceptance ceiling: {trace}");
     assert!(trace >= 1.0, "an overhead ratio below 1.0 means tracing is free: {trace}");
-    // and all three names must actually be gate-protected (direction
+    // PR 9: the front-door wire codec has a recorded throughput floor
+    let codec = scalar(&doc, "net_codec_frames_per_s").expect("scalar missing");
+    assert!(codec > 0.0, "codec throughput floor must be positive: {codec}");
+    // and all four names must actually be gate-protected (direction
     // inferred from the name), which require_scalars + a self-compare prove
     require_scalars(
         &doc,
@@ -84,13 +87,17 @@ fn hotpath_baseline_gates_the_serving_core_scalars() {
             "serve_shard_scaling_8v4",
             "serve_telemetry_overhead_ratio",
             "serve_trace_overhead_ratio",
+            "net_codec_frames_per_s",
         ],
     )
     .expect("required scalars present");
     let r = compare(&doc, &doc, DEFAULT_TOLERANCE);
-    for name in
-        ["serve_shard_scaling_8v4", "serve_telemetry_overhead_ratio", "serve_trace_overhead_ratio"]
-    {
+    for name in [
+        "serve_shard_scaling_8v4",
+        "serve_telemetry_overhead_ratio",
+        "serve_trace_overhead_ratio",
+        "net_codec_frames_per_s",
+    ] {
         let row = r.rows.iter().find(|row| row.name == name).expect("row");
         assert_eq!(row.verdict, Verdict::Pass, "{name} is not gated");
     }
@@ -108,11 +115,20 @@ fn serve_baseline_parses_and_gates_throughput() {
     assert!(sampled > 0.0, "CI smoke trace sampled nothing");
     assert_eq!(spans, sampled * 6.0, "trace spans must tile each sampled request exactly");
     assert_eq!(scalar(&doc, "serve_trace_dropped"), Some(0.0), "CI smoke trace must not drop");
-    // exactly the *_per_s scalar is gated: the self-comparison must make
-    // at least one gated comparison and pass
+    // PR 9: the front-door soak is part of the baseline — the CI loadgen
+    // run must sustain the recorded request volume and throughput floor
+    let lg_reqs = scalar(&doc, "loadgen_requests").expect("scalar missing");
+    assert!(lg_reqs >= 100_000.0, "loadgen soak volume shrank below 100k: {lg_reqs}");
+    let lg_tput = scalar(&doc, "loadgen_throughput_per_s").expect("scalar missing");
+    assert!(lg_tput > 0.0, "loadgen throughput floor must be positive: {lg_tput}");
+    require_scalars(&doc, &["loadgen_throughput_per_s"]).expect("gated loadgen scalar present");
+    // the *_per_s scalars are gated: the self-comparison must make at
+    // least two gated comparisons (serve + loadgen throughput) and pass
     let r = compare(&doc, &doc, DEFAULT_TOLERANCE);
     assert!(r.passed(), "{}", r.render());
-    assert!(r.compared >= 1);
+    assert!(r.compared >= 2);
+    let row = r.rows.iter().find(|row| row.name == "loadgen_throughput_per_s").expect("row");
+    assert_eq!(row.verdict, Verdict::Pass, "loadgen_throughput_per_s is not gated");
 }
 
 #[test]

@@ -1,0 +1,326 @@
+//! Integration tests for the TCP front door ([`repro::net::server`]):
+//! end-to-end correctness over a real socket, bounded-admission
+//! backpressure (typed `Overloaded` sheds, exact counter accounting, no
+//! deadlock), and graceful drain (in-flight work completes, late
+//! submissions get typed `Draining` errors, threads join, sockets close,
+//! and the trace-ring `recorded == drained + dropped` invariant holds).
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use repro::coordinator::SortService;
+use repro::net::{decode, encode, ErrorCode, Frame, NetServer};
+use repro::obs::TraceConfig;
+use repro::runtime::{Backend, ReferenceBackend, PACKET_ELEMS};
+use repro::workload::Rng;
+use repro::{popcount8, FLIT_LANES, PACKET_FLITS};
+
+/// Outcome-read deadline generous enough for a loaded CI runner while
+/// still failing (not hanging) a deadlocked server.
+const DEADLINE: Duration = Duration::from_secs(20);
+
+/// A backend whose `psu_sort` blocks until the gate opens, then answers
+/// exactly like the reference backend. This pins requests in the
+/// "admitted, in flight" state so the tests can observe backpressure and
+/// drain deterministically.
+struct GatedBackend {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+    inner: ReferenceBackend,
+}
+
+/// Open the gate: every blocked and future `psu_sort` proceeds.
+fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+    let (lock, cvar) = &**gate;
+    *lock.lock().unwrap() = true;
+    cvar.notify_all();
+}
+
+impl Backend for GatedBackend {
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn lenet_head(
+        &self,
+        imgs: &[Vec<f32>],
+        weights: &[f32],
+        bias: &[f32],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.inner.lenet_head(imgs, weights, bias)
+    }
+
+    fn psu_sort(
+        &self,
+        packets: &[[u8; PACKET_ELEMS]],
+    ) -> anyhow::Result<(Vec<Vec<u16>>, Vec<Vec<u16>>)> {
+        let (lock, cvar) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cvar.wait(open).unwrap();
+        }
+        drop(open);
+        self.inner.psu_sort(packets)
+    }
+
+    fn packet_bt(&self, packets: &[[[u8; FLIT_LANES]; PACKET_FLITS]]) -> anyhow::Result<Vec<u32>> {
+        self.inner.packet_bt(packets)
+    }
+}
+
+/// Spawn a single-shard service over a [`GatedBackend`] (gate closed),
+/// traced so the drain test can audit the span rings afterwards.
+fn spawn_gated() -> (SortService, Arc<(Mutex<bool>, Condvar)>) {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let g = gate.clone();
+    let svc = SortService::spawn_sharded_traced(
+        move |_| Ok(GatedBackend { gate: g.clone(), inner: ReferenceBackend::new() }),
+        1,
+        Duration::from_millis(1),
+        None,
+        Some(TraceConfig::default()),
+    )
+    .unwrap();
+    (svc, gate)
+}
+
+/// Connect with a short read timeout (the frame readers poll).
+fn connect(server: &NetServer) -> TcpStream {
+    let stream = TcpStream::connect(server.local_addr()).expect("connect");
+    stream.set_nodelay(true).unwrap();
+    stream.set_read_timeout(Some(Duration::from_millis(25))).unwrap();
+    stream
+}
+
+/// Write one frame.
+fn send(stream: &mut TcpStream, frame: &Frame) {
+    let mut wire = Vec::new();
+    encode(frame, &mut wire);
+    stream.write_all(&wire).expect("send frame");
+}
+
+/// Read the next complete frame, polling up to [`DEADLINE`].
+fn recv(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Frame {
+    let start = Instant::now();
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some((frame, used)) = decode(buf).expect("server speaks the protocol") {
+            buf.drain(..used);
+            return frame;
+        }
+        assert!(start.elapsed() < DEADLINE, "timed out waiting for an outcome frame");
+        match stream.read(&mut chunk) {
+            Ok(0) => panic!("server closed the connection before the outcome"),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+            Err(e) => panic!("read failed: {e}"),
+        }
+    }
+}
+
+/// Poll `cond` until it holds or [`DEADLINE`] elapses.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let start = Instant::now();
+    while !cond() {
+        assert!(start.elapsed() < DEADLINE, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// A random packet.
+fn packet(rng: &mut Rng) -> [u8; PACKET_ELEMS] {
+    let mut p = [0u8; PACKET_ELEMS];
+    for b in p.iter_mut() {
+        *b = rng.next_u8();
+    }
+    p
+}
+
+/// The ACC oracle: a reply's `acc_indices` must be the stable ascending
+/// popcount ordering of the request packet (densest byte last, ties in
+/// arrival order), and both index vectors must be permutations.
+fn assert_reply_matches_oracle(packet: &[u8; PACKET_ELEMS], frame: &Frame) {
+    let Frame::Reply { acc_indices, app_indices, .. } = frame else {
+        panic!("expected a reply, got {frame:?}");
+    };
+    assert_eq!(acc_indices.len(), PACKET_ELEMS);
+    assert_eq!(app_indices.len(), PACKET_ELEMS);
+    for indices in [acc_indices, app_indices] {
+        let mut seen = [false; PACKET_ELEMS];
+        for &i in indices {
+            assert!(!seen[i as usize], "index {i} repeated: not a permutation");
+            seen[i as usize] = true;
+        }
+    }
+    let mut oracle: Vec<u16> = (0..PACKET_ELEMS as u16).collect();
+    oracle.sort_by_key(|&i| popcount8(packet[i as usize])); // stable: ties keep order
+    assert_eq!(acc_indices, &oracle, "ACC order must be the stable popcount sort");
+}
+
+#[test]
+fn end_to_end_replies_match_the_sort_oracle() {
+    let svc = SortService::spawn_reference_sharded(2, Duration::from_millis(1)).unwrap();
+    let mut server = NetServer::spawn(svc, "127.0.0.1:0", 64).unwrap();
+    let mut stream = connect(&server);
+    let mut buf = Vec::new();
+    let mut rng = Rng::new(41);
+    // pipelined: several requests on the wire at once, outcomes echo the
+    // ids back in arrival order
+    let packets: Vec<[u8; PACKET_ELEMS]> = (0..16).map(|_| packet(&mut rng)).collect();
+    for (id, p) in packets.iter().enumerate() {
+        send(&mut stream, &Frame::Request { id: id as u64, packet: *p });
+    }
+    for (id, p) in packets.iter().enumerate() {
+        let frame = recv(&mut stream, &mut buf);
+        assert_eq!(frame.id(), id as u64, "outcomes must arrive in request order");
+        assert_reply_matches_oracle(p, &frame);
+    }
+    let m = server.service().metrics.clone();
+    assert_eq!(m.accepted.load(Ordering::Relaxed), 16);
+    assert_eq!(m.shed_overloaded.load(Ordering::Relaxed), 0);
+    assert_eq!(m.drained.load(Ordering::Relaxed), 0);
+    server.shutdown();
+    assert_eq!(server.admission().inflight(), 0, "permits must all be returned");
+}
+
+#[test]
+fn backpressure_sheds_with_typed_overloaded_and_exact_counters() {
+    let (svc, gate) = spawn_gated();
+    let mut server = NetServer::spawn(svc, "127.0.0.1:0", 2).unwrap();
+    let mut rng = Rng::new(97);
+    const CONNS: usize = 4;
+    let mut streams: Vec<TcpStream> = (0..CONNS).map(|_| connect(&server)).collect();
+    // one request per connection: with capacity 2 and the backend gated,
+    // exactly 2 admit (and pin their permits) and exactly 2 shed — no
+    // matter how the connection threads interleave
+    for (i, s) in streams.iter_mut().enumerate() {
+        send(s, &Frame::Request { id: 100 + i as u64, packet: packet(&mut rng) });
+    }
+    let m = server.service().metrics.clone();
+    wait_until("all four requests to reach the admission gate", || {
+        m.accepted.load(Ordering::Relaxed) + m.shed_overloaded.load(Ordering::Relaxed)
+            == CONNS as u64
+    });
+    assert_eq!(m.accepted.load(Ordering::Relaxed), 2);
+    assert_eq!(m.shed_overloaded.load(Ordering::Relaxed), 2);
+    assert_eq!(m.shed_draining.load(Ordering::Relaxed), 0);
+    // the queue never grew past the bound while the backend was pinned
+    assert!(server.admission().inflight() <= 2);
+    // release the backend: the admitted pair completes; nobody deadlocked
+    open_gate(&gate);
+    let mut replies = 0;
+    let mut overloaded = 0;
+    for (i, s) in streams.iter_mut().enumerate() {
+        let mut buf = Vec::new();
+        // exactly one outcome per request
+        match recv(s, &mut buf) {
+            f @ Frame::Reply { .. } => {
+                assert_eq!(f.id(), 100 + i as u64);
+                replies += 1;
+            }
+            Frame::Error { id, code: ErrorCode::Overloaded } => {
+                assert_eq!(id, 100 + i as u64);
+                overloaded += 1;
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+    assert_eq!(replies, 2, "both admitted requests must be answered");
+    assert_eq!(overloaded, 2, "both shed requests must carry the typed Overloaded error");
+    // shed counter matches the rejections the clients saw, exactly
+    assert_eq!(m.shed_overloaded.load(Ordering::Relaxed), overloaded as u64);
+    assert_eq!(m.accepted.load(Ordering::Relaxed), replies as u64);
+    server.shutdown();
+    assert_eq!(server.admission().inflight(), 0);
+}
+
+#[test]
+fn graceful_drain_completes_inflight_refuses_late_and_joins() {
+    let (svc, gate) = spawn_gated();
+    let svc_handle = svc.clone(); // keep the engine alive for the trace audit
+    let mut server = NetServer::spawn(svc, "127.0.0.1:0", 8).unwrap();
+    let addr = server.local_addr();
+    let mut rng = Rng::new(7);
+    const INFLIGHT: usize = 4;
+    let mut streams: Vec<TcpStream> = (0..INFLIGHT).map(|_| connect(&server)).collect();
+    let packets: Vec<[u8; PACKET_ELEMS]> = (0..INFLIGHT).map(|_| packet(&mut rng)).collect();
+    for (i, s) in streams.iter_mut().enumerate() {
+        send(s, &Frame::Request { id: i as u64, packet: packets[i] });
+    }
+    let m = server.service().metrics.clone();
+    wait_until("all in-flight requests to be admitted", || {
+        m.accepted.load(Ordering::Relaxed) == INFLIGHT as u64
+    });
+    // the late-submission connection must exist before drain begins (the
+    // listener closes with the drain), and drain arrives over the wire
+    let mut late = connect(&server);
+    send(&mut late, &Frame::Drain { id: 0 });
+    wait_until("the drain frame to flip the gate", || server.draining());
+    // late submissions are refused with the typed Draining error
+    for id in [50u64, 51] {
+        send(&mut late, &Frame::Request { id, packet: packet(&mut rng) });
+    }
+    let mut late_buf = Vec::new();
+    for id in [50u64, 51] {
+        match recv(&mut late, &mut late_buf) {
+            Frame::Error { id: got, code: ErrorCode::Draining } => assert_eq!(got, id),
+            other => panic!("late request must get a typed Draining error, got {other:?}"),
+        }
+    }
+    assert_eq!(m.shed_draining.load(Ordering::Relaxed), 2);
+    // everything admitted before the drain still completes, correctly
+    open_gate(&gate);
+    for (i, s) in streams.iter_mut().enumerate() {
+        let mut buf = Vec::new();
+        let frame = recv(s, &mut buf);
+        assert_eq!(frame.id(), i as u64);
+        assert_reply_matches_oracle(&packets[i], &frame);
+    }
+    assert_eq!(m.drained.load(Ordering::Relaxed), INFLIGHT as u64);
+    assert_eq!(m.accepted.load(Ordering::Relaxed), INFLIGHT as u64);
+    // shutdown joins the accept and connection threads and closes sockets
+    server.shutdown();
+    assert_eq!(server.admission().inflight(), 0, "all permits returned after drain");
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "the listening socket must be closed after shutdown"
+    );
+    // the span rings still satisfy their accounting invariant:
+    // every recorded event was either drained into the report or
+    // counted as dropped
+    let report = svc_handle.trace_report().expect("engine was spawned traced");
+    assert_eq!(
+        report.recorded,
+        report.events.len() as u64 + report.dropped,
+        "trace rings must account for every span exactly once after drain"
+    );
+}
+
+#[test]
+fn malformed_input_gets_a_typed_error_then_the_connection_closes() {
+    let svc = SortService::spawn_reference(Duration::from_millis(1)).unwrap();
+    let mut server = NetServer::spawn(svc, "127.0.0.1:0", 8).unwrap();
+    let mut stream = connect(&server);
+    stream.write_all(b"garbage that is certainly not PSU1").unwrap();
+    let mut buf = Vec::new();
+    match recv(&mut stream, &mut buf) {
+        Frame::Error { id: 0, code: ErrorCode::Malformed } => {}
+        other => panic!("expected a Malformed error frame, got {other:?}"),
+    }
+    // after answering, the server hangs up on the corrupt stream
+    let start = Instant::now();
+    let mut chunk = [0u8; 64];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(_) => panic!("no further frames expected on a corrupt connection"),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                assert!(start.elapsed() < DEADLINE, "server never closed the connection");
+            }
+            Err(_) => break, // reset counts as closed
+        }
+    }
+    server.shutdown();
+}

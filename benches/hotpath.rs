@@ -21,9 +21,12 @@
 //! byte-vs-word `packet_bt_throughput_speedup`, the
 //! per-boundary-vs-block `packet_bt_block_speedup`, the
 //! sequential-vs-parallel `psu_sort_parallel_speedup`, and the
-//! front-door wire-codec `net_codec_frames_per_s` also land there as
-//! scalars, so all are tracked across PRs). Set `BENCH_SMOKE=1` to
-//! shrink every scenario to CI-smoke sizes (trajectory, not precision).
+//! front-door wire-codec `net_codec_frames_per_s`, and the
+//! cross-connection aggregation floor `net_staging_mean_batch` (from the
+//! `front_door_staging` scenario: 32 loadgen connections at window 2
+//! through the full TCP path) also land there as scalars, so all are
+//! tracked across PRs). Set `BENCH_SMOKE=1` to shrink every scenario to
+//! CI-smoke sizes (trajectory, not precision).
 
 use std::time::Duration;
 
@@ -455,6 +458,49 @@ fn main() {
         println!("  -> {:.2} Mframes/s codec roundtrip", fps / 1e6);
         scalars.push(("net_codec_frames_per_s", fps));
         all.push(m);
+    }
+
+    // front_door_staging: the full TCP path under the many-connection,
+    // small-window regime the staging queue exists for — 32 in-process
+    // loadgen connections at window 2 against a 2-shard server. The
+    // measurement itself stays informational (fresh-only); what's gated
+    // is `net_staging_mean_batch`, the mean cross-connection backend
+    // batch the dispatchers formed: per-connection batching would pin it
+    // at ~1, so the floor proves the aggregation is real.
+    {
+        use repro::net::{LoadgenConfig, NetConfig, NetServer};
+        let requests: u64 = if smoke { 2048 } else { 8192 };
+        const CONNS: usize = 32;
+        const WINDOW: usize = 2;
+        let svc = SortService::spawn_reference_sharded(2, Duration::from_micros(200))
+            .expect("spawn service");
+        let server = NetServer::spawn_with(
+            svc,
+            "127.0.0.1:0",
+            NetConfig { admission_capacity: 1024, ..NetConfig::default() },
+        )
+        .expect("spawn front door");
+        let cfg = LoadgenConfig {
+            addr: server.local_addr().to_string(),
+            connections: CONNS,
+            requests,
+            window: WINDOW,
+            drain: false,
+            seed: 71,
+        };
+        let m = bench("front_door_staging (32 conns, window 2)", 1, iters(5), || {
+            let report = repro::net::run_loadgen(&cfg).expect("loadgen");
+            assert_eq!(report.ok, requests, "every request must be answered");
+            report.ok
+        });
+        let mean_batch = server.service().metrics.net_batch_size.mean();
+        println!(
+            "  -> {:.0} req/s through staging, mean net batch {mean_batch:.1}",
+            m.per_second(requests)
+        );
+        scalars.push(("net_staging_mean_batch", mean_batch));
+        all.push(m);
+        drop(server); // graceful shutdown: every socket closed, threads joined
     }
 
     // XLA twin through PJRT, when compiled in and artifacts are present

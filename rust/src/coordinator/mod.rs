@@ -340,6 +340,71 @@ impl LatencyHistogram {
     }
 }
 
+/// Bucket count of a [`SizeHistogram`]: bucket `i` counts samples in
+/// `[2^i, 2^(i+1))`, the last bucket absorbing everything ≥ 2^15 —
+/// far above [`crate::runtime::BT_BATCH`], the largest batch the
+/// dispatchers ever form.
+pub const SIZE_BUCKETS: usize = 16;
+
+/// Fixed-bucket dimensionless histogram (lock-free, allocation-free) for
+/// small-integer distributions like requests-per-dispatch. The
+/// [`LatencyHistogram`] shape, minus the nanosecond units: the Prometheus
+/// renderer keeps these bucket edges as plain counts instead of dividing
+/// them into seconds.
+#[derive(Debug)]
+pub struct SizeHistogram {
+    counts: [AtomicU64; SIZE_BUCKETS],
+    /// Sum of every recorded value (the Prometheus `_sum` series; also
+    /// what makes [`SizeHistogram::mean`] exact rather than bucketed).
+    sum: AtomicU64,
+}
+
+impl Default for SizeHistogram {
+    fn default() -> Self {
+        Self {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl SizeHistogram {
+    /// Record one sample (zero is clamped to 1: a "batch of zero" never
+    /// dispatches, so the first bucket stays meaningful).
+    pub fn record(&self, value: u64) {
+        let v = value.max(1);
+        let bucket = (63 - v.leading_zeros() as usize).min(SIZE_BUCKETS - 1);
+        self.counts[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total recorded samples.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of every recorded value.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact mean of the recorded values (`0.0` before the first sample).
+    pub fn mean(&self) -> f64 {
+        let n = self.total();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// One consistent snapshot of the per-bucket counts (bucket `i` counts
+    /// samples in `[2^i, 2^(i+1))`).
+    pub fn snapshot_counts(&self) -> [u64; SIZE_BUCKETS] {
+        std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed))
+    }
+}
+
 /// Published link-power telemetry of one shard: the worker owns the
 /// mutable [`PolicyEngine`] and stores a fresh [`TelemetrySnapshot`] here
 /// after every dispatched batch, so readers never contend with the hot
@@ -467,6 +532,18 @@ pub struct Metrics {
     /// Admitted requests that were still fulfilled *after* drain began —
     /// the "in-flight requests complete" half of the drain contract.
     pub drained: AtomicU64,
+    /// Connections force-closed by the drain deadline (`serve
+    /// --drain-timeout-s`) because they never finished after drain began.
+    pub drain_forced: AtomicU64,
+    /// Requests currently sitting in the front door's shared staging
+    /// queue: admitted by the gate but not yet pulled into a dispatcher
+    /// batch. Zero for purely in-process callers.
+    pub staging_depth: AtomicU64,
+    /// Requests per front-door dispatch — the batches the staging-queue
+    /// dispatchers form *across* connections before handing them to
+    /// [`SortClient::submit_batch`]. A mean near 1 at many connections
+    /// means aggregation has degenerated back to per-connection batching.
+    pub net_batch_size: SizeHistogram,
 }
 
 impl Metrics {
@@ -487,6 +564,9 @@ impl Metrics {
             shed_overloaded: AtomicU64::new(0),
             shed_draining: AtomicU64::new(0),
             drained: AtomicU64::new(0),
+            drain_forced: AtomicU64::new(0),
+            staging_depth: AtomicU64::new(0),
+            net_batch_size: SizeHistogram::default(),
         }
     }
 
@@ -510,6 +590,30 @@ impl Metrics {
     /// Account one admitted request fulfilled after drain began.
     pub fn record_drained(&self) {
         self.drained.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account one connection force-closed by the drain deadline.
+    pub fn record_drain_forced(&self) {
+        self.drain_forced.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account one admitted request entering the front-door staging queue.
+    pub fn record_staged(&self) {
+        self.staging_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account `n` staged requests pulled into a dispatcher batch. Calls
+    /// pair exactly with [`Metrics::record_staged`]; debug builds assert
+    /// the gauge never underflows.
+    pub fn record_unstaged(&self, n: u64) {
+        let prev = self.staging_depth.fetch_sub(n, Ordering::Relaxed);
+        debug_assert!(prev >= n, "staging depth underflow: {prev} - {n}");
+    }
+
+    /// Account one front-door dispatch of `len` requests (the batch a
+    /// staging dispatcher formed across connections).
+    pub fn record_net_batch(&self, len: u64) {
+        self.net_batch_size.record(len);
     }
 
     /// Record one request's duration in `stage`'s decomposition histogram.
@@ -637,6 +741,35 @@ impl Metrics {
             "sortservice_drained_total {}",
             self.drained.load(Ordering::Relaxed)
         );
+        write_family(
+            &mut out,
+            "sortservice_drain_forced_total",
+            "counter",
+            "Connections force-closed by the drain deadline.",
+        );
+        let _ = writeln!(
+            out,
+            "sortservice_drain_forced_total {}",
+            self.drain_forced.load(Ordering::Relaxed)
+        );
+        write_family(
+            &mut out,
+            "sortservice_staging_depth",
+            "gauge",
+            "Admitted requests waiting in the front-door staging queue.",
+        );
+        let _ = writeln!(
+            out,
+            "sortservice_staging_depth {}",
+            self.staging_depth.load(Ordering::Relaxed)
+        );
+        write_family(
+            &mut out,
+            "sortservice_net_batch_size",
+            "histogram",
+            "Requests per front-door dispatch (batches formed across connections).",
+        );
+        write_size_histogram(&mut out, "sortservice_net_batch_size", &self.net_batch_size);
         write_family(
             &mut out,
             "sortservice_latency_p50_seconds",
@@ -1026,6 +1159,26 @@ fn write_histogram(out: &mut String, name: &str, labels: &str, h: &LatencyHistog
             let _ = writeln!(out, "{name}_count{{{base}}} {cum}");
         }
     }
+}
+
+/// Render one [`SizeHistogram`] as a Prometheus histogram: cumulative
+/// `_bucket{le="..."}` series over the power-of-two edges (dimensionless
+/// counts — no nanosecond conversion), then `_sum` and `_count`. The last
+/// bucket absorbs every larger sample, so it folds into `+Inf`.
+fn write_size_histogram(out: &mut String, name: &str, h: &SizeHistogram) {
+    use std::fmt::Write as _;
+    let counts = h.snapshot_counts();
+    let mut cum = 0u64;
+    for (i, c) in counts.iter().enumerate() {
+        cum += c;
+        if i + 1 < counts.len() {
+            let le = 1u64 << (i + 1);
+            let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+        }
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+    let _ = writeln!(out, "{name}_sum {}", h.sum());
+    let _ = writeln!(out, "{name}_count {cum}");
 }
 
 /// Handle for submitting requests; clone freely across threads. Dropping
@@ -1895,6 +2048,64 @@ mod tests {
         assert!(text.contains("sortservice_shed_total{reason=\"overloaded\"} 1"));
         assert!(text.contains("sortservice_shed_total{reason=\"draining\"} 2"));
         assert!(text.contains("sortservice_drained_total 1"));
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            assert_eq!(line.split_whitespace().count(), 2, "malformed line: {line}");
+        }
+    }
+
+    #[test]
+    fn size_histogram_buckets_mean_and_clamp() {
+        let h = SizeHistogram::default();
+        assert_eq!(h.total(), 0);
+        assert_eq!(h.mean(), 0.0);
+        h.record(0); // clamps to 1: bucket [1, 2)
+        h.record(1);
+        h.record(3); // bucket [2, 4)
+        h.record(256); // bucket [256, 512)
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.sum(), 1 + 1 + 3 + 256);
+        assert!((h.mean() - 261.0 / 4.0).abs() < 1e-12);
+        let counts = h.snapshot_counts();
+        assert_eq!(counts[0], 2, "1-valued samples land in the first bucket");
+        assert_eq!(counts[1], 1);
+        assert_eq!(counts[8], 1);
+        // everything past the last edge folds into the final bucket
+        h.record(u64::MAX);
+        assert_eq!(h.snapshot_counts()[SIZE_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn prometheus_render_covers_staging_and_drain_forced() {
+        let m = Metrics::new(1);
+        // the families exist before any front-door traffic (all-zero)…
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE sortservice_staging_depth gauge"));
+        assert!(text.contains("# TYPE sortservice_drain_forced_total counter"));
+        assert!(text.contains("# TYPE sortservice_net_batch_size histogram"));
+        assert!(text.contains("sortservice_staging_depth 0"));
+        assert!(text.contains("sortservice_drain_forced_total 0"));
+        assert!(text.contains("sortservice_net_batch_size_count 0"));
+        // …and track the record_* methods exactly
+        m.record_staged();
+        m.record_staged();
+        m.record_staged();
+        m.record_unstaged(2);
+        m.record_net_batch(2);
+        m.record_net_batch(6);
+        m.record_drain_forced();
+        let text = m.render_prometheus();
+        assert!(text.contains("sortservice_staging_depth 1"));
+        assert!(text.contains("sortservice_drain_forced_total 1"));
+        // dimensionless cumulative buckets: the 2-batch lands at le="2",
+        // the 6-batch at le="8", and +Inf carries the full count
+        assert!(text.contains("sortservice_net_batch_size_bucket{le=\"2\"} 1"));
+        assert!(text.contains("sortservice_net_batch_size_bucket{le=\"8\"} 2"));
+        assert!(text.contains("sortservice_net_batch_size_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("sortservice_net_batch_size_sum 8"));
+        assert!(text.contains("sortservice_net_batch_size_count 2"));
         for line in text.lines() {
             if line.starts_with('#') {
                 continue;

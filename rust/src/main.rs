@@ -56,8 +56,10 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "listen",
             "admission-capacity",
             "serve-for-s",
+            "max-pipeline",
+            "drain-timeout-s",
         ],
-        "loadgen" => &["addr", "connections", "requests", "window", "drain"],
+        "loadgen" => &["addr", "connections", "requests", "window", "drain", "sweep", "label"],
         "bench-gate" => &["fresh", "baseline", "tolerance", "bless", "require-scalars"],
         "help" | "--help" | "-h" => &[],
         _ => return None,
@@ -85,10 +87,14 @@ fn flag_doc(flag: &str) -> &'static str {
         "listen" => "serve over TCP on ADDR (e.g. 127.0.0.1:7411) instead of the local demo",
         "admission-capacity" => "front-door in-flight bound; full queue sheds with Overloaded",
         "serve-for-s" => "stop the TCP server after S seconds even without a drain",
+        "max-pipeline" => "max staged-but-unresolved requests per connection (0 = unlimited)",
+        "drain-timeout-s" => "force-close connections still unfinished S seconds into a drain",
         "addr" => "server address to drive (default 127.0.0.1:7411)",
         "connections" => "concurrent loadgen connections (default 4)",
         "window" => "max in-flight requests per loadgen connection (default 32)",
         "drain" => "send a Drain frame after the run (gracefully stops the server)",
+        "sweep" => "step connections LO:HI:STEPS to locate the shed knee",
+        "label" => "scalar-name infix for BENCHUTIL_JSON (loadgen_<label>_throughput_per_s)",
         "fresh" => "benchutil JSON from the run under test",
         "baseline" => "committed baseline JSON (BENCH_*.json)",
         "tolerance" => "allowed throughput drop as a fraction (default 0.10)",
@@ -235,24 +241,34 @@ report & serving:
                             Perfetto or chrome://tracing). (set
                             BENCHUTIL_JSON=path to dump JSON metrics)
         [--listen ADDR] [--admission-capacity N] [--serve-for-s S]
+        [--max-pipeline P] [--drain-timeout-s D]
                             with --listen, serve over TCP instead of the
-                            local demo: length-prefixed binary frames into
-                            the pooled-client path, at most N in-flight
+                            local demo: readers decode length-prefixed
+                            binary frames into a shared staging queue and
+                            a dispatcher pool forms backend batches
+                            across connections, at most N in-flight
                             requests (default 4096; a full queue sheds
-                            with a typed Overloaded error frame), graceful
-                            drain on a Drain frame (in-flight work
-                            completes, new connections refused, sockets
-                            closed); --serve-for-s bounds the run
+                            with a typed Overloaded error frame), at most
+                            P staged-but-unresolved requests per
+                            connection (0 = unlimited; the excess sheds),
+                            graceful drain on a Drain frame (in-flight
+                            work completes, new connections refused,
+                            sockets closed; connections still unfinished
+                            D seconds into the drain are force-closed);
+                            --serve-for-s bounds the run
   loadgen [--addr HOST:PORT] [--connections C] [--requests N]
-          [--window W] [--drain]
+          [--window W] [--drain] [--sweep LO:HI:STEPS] [--label L]
                             drive a running `serve --listen` server:
                             C connections each keep up to W requests on
                             the wire; every request must resolve to a
                             reply or a typed error frame (a lost reply
                             fails the run); prints throughput and
                             p50/p99/p999 and writes them to
-                            BENCHUTIL_JSON; --drain stops the server
-                            afterwards
+                            BENCHUTIL_JSON (--label L renames the scalars
+                            loadgen_L_*); --sweep reruns at LO..HI
+                            connections in STEPS levels and reports the
+                            shed knee (loadgen_knee_conns); --drain stops
+                            the server afterwards
   bench-gate --fresh FILE --baseline FILE [--tolerance 0.10] [--bless]
              [--require-scalars NAME,...]
                             compare a fresh benchutil JSON dump against a
@@ -397,16 +413,19 @@ fn main() -> Result<()> {
                 }
             };
             if let Some(listen) = args.get("listen") {
-                let capacity = args.get_usize("admission-capacity")?.unwrap_or(4096);
-                let serve_for_s = args.get_usize("serve-for-s")?;
+                let opts = ListenOpts {
+                    capacity: args.get_usize("admission-capacity")?.unwrap_or(4096),
+                    max_pipeline: args.get_usize("max-pipeline")?.unwrap_or(0),
+                    drain_timeout_s: args.get_usize("drain-timeout-s")?,
+                    serve_for_s: args.get_usize("serve-for-s")?,
+                };
                 serve_listen(
                     &cfg,
                     listen,
                     shards,
                     wait_us,
                     order_policy,
-                    capacity,
-                    serve_for_s,
+                    &opts,
                     args.get("stats"),
                 )?;
             } else {
@@ -431,7 +450,21 @@ fn main() -> Result<()> {
                 drain: args.get("drain").is_some(),
                 seed: cfg.seed,
             };
-            loadgen_cmd(&lg)?;
+            let label = args.get("label").unwrap_or("");
+            match args.get("sweep") {
+                Some(spec) => {
+                    // bad sweep specs follow the bad-input contract
+                    let (lo, hi, steps) = match parse_sweep(spec) {
+                        Ok(v) => v,
+                        Err(e) => {
+                            eprintln!("error: {e}\n\n{HELP}");
+                            std::process::exit(2);
+                        }
+                    };
+                    sweep_cmd(&lg, lo, hi, steps)?;
+                }
+                None => loadgen_cmd(&lg, label)?,
+            }
         }
         "bench-gate" => {
             use repro::benchutil::gate;
@@ -671,24 +704,37 @@ fn serve_demo(
     Ok(())
 }
 
+/// Front-door knobs of `serve --listen`, bundled so the serve arm hands
+/// [`serve_listen`] one value instead of four loose parameters.
+struct ListenOpts {
+    /// `--admission-capacity` (default 4096).
+    capacity: usize,
+    /// `--max-pipeline` (0 = unlimited).
+    max_pipeline: usize,
+    /// `--drain-timeout-s`.
+    drain_timeout_s: Option<usize>,
+    /// `--serve-for-s`.
+    serve_for_s: Option<usize>,
+}
+
 /// TCP front-door mode of `serve`: bind `--listen ADDR`, feed the frame
-/// protocol into the pooled-client path behind a bounded admission gate,
-/// and run until a `Drain` frame arrives (or `--serve-for-s` elapses),
-/// then shut down gracefully — in-flight requests complete, new
-/// connections are refused, sockets close, and every thread joins.
-#[allow(clippy::too_many_arguments)]
+/// protocol through the shared staging queue into the pooled-client path
+/// behind a bounded admission gate, and run until a `Drain` frame
+/// arrives (or `--serve-for-s` elapses), then shut down gracefully —
+/// in-flight requests complete, new connections are refused, sockets
+/// close, and every thread joins (`--drain-timeout-s` force-closes
+/// connections that never finish).
 fn serve_listen(
     cfg: &Config,
     listen: &str,
     shards: usize,
     wait_us: usize,
     order_policy: Option<OrderPolicy>,
-    capacity: usize,
-    serve_for_s: Option<usize>,
+    opts: &ListenOpts,
     stats: Option<&str>,
 ) -> Result<()> {
     use repro::coordinator::SortService;
-    use repro::net::NetServer;
+    use repro::net::{NetConfig, NetServer};
     use std::sync::atomic::Ordering;
     use std::time::{Duration, Instant};
 
@@ -700,15 +746,25 @@ fn serve_listen(
         Duration::from_micros(wait_us as u64),
         order_policy,
     )?;
-    let mut server = NetServer::spawn(svc, listen, capacity)?;
+    let net_cfg = NetConfig {
+        admission_capacity: opts.capacity,
+        max_pipeline: opts.max_pipeline,
+        drain_timeout: opts.drain_timeout_s.map(|s| Duration::from_secs(s as u64)),
+        // the dispatcher pool shares the coordinator's batching budget so
+        // the two dynamic batchers flush on the same clock
+        max_wait: Duration::from_micros(wait_us as u64),
+        ..NetConfig::default()
+    };
+    let mut server = NetServer::spawn_with(svc, listen, net_cfg)?;
     println!(
-        "listening on {} ({} shard(s), admission capacity {}); send a Drain frame \
-         (`repro loadgen --drain`) to stop",
+        "listening on {} ({} shard(s), admission capacity {}, pipeline cap {}); send a \
+         Drain frame (`repro loadgen --drain`) to stop",
         server.local_addr(),
         shards,
-        capacity,
+        opts.capacity,
+        if opts.max_pipeline == 0 { "off".to_string() } else { opts.max_pipeline.to_string() },
     );
-    let deadline = serve_for_s.map(|s| Instant::now() + Duration::from_secs(s as u64));
+    let deadline = opts.serve_for_s.map(|s| Instant::now() + Duration::from_secs(s as u64));
     while !server.draining() {
         if deadline.is_some_and(|d| Instant::now() >= d) {
             eprintln!("(--serve-for-s elapsed; draining)");
@@ -719,12 +775,15 @@ fn serve_listen(
     server.shutdown();
     let m = &server.service().metrics;
     println!(
-        "drained: {} accepted, {} shed (overloaded {}, draining {}), {} fulfilled after drain",
+        "drained: {} accepted, {} shed (overloaded {}, draining {}), {} fulfilled after \
+         drain, {} connection(s) force-closed, mean net batch {:.1}",
         m.accepted.load(Ordering::Relaxed),
         m.shed_overloaded.load(Ordering::Relaxed) + m.shed_draining.load(Ordering::Relaxed),
         m.shed_overloaded.load(Ordering::Relaxed),
         m.shed_draining.load(Ordering::Relaxed),
         m.drained.load(Ordering::Relaxed),
+        m.drain_forced.load(Ordering::Relaxed),
+        m.net_batch_size.mean(),
     );
     if let Some(path) = stats {
         let text = server.service().render_stats();
@@ -738,11 +797,31 @@ fn serve_listen(
     Ok(())
 }
 
+/// Parse `--sweep LO:HI:STEPS` (three colon-separated positive integers,
+/// `LO <= HI`).
+fn parse_sweep(spec: &str) -> Result<(usize, usize, usize)> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    anyhow::ensure!(parts.len() == 3, "--sweep: expected LO:HI:STEPS, got {spec:?}");
+    let mut nums = [0usize; 3];
+    for (slot, part) in nums.iter_mut().zip(&parts) {
+        *slot = part
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--sweep: bad number {part:?} in {spec:?}"))?;
+    }
+    let (lo, hi, steps) = (nums[0], nums[1], nums[2]);
+    anyhow::ensure!(lo >= 1, "--sweep: LO must be at least 1");
+    anyhow::ensure!(hi >= lo, "--sweep: HI must be >= LO");
+    anyhow::ensure!(steps >= 1, "--sweep: STEPS must be at least 1");
+    Ok((lo, hi, steps))
+}
+
 /// The `loadgen` command: soak a running `serve --listen` server and
 /// report throughput + tail latency (recorded into BENCHUTIL_JSON when
-/// set). [`repro::net::loadgen::run`] fails on any lost reply, so a
-/// summary printing here means every request resolved exactly once.
-fn loadgen_cmd(lg: &repro::net::LoadgenConfig) -> Result<()> {
+/// set; a non-empty `label` renames the scalars `loadgen_<label>_*`).
+/// [`repro::net::loadgen::run`] fails on any lost reply, so a summary
+/// printing here means every request resolved exactly once.
+fn loadgen_cmd(lg: &repro::net::LoadgenConfig, label: &str) -> Result<()> {
     use repro::benchutil;
 
     let report = repro::net::run_loadgen(lg)?;
@@ -773,19 +852,94 @@ fn loadgen_cmd(lg: &repro::net::LoadgenConfig) -> Result<()> {
         eprintln!("(drain frame sent; the server is shutting down)");
     }
     if let Some(path) = benchutil::json_path_from_env() {
-        let scalars = vec![
-            ("loadgen_requests", report.sent as f64),
-            ("loadgen_connections", lg.connections as f64),
-            ("loadgen_window", lg.window as f64),
-            ("loadgen_ok", report.ok as f64),
-            ("loadgen_shed", shed as f64),
-            ("loadgen_failed", report.failed as f64),
-            ("loadgen_throughput_per_s", report.throughput_per_s()),
-            ("loadgen_p50_us", p50.as_secs_f64() * 1e6),
-            ("loadgen_p99_us", p99.as_secs_f64() * 1e6),
-            ("loadgen_p999_us", p999.as_secs_f64() * 1e6),
+        let prefix = if label.is_empty() {
+            "loadgen".to_string()
+        } else {
+            format!("loadgen_{label}")
+        };
+        let named = |suffix: &str| format!("{prefix}_{suffix}");
+        let scalars: Vec<(String, f64)> = vec![
+            (named("requests"), report.sent as f64),
+            (named("connections"), lg.connections as f64),
+            (named("window"), lg.window as f64),
+            (named("ok"), report.ok as f64),
+            (named("shed"), shed as f64),
+            (named("failed"), report.failed as f64),
+            (named("throughput_per_s"), report.throughput_per_s()),
+            (named("p50_us"), p50.as_secs_f64() * 1e6),
+            (named("p99_us"), p99.as_secs_f64() * 1e6),
+            (named("p999_us"), p999.as_secs_f64() * 1e6),
         ];
-        benchutil::write_json(&path, &[], &scalars)?;
+        let borrowed: Vec<(&str, f64)> =
+            scalars.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        benchutil::write_json(&path, &[], &borrowed)?;
+        eprintln!("(benchutil JSON written to {path})");
+    }
+    Ok(())
+}
+
+/// The `loadgen --sweep` command: step the connection count from `lo` to
+/// `hi` in `steps` levels, print one throughput line per level, and
+/// report the shed knee (the level where resolved throughput peaks).
+/// With BENCHUTIL_JSON set, each level is recorded as a measurement plus
+/// a fresh-only `loadgen_sweep_c<N>_throughput_per_s` scalar, and the
+/// knee lands in `loadgen_knee_conns`.
+fn sweep_cmd(lg: &repro::net::LoadgenConfig, lo: usize, hi: usize, steps: usize) -> Result<()> {
+    use repro::benchutil;
+
+    let results = repro::net::sweep(lg, lo, hi, steps)?;
+    println!(
+        "loadgen sweep: {}..{} connections in {} level(s), {} requests x window {} per level",
+        lo,
+        hi,
+        results.len(),
+        lg.requests,
+        lg.window,
+    );
+    println!("  conns  req/s      ok        shed      p99");
+    for step in &results {
+        let r = &step.report;
+        println!(
+            "  {:<6} {:<10.0} {:<9} {:<9} {:.1?}",
+            step.connections,
+            r.throughput_per_s(),
+            r.ok,
+            r.shed_overloaded + r.shed_draining,
+            r.latency.quantile(0.99),
+        );
+    }
+    let knee = repro::net::knee_conns(&results).expect("sweep returned at least one step");
+    println!("  knee: throughput peaks at {knee} connection(s)");
+    if lg.drain {
+        eprintln!("(drain frame sent; the server is shutting down)");
+    }
+    if let Some(path) = benchutil::json_path_from_env() {
+        let mut measurements = Vec::with_capacity(results.len());
+        let mut owned: Vec<(String, f64)> = vec![
+            ("loadgen_knee_conns".to_string(), knee as f64),
+            ("loadgen_sweep_steps".to_string(), results.len() as f64),
+            ("loadgen_sweep_requests_per_step".to_string(), lg.requests as f64),
+            ("loadgen_sweep_window".to_string(), lg.window as f64),
+        ];
+        for step in &results {
+            let r = &step.report;
+            // iters 1 keeps these below the gate's minimum, so sweep
+            // points inform without ever becoming regression gates
+            measurements.push(benchutil::Measurement {
+                name: format!("loadgen_sweep_c{}", step.connections),
+                iters: 1,
+                median: r.elapsed,
+                mean: r.elapsed,
+                min: r.elapsed,
+                stddev: std::time::Duration::ZERO,
+            });
+            owned.push((
+                format!("loadgen_sweep_c{}_throughput_per_s", step.connections),
+                r.throughput_per_s(),
+            ));
+        }
+        let borrowed: Vec<(&str, f64)> = owned.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        benchutil::write_json(&path, &measurements, &borrowed)?;
         eprintln!("(benchutil JSON written to {path})");
     }
     Ok(())
@@ -928,6 +1082,47 @@ mod tests {
         args(&["serve", "--requests", "5"]).validate().unwrap();
         let text = command_help("loadgen").unwrap();
         assert!(text.contains("--window") && text.contains("--drain"), "{text}");
+    }
+
+    #[test]
+    fn serve_front_door_tuning_flags_validate_and_stay_serve_only() {
+        let a = args(&[
+            "serve",
+            "--listen",
+            "127.0.0.1:7411",
+            "--max-pipeline",
+            "8",
+            "--drain-timeout-s=30",
+        ]);
+        a.validate().unwrap();
+        assert_eq!(a.get_usize("max-pipeline").unwrap(), Some(8));
+        assert_eq!(a.get_usize("drain-timeout-s").unwrap(), Some(30));
+        assert!(args(&["loadgen", "--max-pipeline", "8"]).validate().is_err());
+        assert!(args(&["table1", "--drain-timeout-s", "5"]).validate().is_err());
+        let text = command_help("serve").unwrap();
+        assert!(text.contains("--max-pipeline") && text.contains("--drain-timeout-s"), "{text}");
+    }
+
+    #[test]
+    fn loadgen_sweep_and_label_flags_validate() {
+        let a = args(&["loadgen", "--sweep", "1:32:4", "--label", "many_conn"]);
+        a.validate().unwrap();
+        assert_eq!(a.get("sweep"), Some("1:32:4"));
+        assert_eq!(a.get("label"), Some("many_conn"));
+        assert!(args(&["serve", "--sweep", "1:2:2"]).validate().is_err());
+        assert!(args(&["table1", "--label", "x"]).validate().is_err());
+        let text = command_help("loadgen").unwrap();
+        assert!(text.contains("--sweep") && text.contains("--label"), "{text}");
+    }
+
+    #[test]
+    fn sweep_spec_parses_and_rejects_junk() {
+        assert_eq!(parse_sweep("1:32:4").unwrap(), (1, 32, 4));
+        assert_eq!(parse_sweep("8:8:1").unwrap(), (8, 8, 1));
+        assert_eq!(parse_sweep(" 2 : 16 : 3 ").unwrap(), (2, 16, 3));
+        for bad in ["", "1:2", "1:2:3:4", "a:2:3", "0:4:2", "8:4:2", "1:4:0"] {
+            assert!(parse_sweep(bad).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

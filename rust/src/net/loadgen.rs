@@ -8,6 +8,10 @@
 //! request must resolve to a reply or a typed error frame; a missing or
 //! misordered outcome fails the run, which is what makes the CI soak's
 //! "zero lost replies" criterion self-enforcing.
+//!
+//! [`sweep`] reconnects at stepped connection counts (`repro loadgen
+//! --sweep LO:HI:STEPS`) to map throughput against offered load;
+//! [`knee_conns`] reads the shed knee off the resulting curve.
 
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
@@ -150,6 +154,75 @@ pub fn run(cfg: &LoadgenConfig) -> anyhow::Result<LoadgenReport> {
         resolved,
     );
     Ok(report)
+}
+
+/// One step of a [`sweep`]: the connection count it ran at and the full
+/// report of that run.
+#[derive(Debug)]
+pub struct SweepStep {
+    /// Connections driven during this step.
+    pub connections: usize,
+    /// The step's full loadgen report.
+    pub report: LoadgenReport,
+}
+
+/// Step offered load from `lo` to `hi` connections in `steps` evenly
+/// spaced levels (each a fresh [`run`] with reconnects), returning one
+/// [`SweepStep`] per distinct level.
+///
+/// `cfg.requests` and `cfg.window` are held fixed per step — offered
+/// load scales with the connection count. `cfg.drain` is honored once,
+/// after the final step, so intermediate steps don't drain the server
+/// out from under the rest of the sweep. Consecutive duplicate levels
+/// (possible when `steps > hi - lo + 1`) run once.
+pub fn sweep(
+    cfg: &LoadgenConfig,
+    lo: usize,
+    hi: usize,
+    steps: usize,
+) -> anyhow::Result<Vec<SweepStep>> {
+    anyhow::ensure!(lo >= 1, "sweep lo must be at least 1");
+    anyhow::ensure!(hi >= lo, "sweep hi must be >= lo");
+    anyhow::ensure!(steps >= 1, "sweep needs at least one step");
+    let mut out: Vec<SweepStep> = Vec::with_capacity(steps);
+    for k in 0..steps {
+        let connections = if steps == 1 {
+            lo
+        } else {
+            lo + (hi - lo) * k / (steps - 1)
+        };
+        if out.last().is_some_and(|s| s.connections == connections) {
+            continue;
+        }
+        let step_cfg = LoadgenConfig {
+            connections,
+            drain: false,
+            // decorrelate packet streams between steps without giving up
+            // run-to-run determinism
+            seed: cfg.seed ^ ((k as u64) << 32),
+            ..cfg.clone()
+        };
+        let report = run(&step_cfg)?;
+        out.push(SweepStep { connections, report });
+    }
+    if cfg.drain {
+        send_drain(&cfg.addr)?;
+    }
+    Ok(out)
+}
+
+/// The shed knee of a sweep: the connection count of the first step with
+/// the highest resolved throughput — past it, added connections only add
+/// shedding or queueing. `None` on an empty sweep.
+pub fn knee_conns(steps: &[SweepStep]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for s in steps {
+        let t = s.report.throughput_per_s();
+        if best.is_none_or(|(_, bt)| t > bt) {
+            best = Some((s.connections, t));
+        }
+    }
+    best.map(|(c, _)| c)
 }
 
 /// Per-connection outcome tallies.

@@ -6,15 +6,23 @@
 //! * [`codec`] — the length-prefixed binary frame protocol ([`Frame`],
 //!   [`encode`], [`decode`]) with typed decode errors; total on arbitrary
 //!   input (fuzzed by `rust/tests/net_protocol.rs`).
-//! * [`server`] — [`NetServer`]: nonblocking accept loop, one thread per
-//!   connection, bounded admission through
-//!   [`crate::coordinator::Admission`] (full queue → typed `Overloaded`
-//!   error frame, never unbounded growth), and graceful drain (in-flight
-//!   requests complete, new connections refused, sockets closed, threads
-//!   joined).
+//! * [`server`] — [`NetServer`]: nonblocking accept loop, a reader +
+//!   writer thread pair per connection, and a shared **staging queue**
+//!   between the two: readers decode frames, charge
+//!   [`crate::coordinator::Admission`] (full queue or a
+//!   [`NetConfig::max_pipeline`] violation → typed `Overloaded` error
+//!   frame, never unbounded growth), and stage admitted requests; a
+//!   small dispatcher pool drains staging in arrival order and forms
+//!   backend batches *across* connections, so many low-rate connections
+//!   still fill large batches. Writers emit exactly one outcome frame
+//!   per request in arrival order. Graceful drain completes in-flight
+//!   work and refuses new connections; [`NetConfig::drain_timeout`]
+//!   force-closes connections that never finish.
 //! * [`loadgen`] — the `repro loadgen` client: windowed pipelining over N
 //!   connections with an exactly-one-outcome audit and a shared latency
-//!   histogram (throughput + p50/p99/p999 for benchutil JSON).
+//!   histogram (throughput + p50/p99/p999 for benchutil JSON), plus a
+//!   `--sweep LO:HI:STEPS` mode stepping the connection count to locate
+//!   the shed knee.
 //!
 //! `repro serve --listen ADDR` starts the server; `repro loadgen --addr
 //! ADDR` soaks it (the CI serve-smoke job does both).
@@ -24,5 +32,5 @@ pub mod loadgen;
 pub mod server;
 
 pub use codec::{decode, encode, DecodeError, ErrorCode, Frame, HEADER_LEN, MAGIC, MAX_PAYLOAD};
-pub use loadgen::{run as run_loadgen, LoadgenConfig, LoadgenReport};
-pub use server::NetServer;
+pub use loadgen::{knee_conns, run as run_loadgen, sweep, LoadgenConfig, LoadgenReport, SweepStep};
+pub use server::{NetConfig, NetServer};

@@ -1,90 +1,302 @@
 //! TCP front door: accept loop, per-connection framing, bounded
-//! admission, and graceful drain.
+//! admission, cross-connection batch aggregation through a shared
+//! staging queue, and graceful drain with an optional force-close
+//! deadline.
 //!
-//! One [`NetServer`] owns a listening socket plus one thread per accepted
-//! connection. Each connection thread reads request frames, passes every
-//! request through the shared [`Admission`] gate — shed requests get a
-//! typed error frame *immediately*, admitted ones are batched through a
-//! per-connection [`SortClient`] — and writes exactly one outcome frame
-//! per request, in arrival order. The arrival-order guarantee is what
-//! lets a pipelining client ([`crate::net::loadgen`]) match outcomes to
-//! requests with a FIFO instead of a map.
+//! One [`NetServer`] owns a listening socket, a reader + writer thread
+//! pair per accepted connection, and a small pool of dispatcher threads
+//! behind one bounded staging queue. Readers decode request frames and
+//! resolve each one *at the gate*: a shed request gets its typed error
+//! frame immediately, an admitted request is pushed into the staging
+//! queue as a `(conn, req_id, packet)` entry. Dispatchers drain the
+//! queue in arrival order and form backend batches **across
+//! connections** — flushing on the `max_wait` budget or a full
+//! [`BT_BATCH`] — so many low-rate connections still fill large batches
+//! (per-connection batching degenerates to batch ≈ 1 exactly when the
+//! connection count grows and the per-connection window shrinks).
+//! Every request's outcome routes back through its connection's writer,
+//! which writes exactly one outcome frame per request in arrival order.
+//! The arrival-order guarantee is what lets a pipelining client
+//! ([`crate::net::loadgen`]) match outcomes to requests with a FIFO
+//! instead of a map.
+//!
+//! ```text
+//!  conn A ──reader──▶ ┐                       ┌─▶ writer A ──▶ conn A
+//!  conn B ──reader──▶ ├─ staging queue ─ dispatchers ─▶ shards
+//!  conn C ──reader──▶ ┘   (bounded,      (batch across └─▶ writer C …
+//!                          FIFO, one      connections,
+//!                          permit per     flush on max_wait
+//!                          entry)         or a full batch)
+//! ```
 //!
 //! ## Shed / drain state machine
 //!
 //! ```text
-//!            try_admit ok                    outcome written
-//!  SERVING ───────────────▶ permit held ──────────────────▶ released
-//!     │  └─ queue full → Error{Overloaded} frame (shed, no permit)
+//!            try_admit ok                     outcome filled
+//!  SERVING ───────────────▶ staged ──▶ dispatched ─────────▶ released
+//!     │  ├─ pipeline cap hit → Error{Overloaded} frame (shed, no permit)
+//!     │  └─ queue full      → Error{Overloaded} frame (shed, no permit)
 //!     │
 //!     │ Drain frame / begin_drain()
 //!     ▼
 //!  DRAINING: accept loop stops (listener closed; new connections
 //!     │      refused), admits fail → Error{Draining} frames, permits
 //!     │      already out run to completion (counted as drained)
+//!     │      │ drain_timeout elapses with the connection unfinished
+//!     │      ▼
+//!     │  FORCED: the socket is closed from the server side and the
+//!     │      connection counted in drain_forced — a stalled peer can
+//!     │      no longer hold shutdown hostage
 //!     │ shutdown()
 //!     ▼
-//!  CLOSED: connection threads told to finish, every socket closed,
-//!          every thread joined
+//!  CLOSED: readers told to finish, dispatchers drain the staging
+//!          queue, writers flush their outcome FIFOs, every socket
+//!          closed, every thread joined
 //! ```
 
+use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::coordinator::{Admission, Metrics, SortClient, SortResponse, SortService};
+use crate::coordinator::{AdmitError, Admission, Metrics, SortClient, SortResponse, SortService};
 use crate::net::codec::{decode, encode, ErrorCode, Frame};
-use crate::runtime::PACKET_ELEMS;
+use crate::runtime::{BT_BATCH, PACKET_ELEMS};
 
 /// How long a blocked connection read waits before re-checking the
 /// close flag — the latency bound on noticing `shutdown()`.
 const READ_TICK: Duration = Duration::from_millis(25);
 /// How long the accept loop sleeps when no connection is pending.
 const ACCEPT_TICK: Duration = Duration::from_millis(5);
+/// How often the drain monitor re-checks the deadline and the
+/// per-connection done flags.
+const MONITOR_TICK: Duration = Duration::from_millis(10);
+
+/// Front-door tuning knobs for [`NetServer::spawn_with`].
+/// [`NetServer::spawn`] uses the defaults with a caller-chosen admission
+/// capacity — the shape every pre-existing caller expects.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// In-flight bound of the shared [`Admission`] gate (also the bound
+    /// of the staging queue: every staged entry holds one permit).
+    pub admission_capacity: usize,
+    /// Max staged-but-unresolved requests one connection may hold; the
+    /// excess is shed with a typed `Overloaded` error frame before it can
+    /// take a permit. `0` means unlimited (`serve --max-pipeline`).
+    pub max_pipeline: usize,
+    /// Force-close connections still unfinished this long after drain
+    /// begins, counting each in `sortservice_drain_forced_total`
+    /// (`serve --drain-timeout-s`). `None` waits forever, like PR 9 did.
+    pub drain_timeout: Option<Duration>,
+    /// Dispatcher threads draining the staging queue. Batch formation is
+    /// serialized (arrival order), so this only needs to cover
+    /// `submit_batch` + reply-fan-out overlap; 2 is plenty.
+    pub dispatchers: usize,
+    /// Batch-formation flush budget: a dispatcher holding a non-empty
+    /// batch flushes after this long even if the batch is not full —
+    /// the same dynamic-batching contract the coordinator shards honor
+    /// (`serve --max-wait-us`).
+    pub max_wait: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            admission_capacity: 4096,
+            max_pipeline: 0,
+            drain_timeout: None,
+            dispatchers: 2,
+            max_wait: Duration::from_micros(200),
+        }
+    }
+}
+
+/// The rendezvous for one request's outcome: the dispatcher (or the
+/// reader, for shed requests) fills it exactly once; the connection's
+/// writer waits on it so outcomes leave in arrival order no matter which
+/// dispatcher batch resolved first.
+#[derive(Default)]
+struct OutcomeSlot {
+    frame: Mutex<Option<Frame>>,
+    ready: Condvar,
+}
+
+impl OutcomeSlot {
+    /// Publish the outcome. Filling twice is a bug; debug builds assert.
+    fn fill(&self, frame: Frame) {
+        let mut slot = self.frame.lock().expect("outcome slot poisoned");
+        debug_assert!(slot.is_none(), "outcome filled twice");
+        *slot = Some(frame);
+        self.ready.notify_all();
+    }
+
+    /// Take the outcome, waiting at most `timeout` for it to be filled.
+    /// `None` on timeout — the caller loops so it can re-check abort
+    /// flags between ticks.
+    fn wait(&self, timeout: Duration) -> Option<Frame> {
+        let mut slot = self.frame.lock().expect("outcome slot poisoned");
+        if slot.is_none() {
+            let (guard, _timed_out) =
+                self.ready.wait_timeout(slot, timeout).expect("outcome slot poisoned");
+            slot = guard;
+        }
+        slot.take()
+    }
+}
+
+/// Per-connection state shared between its reader, its writer, the
+/// dispatchers, and the drain monitor.
+#[derive(Default)]
+struct ConnShared {
+    /// Staged-but-unresolved requests of this connection — what the
+    /// pipelining cap bounds. Incremented at staging, decremented when
+    /// the outcome is filled.
+    unresolved: AtomicUsize,
+    /// Set by the drain monitor: abandon in-order waits and close.
+    force_close: AtomicBool,
+    /// Set by the writer on exit: this connection has fully finished.
+    done: AtomicBool,
+}
+
+/// One admitted request in the staging queue. Holding an [`Admission`]
+/// permit from `try_admit` until the dispatcher releases it, so queue
+/// occupancy can never exceed the admission capacity.
+struct Staged {
+    id: u64,
+    packet: [u8; PACKET_ELEMS],
+    slot: Arc<OutcomeSlot>,
+    conn: Arc<ConnShared>,
+}
+
+/// Drain-monitor registry entry: enough of a connection to force-close
+/// it (the stream clone shares the underlying socket, so `shutdown`
+/// unblocks both halves).
+struct ConnReg {
+    stream: TcpStream,
+    shared: Arc<ConnShared>,
+}
+
+/// Everything the accept loop hands to each new connection.
+struct AcceptCtx {
+    staging: SyncSender<Staged>,
+    metrics: Arc<Metrics>,
+    admission: Arc<Admission>,
+    closing: Arc<AtomicBool>,
+    registry: Arc<Mutex<Vec<ConnReg>>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    max_pipeline: usize,
+}
+
+/// Everything a connection reader needs besides its socket.
+struct ReaderCtx {
+    staging: SyncSender<Staged>,
+    slots: Sender<Arc<OutcomeSlot>>,
+    shared: Arc<ConnShared>,
+    metrics: Arc<Metrics>,
+    admission: Arc<Admission>,
+    closing: Arc<AtomicBool>,
+    max_pipeline: usize,
+}
 
 /// A running TCP front door over a [`SortService`].
 ///
 /// Dropping the server shuts it down ([`NetServer::shutdown`] is
-/// idempotent): drain begins, the listener closes, connection threads
-/// finish their in-flight work, sockets close, and every thread joins.
+/// idempotent): drain begins, the listener closes, dispatchers flush the
+/// staging queue, writers flush their outcome FIFOs, sockets close, and
+/// every thread joins.
 pub struct NetServer {
     local_addr: SocketAddr,
     svc: SortService,
     admission: Arc<Admission>,
     closing: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
+    monitor: Option<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    dispatchers: Vec<JoinHandle<()>>,
 }
 
 impl NetServer {
     /// Bind `addr` (e.g. `127.0.0.1:7411`; port `0` picks an ephemeral
     /// port — tests read it back via [`NetServer::local_addr`]) and start
     /// accepting connections over `svc`, admitting at most
-    /// `admission_capacity` in-flight requests.
+    /// `admission_capacity` in-flight requests. Every other knob takes
+    /// its [`NetConfig`] default.
     pub fn spawn(
         svc: SortService,
         addr: impl ToSocketAddrs,
         admission_capacity: usize,
     ) -> anyhow::Result<Self> {
+        Self::spawn_with(svc, addr, NetConfig { admission_capacity, ..NetConfig::default() })
+    }
+
+    /// Bind `addr` and start serving `svc` with explicit front-door
+    /// tuning ([`NetConfig`]): admission capacity, per-connection
+    /// pipelining cap, drain deadline, dispatcher pool size, and the
+    /// batch-formation flush budget.
+    pub fn spawn_with(
+        svc: SortService,
+        addr: impl ToSocketAddrs,
+        cfg: NetConfig,
+    ) -> anyhow::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let admission = Arc::new(Admission::new(admission_capacity));
+        let admission = Arc::new(Admission::new(cfg.admission_capacity));
         let closing = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-        let accept = {
-            let svc = svc.clone();
+        let registry: Arc<Mutex<Vec<ConnReg>>> = Arc::new(Mutex::new(Vec::new()));
+        // every staged entry holds one admission permit, so a bound equal
+        // to the (clamped) capacity means try_send can never meet a full
+        // queue — the bound is a safety net, not a second gate
+        let (staging_tx, staging_rx) = sync_channel::<Staged>(admission.capacity());
+        let staging_rx = Arc::new(Mutex::new(staging_rx));
+        let dispatchers = (0..cfg.dispatchers.max(1))
+            .map(|_| {
+                let rx = staging_rx.clone();
+                let client = svc.client();
+                let metrics = svc.metrics.clone();
+                let admission = admission.clone();
+                let max_wait = cfg.max_wait;
+                std::thread::spawn(move || {
+                    dispatcher_loop(rx, client, metrics, admission, max_wait);
+                })
+            })
+            .collect();
+        let monitor = cfg.drain_timeout.map(|timeout| {
+            let registry = registry.clone();
             let admission = admission.clone();
             let closing = closing.clone();
-            let conns = conns.clone();
+            let metrics = svc.metrics.clone();
             std::thread::spawn(move || {
-                accept_loop(listener, svc, admission, closing, conns);
+                monitor_loop(registry, admission, closing, metrics, timeout);
             })
+        });
+        let accept = {
+            let ctx = AcceptCtx {
+                staging: staging_tx,
+                metrics: svc.metrics.clone(),
+                admission: admission.clone(),
+                closing: closing.clone(),
+                registry,
+                conns: conns.clone(),
+                max_pipeline: cfg.max_pipeline,
+            };
+            std::thread::spawn(move || accept_loop(listener, ctx))
         };
-        Ok(Self { local_addr, svc, admission, closing, accept: Some(accept), conns })
+        Ok(Self {
+            local_addr,
+            svc,
+            admission,
+            closing,
+            accept: Some(accept),
+            monitor,
+            conns,
+            dispatchers,
+        })
     }
 
     /// The bound address (resolves ephemeral ports).
@@ -115,12 +327,19 @@ impl NetServer {
     }
 
     /// Drain, close, and join everything. Idempotent; also runs on drop.
-    /// Returns once the accept thread and every connection thread have
-    /// joined — afterwards no socket of this server is open.
+    /// Returns once the accept thread, the drain monitor, every
+    /// connection thread pair, and every dispatcher have joined —
+    /// afterwards no socket of this server is open.
     pub fn shutdown(&mut self) {
         self.admission.begin_drain();
         self.closing.store(true, Ordering::Release);
         if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // the monitor exits once every registered connection is done (or
+        // force-closes the stragglers at the deadline) — join it before
+        // the connection threads so a stuck writer can still be unstuck
+        if let Some(h) = self.monitor.take() {
             let _ = h.join();
         }
         // the accept thread is gone, so nobody pushes new handles; drain
@@ -138,6 +357,11 @@ impl NetServer {
                 let _ = h.join();
             }
         }
+        // every staging sender (accept loop + readers) is dropped by now,
+        // so the dispatchers drain the queue and exit
+        for h in self.dispatchers.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -147,25 +371,44 @@ impl Drop for NetServer {
     }
 }
 
-/// Accept until drain begins, spawning one handler thread per connection.
-fn accept_loop(
-    listener: TcpListener,
-    svc: SortService,
-    admission: Arc<Admission>,
-    closing: Arc<AtomicBool>,
-    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
-) {
-    while !admission.is_draining() && !closing.load(Ordering::Acquire) {
+/// Accept until drain begins, spawning one reader + writer thread pair
+/// per connection and registering it with the drain monitor.
+fn accept_loop(listener: TcpListener, ctx: AcceptCtx) {
+    while !ctx.admission.is_draining() && !ctx.closing.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((stream, _peer)) => {
-                let client = svc.client();
-                let metrics = svc.metrics.clone();
-                let admission = admission.clone();
-                let closing = closing.clone();
-                let handle = std::thread::spawn(move || {
-                    connection_loop(stream, client, metrics, admission, closing);
-                });
-                conns.lock().expect("conns mutex poisoned").push(handle);
+                let (write_stream, monitor_stream) =
+                    match (stream.try_clone(), stream.try_clone()) {
+                        (Ok(w), Ok(m)) => (w, m),
+                        // clone failure (EMFILE…): drop the connection
+                        // rather than serve a half it can't answer on
+                        _ => continue,
+                    };
+                let shared = Arc::new(ConnShared::default());
+                {
+                    let mut reg = ctx.registry.lock().expect("registry poisoned");
+                    // finished connections no longer need force-closing;
+                    // prune them so long-lived servers don't accumulate
+                    reg.retain(|c| !c.shared.done.load(Ordering::Acquire));
+                    reg.push(ConnReg { stream: monitor_stream, shared: shared.clone() });
+                }
+                let (slot_tx, slot_rx) = channel::<Arc<OutcomeSlot>>();
+                let reader = {
+                    let rctx = ReaderCtx {
+                        staging: ctx.staging.clone(),
+                        slots: slot_tx,
+                        shared: shared.clone(),
+                        metrics: ctx.metrics.clone(),
+                        admission: ctx.admission.clone(),
+                        closing: ctx.closing.clone(),
+                        max_pipeline: ctx.max_pipeline,
+                    };
+                    std::thread::spawn(move || reader_loop(stream, rctx))
+                };
+                let writer = std::thread::spawn(move || writer_loop(write_stream, slot_rx, shared));
+                let mut conns = ctx.conns.lock().expect("conns mutex poisoned");
+                conns.push(reader);
+                conns.push(writer);
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
                 std::thread::sleep(ACCEPT_TICK);
@@ -181,41 +424,25 @@ fn accept_loop(
     // connection attempts are refused by the OS
 }
 
-/// How one parsed request resolved at the admission gate, in arrival
-/// order. The index ties an admitted request back to its slot in the
-/// dispatched batch.
-enum Parsed {
-    /// Admitted: the `usize` is its index into the batch being built.
-    Admitted { id: u64, index: usize },
-    /// Shed at the gate with a typed reason.
-    Shed { id: u64, code: ErrorCode },
-}
-
-/// Serve one connection: read frames, gate + batch + dispatch requests,
-/// write exactly one outcome frame per request in arrival order.
-fn connection_loop(
-    mut stream: TcpStream,
-    mut client: SortClient,
-    metrics: Arc<Metrics>,
-    admission: Arc<Admission>,
-    closing: Arc<AtomicBool>,
-) {
+/// Read one connection: decode frames and resolve every request at the
+/// gate — shed requests are answered on the spot, admitted ones enter
+/// the shared staging queue. One outcome slot is enqueued to the writer
+/// per request, in arrival order, before the gate decision, so the
+/// exactly-one-outcome-in-order invariant holds on every path.
+fn reader_loop(mut stream: TcpStream, ctx: ReaderCtx) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(READ_TICK));
     let mut buf: Vec<u8> = Vec::new();
     let mut chunk = [0u8; 4096];
-    let mut batch: Vec<[u8; PACKET_ELEMS]> = Vec::new();
-    let mut parsed: Vec<Parsed> = Vec::new();
-    let mut responses: Vec<SortResponse> = Vec::new();
-    let mut wire: Vec<u8> = Vec::new();
     'serve: loop {
+        if ctx.shared.force_close.load(Ordering::Acquire) {
+            break;
+        }
         match stream.read(&mut chunk) {
-            Ok(0) => break, // peer closed: in-flight work is already answered
+            Ok(0) => break, // peer closed: the writer flushes what remains
             Ok(n) => buf.extend_from_slice(&chunk[..n]),
-            Err(e)
-                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
-            {
-                if closing.load(Ordering::Acquire) {
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if ctx.closing.load(Ordering::Acquire) {
                     break;
                 }
                 continue;
@@ -223,9 +450,6 @@ fn connection_loop(
             Err(e) if e.kind() == ErrorKind::Interrupted => continue,
             Err(_) => break,
         }
-        // parse every complete frame, gating requests as they arrive
-        batch.clear();
-        parsed.clear();
         let mut consumed = 0usize;
         let mut malformed = false;
         loop {
@@ -233,26 +457,15 @@ fn connection_loop(
                 Ok(Some((frame, used))) => {
                     consumed += used;
                     match frame {
-                        Frame::Request { id, packet } => match admission.try_admit() {
-                            Ok(()) => {
-                                metrics.record_accepted();
-                                parsed.push(Parsed::Admitted { id, index: batch.len() });
-                                batch.push(packet);
+                        Frame::Request { id, packet } => {
+                            let slot = Arc::new(OutcomeSlot::default());
+                            if ctx.slots.send(slot.clone()).is_err() {
+                                // writer died (socket gone): stop reading
+                                break 'serve;
                             }
-                            Err(why) => {
-                                metrics.record_shed(&why);
-                                let code = match why {
-                                    crate::coordinator::AdmitError::Overloaded { .. } => {
-                                        ErrorCode::Overloaded
-                                    }
-                                    crate::coordinator::AdmitError::Draining => {
-                                        ErrorCode::Draining
-                                    }
-                                };
-                                parsed.push(Parsed::Shed { id, code });
-                            }
-                        },
-                        Frame::Drain { .. } => admission.begin_drain(),
+                            stage_request(&ctx, id, packet, slot);
+                        }
+                        Frame::Drain { .. } => ctx.admission.begin_drain(),
                         // clients must not send server-side frames; treat
                         // them as protocol corruption and close below
                         Frame::Reply { .. } | Frame::Error { .. } => {
@@ -269,58 +482,218 @@ fn connection_loop(
             }
         }
         buf.drain(..consumed);
-        // dispatch the admitted requests as one batch and resolve every
-        // parsed request to exactly one outcome frame, in arrival order
-        let dispatch_ok = if batch.is_empty() {
-            true
-        } else {
-            client.submit_batch(&batch, &mut responses).is_ok()
-                && responses.len() == batch.len()
-        };
-        let draining_now = admission.is_draining();
-        wire.clear();
-        for p in parsed.drain(..) {
-            match p {
-                Parsed::Admitted { id, index } => {
-                    if dispatch_ok {
-                        let r = &responses[index];
-                        encode(
-                            &Frame::Reply {
-                                id,
-                                strategy: r.strategy,
-                                acc_indices: r.acc_indices.clone(),
-                                app_indices: r.app_indices.clone(),
-                            },
-                            &mut wire,
-                        );
-                    } else {
-                        // a backend failure loses the per-request reply
-                        // mapping, so every request of the batch resolves
-                        // to a typed internal error — never zero or two
-                        // outcomes for one request
-                        encode(&Frame::Error { id, code: ErrorCode::Internal }, &mut wire);
-                    }
-                    if draining_now {
-                        metrics.record_drained();
-                    }
-                    admission.release();
-                }
-                Parsed::Shed { id, code } => {
-                    encode(&Frame::Error { id, code }, &mut wire);
-                }
-            }
-        }
-        responses.clear();
         if malformed {
-            // answer what we can, flag the corruption, and hang up
-            encode(&Frame::Error { id: 0, code: ErrorCode::Malformed }, &mut wire);
-        }
-        if !wire.is_empty() && stream.write_all(&wire).is_err() {
-            break 'serve;
-        }
-        if malformed {
+            // answer what we can (the writer flushes earlier outcomes
+            // first), flag the corruption, and stop reading — the writer
+            // hangs up once its FIFO drains
+            let slot = Arc::new(OutcomeSlot::default());
+            slot.fill(Frame::Error { id: 0, code: ErrorCode::Malformed });
+            let _ = ctx.slots.send(slot);
             break;
         }
     }
+    // dropping `ctx.slots` lets the writer finish and close the socket;
+    // dropping `ctx.staging` (with the other readers and the accept
+    // loop) lets the dispatcher pool drain and exit
+}
+
+/// Gate one decoded request: pipelining cap, then admission, then the
+/// staging queue. Shed requests get their outcome filled immediately.
+fn stage_request(ctx: &ReaderCtx, id: u64, packet: [u8; PACKET_ELEMS], slot: Arc<OutcomeSlot>) {
+    // the cap is checked before the shared gate so a greedy connection is
+    // refused before it can take a permit from everyone else's pool
+    if ctx.max_pipeline > 0 && ctx.shared.unresolved.load(Ordering::Acquire) >= ctx.max_pipeline {
+        ctx.metrics.record_shed(&AdmitError::Overloaded { capacity: ctx.max_pipeline });
+        slot.fill(Frame::Error { id, code: ErrorCode::Overloaded });
+        return;
+    }
+    match ctx.admission.try_admit() {
+        Ok(()) => {
+            ctx.metrics.record_accepted();
+            ctx.shared.unresolved.fetch_add(1, Ordering::AcqRel);
+            ctx.metrics.record_staged();
+            let staged = Staged { id, packet, slot: slot.clone(), conn: ctx.shared.clone() };
+            if ctx.staging.try_send(staged).is_err() {
+                // unreachable while every staged entry holds a permit and
+                // the queue bound equals the permit capacity; resolve the
+                // request anyway — never zero outcomes
+                ctx.metrics.record_unstaged(1);
+                ctx.shared.unresolved.fetch_sub(1, Ordering::AcqRel);
+                ctx.admission.release();
+                slot.fill(Frame::Error { id, code: ErrorCode::Internal });
+            }
+        }
+        Err(why) => {
+            ctx.metrics.record_shed(&why);
+            let code = match why {
+                AdmitError::Overloaded { .. } => ErrorCode::Overloaded,
+                AdmitError::Draining => ErrorCode::Draining,
+            };
+            slot.fill(Frame::Error { id, code });
+        }
+    }
+}
+
+/// Write one connection: pop outcome slots in arrival order, wait for
+/// each to fill, and write the frames — grouping outcomes that are
+/// already available into one `write_all`. Exits when the reader is gone
+/// and every outcome is flushed, or immediately on force-close.
+fn writer_loop(
+    mut stream: TcpStream,
+    slots: Receiver<Arc<OutcomeSlot>>,
+    shared: Arc<ConnShared>,
+) {
+    let mut pending: VecDeque<Arc<OutcomeSlot>> = VecDeque::new();
+    let mut wire: Vec<u8> = Vec::new();
+    'write: loop {
+        if pending.is_empty() {
+            match slots.recv_timeout(READ_TICK) {
+                Ok(slot) => pending.push_back(slot),
+                Err(RecvTimeoutError::Timeout) => {
+                    if shared.force_close.load(Ordering::Acquire) {
+                        break;
+                    }
+                    continue;
+                }
+                // reader gone and every queued outcome already written
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // batch whatever else is already enqueued so one write carries
+        // every outcome a dispatcher filled together
+        while let Ok(slot) = slots.try_recv() {
+            pending.push_back(slot);
+        }
+        wire.clear();
+        while let Some(slot) = pending.pop_front() {
+            // in-arrival-order: wait for *this* outcome before any later
+            // one, no matter which dispatcher batch resolves first
+            let frame = loop {
+                if shared.force_close.load(Ordering::Acquire) {
+                    break 'write;
+                }
+                if let Some(f) = slot.wait(READ_TICK) {
+                    break f;
+                }
+            };
+            encode(&frame, &mut wire);
+        }
+        if !wire.is_empty() && stream.write_all(&wire).is_err() {
+            break;
+        }
+    }
+    shared.done.store(true, Ordering::Release);
     let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Drain the staging queue: form batches across connections in arrival
+/// order (the receiver lock serializes formation; dispatch overlaps),
+/// flush on `max_wait` or a full [`BT_BATCH`], submit through the pooled
+/// client, and fill every entry's outcome slot exactly once.
+fn dispatcher_loop(
+    rx: Arc<Mutex<Receiver<Staged>>>,
+    mut client: SortClient,
+    metrics: Arc<Metrics>,
+    admission: Arc<Admission>,
+    max_wait: Duration,
+) {
+    let mut batch: Vec<Staged> = Vec::with_capacity(BT_BATCH);
+    let mut packets: Vec<[u8; PACKET_ELEMS]> = Vec::with_capacity(BT_BATCH);
+    let mut responses: Vec<SortResponse> = Vec::new();
+    loop {
+        batch.clear();
+        {
+            let rx = rx.lock().expect("staging receiver poisoned");
+            match rx.recv() {
+                Ok(first) => {
+                    batch.push(first);
+                    let deadline = Instant::now() + max_wait;
+                    while batch.len() < BT_BATCH {
+                        let left = deadline.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            break;
+                        }
+                        match rx.recv_timeout(left) {
+                            Ok(entry) => batch.push(entry),
+                            // timeout or disconnect: flush what we have
+                            Err(_) => break,
+                        }
+                    }
+                }
+                // every reader and the accept loop dropped their senders
+                // and the queue is empty: shutdown
+                Err(_) => return,
+            }
+        }
+        metrics.record_unstaged(batch.len() as u64);
+        metrics.record_net_batch(batch.len() as u64);
+        packets.clear();
+        packets.extend(batch.iter().map(|s| s.packet));
+        let dispatch_ok = client.submit_batch(&packets, &mut responses).is_ok()
+            && responses.len() == batch.len();
+        let draining_now = admission.is_draining();
+        for (i, staged) in batch.drain(..).enumerate() {
+            let frame = if dispatch_ok {
+                let r = &responses[i];
+                Frame::Reply {
+                    id: staged.id,
+                    strategy: r.strategy,
+                    acc_indices: r.acc_indices.clone(),
+                    app_indices: r.app_indices.clone(),
+                }
+            } else {
+                // a backend failure loses the per-request reply mapping,
+                // so every request of the batch resolves to a typed
+                // internal error — never zero or two outcomes
+                Frame::Error { id: staged.id, code: ErrorCode::Internal }
+            };
+            staged.slot.fill(frame);
+            if draining_now {
+                metrics.record_drained();
+            }
+            staged.conn.unresolved.fetch_sub(1, Ordering::AcqRel);
+            admission.release();
+        }
+        responses.clear();
+    }
+}
+
+/// Enforce the drain deadline: once drain begins, wait for every
+/// registered connection to finish on its own; any still unfinished when
+/// the deadline fires is force-closed (socket shut down from the server
+/// side, waits abandoned) and counted in `drain_forced`.
+fn monitor_loop(
+    registry: Arc<Mutex<Vec<ConnReg>>>,
+    admission: Arc<Admission>,
+    closing: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+    timeout: Duration,
+) {
+    while !admission.is_draining() {
+        if closing.load(Ordering::Acquire) {
+            return;
+        }
+        std::thread::sleep(MONITOR_TICK);
+    }
+    let deadline = Instant::now() + timeout;
+    loop {
+        {
+            let reg = registry.lock().expect("registry poisoned");
+            if reg.iter().all(|c| c.shared.done.load(Ordering::Acquire)) {
+                return; // every connection finished on its own
+            }
+        }
+        if Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(MONITOR_TICK);
+    }
+    let reg = registry.lock().expect("registry poisoned");
+    for conn in reg.iter() {
+        if !conn.shared.done.load(Ordering::Acquire) {
+            conn.shared.force_close.store(true, Ordering::Release);
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+            metrics.record_drain_forced();
+        }
+    }
 }

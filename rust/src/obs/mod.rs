@@ -16,7 +16,11 @@
 //! accounting so truncation is never silent). Request ids are assigned
 //! monotonically by the [`Tracer`]; the sampling gate is a single modulo
 //! ([`TraceConfig::sample_every`]), so tracing entirely off is exactly the
-//! pre-tracing hot path.
+//! pre-tracing hot path. Because the stages are stamped inside the
+//! coordinator, they describe whatever feeds it: behind the TCP front
+//! door the `batch_form` span covers a batch the dispatcher pool formed
+//! *across* connections in the staging queue, not one connection's
+//! pipelined window.
 //!
 //! Export goes two ways: [`chrome`] serializes a drained [`TraceReport`]
 //! as Chrome trace-event JSON (`repro serve --trace FILE`, loadable in

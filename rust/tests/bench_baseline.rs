@@ -79,6 +79,10 @@ fn hotpath_baseline_gates_the_serving_core_scalars() {
     // PR 9: the front-door wire codec has a recorded throughput floor
     let codec = scalar(&doc, "net_codec_frames_per_s").expect("scalar missing");
     assert!(codec > 0.0, "codec throughput floor must be positive: {codec}");
+    // PR 10: the staging queue must actually aggregate across connections
+    // — a mean backend batch of 1.0 means the rework bought nothing
+    let staging = scalar(&doc, "net_staging_mean_batch").expect("scalar missing");
+    assert!(staging > 1.0, "cross-connection staging is not aggregating: {staging}");
     // and all four names must actually be gate-protected (direction
     // inferred from the name), which require_scalars + a self-compare prove
     require_scalars(
@@ -121,14 +125,34 @@ fn serve_baseline_parses_and_gates_throughput() {
     assert!(lg_reqs >= 100_000.0, "loadgen soak volume shrank below 100k: {lg_reqs}");
     let lg_tput = scalar(&doc, "loadgen_throughput_per_s").expect("scalar missing");
     assert!(lg_tput > 0.0, "loadgen throughput floor must be positive: {lg_tput}");
-    require_scalars(&doc, &["loadgen_throughput_per_s"]).expect("gated loadgen scalar present");
+    // PR 10: the cross-connection aggregation figure — many low-rate
+    // connections (32+, window <= 4), the regime where per-connection
+    // batching degenerates to batch size ~1 — must beat the committed
+    // per-connection-batching figure by >= 1.5x
+    let many_conns = scalar(&doc, "loadgen_many_conn_connections").expect("scalar missing");
+    assert!(many_conns >= 32.0, "many-conn profile needs 32+ connections: {many_conns}");
+    let many_window = scalar(&doc, "loadgen_many_conn_window").expect("scalar missing");
+    assert!(many_window <= 4.0, "many-conn profile needs a small window: {many_window}");
+    let many_tput = scalar(&doc, "loadgen_many_conn_throughput_per_s").expect("scalar missing");
+    let per_conn = scalar(&doc, "loadgen_many_conn_per_conn_baseline").expect("scalar missing");
+    assert!(per_conn > 0.0, "the per-connection-batching reference must be positive");
+    assert!(
+        many_tput >= 1.5 * per_conn,
+        "cross-connection batching must beat per-connection batching by 1.5x: \
+         {many_tput} vs {per_conn}"
+    );
+    require_scalars(&doc, &["loadgen_throughput_per_s", "loadgen_many_conn_throughput_per_s"])
+        .expect("gated loadgen scalars present");
     // the *_per_s scalars are gated: the self-comparison must make at
-    // least two gated comparisons (serve + loadgen throughput) and pass
+    // least three gated comparisons (serve + both loadgen throughputs)
+    // and pass
     let r = compare(&doc, &doc, DEFAULT_TOLERANCE);
     assert!(r.passed(), "{}", r.render());
-    assert!(r.compared >= 2);
-    let row = r.rows.iter().find(|row| row.name == "loadgen_throughput_per_s").expect("row");
-    assert_eq!(row.verdict, Verdict::Pass, "loadgen_throughput_per_s is not gated");
+    assert!(r.compared >= 3);
+    for name in ["loadgen_throughput_per_s", "loadgen_many_conn_throughput_per_s"] {
+        let row = r.rows.iter().find(|row| row.name == name).expect("row");
+        assert_eq!(row.verdict, Verdict::Pass, "{name} is not gated");
+    }
 }
 
 #[test]
